@@ -1,0 +1,119 @@
+"""Shared benchmark fixtures: dataset, embeddings, ground truth, metrics.
+
+Scale note (DESIGN.md §8): PDB is not available offline; benchmarks run
+on the synthetic protein universe at a CPU-feasible scale (default 20k
+chains, 128 queries) and validate the paper's claims as *trends*. All
+sizes are overridable via env vars REPRO_BENCH_{DB,QUERIES}.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import filtering, lmi
+from repro.core.embedding import EmbeddingConfig, embed_dataset
+from repro.core.qscore import qdistance_matrix_chunked
+from repro.data.proteins import ProteinGenConfig, generate_dataset
+
+DB_SIZE = int(os.environ.get("REPRO_BENCH_DB", 20_000))
+N_QUERIES = int(os.environ.get("REPRO_BENCH_QUERIES", 128))
+N_FAMILIES = max(50, DB_SIZE // 100)
+SEED = 7
+
+# the paper's three representative ranges (Sec. 5)
+RANGES = (0.1, 0.3, 0.5)
+STOPS = (0.01, 0.05, 0.10)
+
+
+@functools.lru_cache(maxsize=1)
+def dataset():
+    return generate_dataset(SEED, ProteinGenConfig(n_proteins=DB_SIZE, n_families=N_FAMILIES, max_length=384))
+
+
+@functools.lru_cache(maxsize=4)
+def embeddings(n_sections: int = 10):
+    ds = dataset()
+    cfg = EmbeddingConfig(n_sections=n_sections, cutoff=50.0)
+    return embed_dataset(jnp.asarray(ds.coords), jnp.asarray(ds.lengths), cfg)
+
+
+@functools.lru_cache(maxsize=1)
+def query_ids():
+    """Uniform w.r.t. chain length (paper: 512 pivots chosen that way)."""
+    ds = dataset()
+    order = np.argsort(ds.lengths, kind="stable")
+    pick = np.linspace(0, DB_SIZE - 1, N_QUERIES).astype(np.int64)
+    return np.sort(order[pick])
+
+
+@functools.lru_cache(maxsize=1)
+def ground_truth():
+    """(Q, M) Q-distance panel — the expensive brute-force scan."""
+    ds = dataset()
+    qids = query_ids()
+    t0 = time.time()
+    gt = qdistance_matrix_chunked(
+        jnp.asarray(ds.coords[qids]),
+        jnp.asarray(ds.lengths[qids]),
+        jnp.asarray(ds.coords),
+        jnp.asarray(ds.lengths),
+        n_points=48,
+        chunk=4096,
+    )
+    gt = np.asarray(gt)
+    print(f"# ground truth ({len(qids)}x{DB_SIZE} Q-distances) in {time.time()-t0:.1f}s")
+    return gt
+
+
+@functools.lru_cache(maxsize=4)
+def built_index(n_sections: int = 10, a0: int = 32, a1: int = 64, model_type: str = "kmeans"):
+    emb = embeddings(n_sections)
+    key = jax.random.PRNGKey(SEED)
+    t0 = time.time()
+    index = lmi.build(key, emb, arities=(a0, a1), model_type=model_type)
+    return index, time.time() - t0
+
+
+def candidate_sets(index, stop: float):
+    emb = embeddings()
+    qids = query_ids()
+    res = lmi.search(index, emb[qids], stop_condition=stop)
+    return res
+
+
+def recall_of_candidates(res, gt: np.ndarray, radius: float):
+    """Mean/median recall of the candidate set vs ground-truth range answer."""
+    qids = query_ids()
+    recalls = []
+    for i in range(len(qids)):
+        true = set(np.nonzero(gt[i] <= radius)[0].tolist())
+        if not true:
+            continue
+        cand = set(np.asarray(res.candidate_ids[i])[np.asarray(res.valid[i])].tolist())
+        recalls.append(len(true & cand) / len(true))
+    r = np.asarray(recalls)
+    return float(r.mean()), float(np.median(r)), len(r)
+
+
+def prf_after_filter(ids: np.ndarray, mask: np.ndarray, gt_row: np.ndarray, radius: float):
+    """(recall, precision, f1) of a filtered answer vs ground truth."""
+    true = set(np.nonzero(gt_row <= radius)[0].tolist())
+    got = set(ids[mask].tolist()) - {-1}
+    if not true:
+        return None
+    tp = len(true & got)
+    recall = tp / len(true)
+    precision = tp / max(len(got), 1)
+    f1 = 2 * precision * recall / max(precision + recall, 1e-9)
+    return recall, precision, f1
+
+
+def csv_row(name: str, us_per_call: float, **derived):
+    parts = [name, f"{us_per_call:.1f}"]
+    parts += [f"{k}={v}" for k, v in derived.items()]
+    print(",".join(parts))

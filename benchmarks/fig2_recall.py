@@ -1,0 +1,30 @@
+"""Paper Fig. 2: candidate-set recall vs stop condition (1/5/10 %) at
+ranges 0.1/0.3/0.5, before filtering; plus the 5x5-embedding degradation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def main():
+    gt = common.ground_truth()
+    print("# Fig 2 — LMI candidate-set recall (before filtering)")
+    print("embedding,stop_pct,range,mean_recall,median_recall,n_queries")
+    for n_sections in (10, 5):
+        index, _ = common.built_index(n_sections)
+        emb = common.embeddings(n_sections)
+        qids = common.query_ids()
+        from repro.core import lmi
+
+        for stop in common.STOPS:
+            res = lmi.search(index, emb[qids], stop_condition=stop)
+            for radius in common.RANGES:
+                mean_r, med_r, n = common.recall_of_candidates(res, gt, radius)
+                print(f"{n_sections}x{n_sections},{int(stop*100)},{radius},"
+                      f"{mean_r:.3f},{med_r:.3f},{n}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig. 4 + Fig. 5: Q-distance <-> vector-distance correlation, and
+the effect of filtering (Euclidean vs cosine) on recall/precision.
+
+Claims: clear correlation (Fig 4); Euclidean filters better than cosine
+on this data (Fig 5); filtering trades recall for precision.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import filtering
+
+
+def main():
+    gt = common.ground_truth()
+    index, _ = common.built_index()
+    emb = common.embeddings()
+    qids = common.query_ids()
+
+    # ---- Fig 4: correlation between Q-distance and Euclidean distance
+    d_euc = np.linalg.norm(np.asarray(emb)[qids][:, None, :] - np.asarray(emb)[None, :, :][0:1, ::17], axis=-1)
+    sub = np.arange(0, common.DB_SIZE, 17)
+    d_euc = np.stack([np.linalg.norm(np.asarray(emb)[sub] - np.asarray(emb)[q], axis=-1) for q in qids[:32]])
+    d_q = gt[:32][:, sub]
+    corr = np.corrcoef(d_euc.ravel(), d_q.ravel())[0, 1]
+    print(f"# Fig 4 — Pearson correlation(Q_distance, Euclidean) = {corr:.3f} (paper: 'clear correlation')")
+
+    # ---- Fig 5: recall/precision after filtering, per metric and range
+    print("# Fig 5 — filtering effects (stop=1%)")
+    print("metric,range,radius_scale,mean_recall,mean_precision,mean_f1,n")
+    # P90-calibrated scales (see EXPERIMENTS.md; paper footnote 3 uses 1.5 on PDB)
+    for metric, scale in (("euclidean", 0.7), ("cosine", 0.06)):
+        for radius in common.RANGES:
+            res = filtering.range_query(
+                index, emb[qids], radius=radius, stop_condition=0.01,
+                metric=metric, radius_scale=scale,
+            )
+            stats = []
+            for i in range(len(qids)):
+                out = common.prf_after_filter(
+                    np.asarray(res.ids[i]), np.asarray(res.mask[i]), gt[i], radius
+                )
+                if out:
+                    stats.append(out)
+            if stats:
+                r, p, f = np.asarray(stats).mean(axis=0)
+                print(f"{metric},{radius},{scale},{r:.3f},{p:.3f},{f:.3f},{len(stats)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Fig. 7: recall vs ground-truth answer size.
+
+Claim: errors are distributed evenly relative to answer size (recall is
+not an artifact of trivially small answers).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import lmi
+
+
+def main():
+    gt = common.ground_truth()
+    index, _ = common.built_index()
+    emb = common.embeddings()
+    qids = common.query_ids()
+    res = lmi.search(index, emb[qids], stop_condition=0.01)
+
+    print("# Fig 7 — recall vs answer size (range 0.3, stop 1%)")
+    print("answer_size_bucket,mean_recall,n_queries")
+    radius = 0.3
+    buckets = {"1-10": [], "11-100": [], "101-1000": [], ">1000": []}
+    for i in range(len(qids)):
+        true = set(np.nonzero(gt[i] <= radius)[0].tolist())
+        n = len(true)
+        if n == 0:
+            continue
+        cand = set(np.asarray(res.candidate_ids[i])[np.asarray(res.valid[i])].tolist())
+        r = len(true & cand) / n
+        key = "1-10" if n <= 10 else "11-100" if n <= 100 else "101-1000" if n <= 1000 else ">1000"
+        buckets[key].append(r)
+    for key, vals in buckets.items():
+        if vals:
+            print(f"{key},{np.mean(vals):.3f},{len(vals)}")
+
+
+if __name__ == "__main__":
+    main()

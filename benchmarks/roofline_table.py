@@ -1,0 +1,42 @@
+"""§Roofline: render the dry-run JSON results as the full baseline table.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun --all)
+and prints per (arch x shape x mesh): the three roofline terms, the
+bottleneck, MODEL_FLOPS ratio, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_results(directory: str = "experiments/dryrun_final"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main():
+    rows = load_results()
+    if not rows:
+        print("# no dry-run results found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun_final")
+        return
+    print("# §Roofline — baseline terms from the compiled dry-run "
+          "(seconds; TPU v5e constants)")
+    print("arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+          "bottleneck,useful_flops_ratio,roofline_fraction")
+    for r in rows:
+        print(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{r['t_compute']*1e3:.2f},{r['t_memory']*1e3:.2f},"
+            f"{r['t_collective']*1e3:.2f},{r['bottleneck']},"
+            f"{r['useful_flops_ratio']:.3f},{r['roofline_fraction']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table2     # one section
+
+Ground truth (the Q-distance panel) is computed once and shared by all
+sections via benchmarks.common caches.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    fig2_recall,
+    fig3_buckets,
+    fig5_filtering,
+    fig6_lengths,
+    ablation_cutoff,
+    fig7_answer_size,
+    model_comparison,
+    roofline_table,
+    table1_build,
+    table2_range,
+    table3_knn,
+)
+
+SECTIONS = {
+    "table1": table1_build.main,
+    "fig2": fig2_recall.main,
+    "fig3": fig3_buckets.main,
+    "fig5": fig5_filtering.main,
+    "table2": table2_range.main,
+    "table3": table3_knn.main,
+    "fig6": fig6_lengths.main,
+    "fig7": fig7_answer_size.main,
+    "model_comparison": model_comparison.main,
+    "ablation_cutoff": ablation_cutoff.main,
+    "roofline": roofline_table.main,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SECTIONS)
+    for name in wanted:
+        fn = SECTIONS.get(name)
+        if fn is None:
+            print(f"unknown section {name!r}; have {list(SECTIONS)}")
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        fn()
+        print(f"# ({name} took {time.time()-t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

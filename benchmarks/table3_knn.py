@@ -1,0 +1,75 @@
+"""Paper Table 3: 30NN queries (max radius 0.5) — accuracy, per-query
+time, index size: LMI+filtering vs brute-force linear scan.
+
+The paper's brute-force baseline evaluates full Q-scores (183 s median);
+ours evaluates the same Q-distance oracle the ground truth uses. The
+claim to reproduce: the learned pipeline is orders of magnitude faster
+at reduced accuracy, with no long-query tail.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import filtering
+from repro.core.qscore import qdistance_matrix_chunked
+
+
+def main():
+    gt = common.ground_truth()
+    index, _ = common.built_index()
+    emb = common.embeddings()
+    qids = common.query_ids()
+    ds = common.dataset()
+    k = 30
+
+    # ---- ground-truth 30NN answer (within radius 0.5)
+    true_sets = []
+    for i in range(len(qids)):
+        order = np.argsort(gt[i], kind="stable")
+        best = [j for j in order[:k] if gt[i][j] <= 0.5]
+        true_sets.append(set(best))
+
+    # ---- LMI + filtering
+    q = emb[qids]
+    ids, dists = filtering.knn_query(index, q, k=k, stop_condition=0.01,
+                                     metric="euclidean", max_radius=0.5, radius_scale=0.7)
+    jax.block_until_ready(dists)
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        ids, dists = filtering.knn_query(index, q, k=k, stop_condition=0.01,
+                                         metric="euclidean", max_radius=0.5, radius_scale=0.7)
+        jax.block_until_ready(dists)
+    t_lmi = (time.perf_counter() - t0) / reps / len(qids)
+    accs = []
+    for i, true in enumerate(true_sets):
+        if not true:
+            continue
+        got = set(np.asarray(ids[i]).tolist()) - {-1}
+        accs.append(len(true & got) / len(true))
+    accs = np.asarray(accs)
+
+    # ---- brute force with the expensive Q-distance oracle (per query)
+    nq_bf = min(8, len(qids))
+    t0 = time.perf_counter()
+    _ = qdistance_matrix_chunked(
+        jnp.asarray(ds.coords[qids[:nq_bf]]), jnp.asarray(ds.lengths[qids[:nq_bf]]),
+        jnp.asarray(ds.coords), jnp.asarray(ds.lengths), n_points=48, chunk=4096,
+    )
+    t_bf = (time.perf_counter() - t0) / nq_bf
+
+    print("# Table 3 — 30NN (radius 0.5): LMI+filter vs brute-force Q-distance scan")
+    print("method,accuracy_mean,accuracy_median,time_per_query_s,index_MB")
+    print(f"lmi+filter,{accs.mean():.3f},{np.median(accs):.3f},{t_lmi:.4f},"
+          f"{index.memory_bytes() / 2**20:.1f}")
+    print(f"brute_force_qdist,1.000,1.000,{t_bf:.4f},0")
+    print(f"# speedup: {t_bf / t_lmi:.0f}x (paper: 183 s vs 0.094 s ~ 1900x on 518k chains)")
+
+
+if __name__ == "__main__":
+    main()

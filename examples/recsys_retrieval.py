@@ -1,0 +1,73 @@
+"""The paper's technique applied to the recsys `retrieval_cand` shape:
+LMI-accelerated candidate retrieval over MIND item embeddings vs. the
+brute-force batched-dot scan (DESIGN.md §4 — the arch family where the
+learned index IS first-class).
+
+  PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import filtering, lmi
+from repro.data.recsys_data import make_ctr_batch
+from repro.models import recsys as R
+
+
+def main():
+    cfg = R.MINDConfig(item_vocab=100_000, embed_dim=64, hist_len=32, n_interests=4)
+    params = R.mind_init(jax.random.PRNGKey(0), cfg)
+    # realistic item space: embeddings cluster by category (a trained
+    # embedding table is strongly clustered; random vectors are not
+    # indexable by ANY clustering index). L2-normalised so the L2 index
+    # orders candidates like the dot-product scorer.
+    rng_items = np.random.default_rng(42)
+    centers = rng_items.normal(size=(500, cfg.embed_dim)).astype(np.float32)
+    assign = rng_items.integers(0, 500, cfg.item_vocab)
+    items = centers[assign] + 0.15 * rng_items.normal(size=(cfg.item_vocab, cfg.embed_dim)).astype(np.float32)
+    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    params = dict(params)
+    padded = params["items"].shape[0]
+    params["items"] = jnp.zeros((padded, cfg.embed_dim), jnp.float32).at[: cfg.item_vocab].set(items)
+
+    b = make_ctr_batch(0, 8, (10,), hist_len=cfg.hist_len, item_vocab=cfg.item_vocab)
+    history = jnp.asarray(b["history"])
+
+    # user -> interest capsules (the query vectors)
+    caps = R.mind_user_capsules(cfg, params, history)  # (8, K, D)
+    print(f"users: {caps.shape[0]}, interests/user: {caps.shape[1]}, items: {cfg.item_vocab}")
+
+    # ---- brute force: batched dot over every candidate
+    t0 = time.perf_counter()
+    cand_ids, scores = R.mind_retrieve(cfg, params, history[:1], jnp.arange(cfg.item_vocab), k=100)
+    jax.block_until_ready(scores)
+    t_bf = time.perf_counter() - t0
+    truth = set(np.asarray(cand_ids).tolist())
+
+    # ---- LMI over the item embeddings: search with the user's capsules,
+    # exact-score only the candidate set
+    index = lmi.build(jax.random.PRNGKey(1), jnp.asarray(items), arities=(32, 32))
+    q = np.asarray(caps[0], np.float32)  # the user's K interest vectors
+    q = q / np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-9)
+    _ = lmi.search(index, jnp.asarray(q), stop_condition=0.02)  # jit warm-up
+    t0 = time.perf_counter()
+    # each interest queries the index; union of candidates is scored exactly
+    res = lmi.search(index, jnp.asarray(q), stop_condition=0.02)
+    cand = np.unique(np.asarray(res.candidate_ids)[np.asarray(res.valid)])
+    ce = jnp.asarray(items[cand])
+    sims = jnp.max(jnp.einsum("kd,nd->kn", jnp.asarray(q), ce), axis=0)
+    top = cand[np.asarray(jnp.argsort(-sims))[:100]]
+    jax.block_until_ready(sims)
+    t_lmi = time.perf_counter() - t0
+
+    overlap = len(truth & set(top.tolist())) / 100
+    print(f"brute force: {t_bf*1e3:.1f} ms   LMI ({len(cand)} candidates scored): {t_lmi*1e3:.1f} ms")
+    print(f"recall@100 of LMI retrieval vs exact: {overlap:.2f}")
+    print("note: dot-product retrieval via an L2 index is approximate by design;")
+    print("raise stop_condition for higher recall (paper's recall/candidates trade-off).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Train a ~100M-parameter LM for a few hundred steps with the full
+substrate: pipeline, AdamW + schedule, checkpointing, resume.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(On a TPU slice the same code trains the full assigned configs via
+`python -m repro.launch.train --arch starcoder2-15b --full`.)
+"""
+import argparse
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DataPipeline, lm_synthetic_batch
+from repro.models import transformer as T
+from repro.optim import adamw, chain_clip, linear_warmup_cosine_decay
+from repro.train import TrainLoopConfig, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", type=str, default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from an existing checkpoint dir (default: fresh run)")
+    ap.add_argument("--big", action="store_true",
+                    help="~100M-param config (slow on CPU; the default ~30M "
+                         "shows convergence in a couple of minutes)")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    if not args.resume:
+        import shutil
+
+        shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    if args.big:
+        # ~100M params (what a TPU slice would train; ~7 s/step on CPU)
+        cfg = T.TransformerConfig(
+            name="lm-100m", n_layers=10, d_model=768, n_heads=12, n_kv_heads=4,
+            d_ff=2048, vocab_size=32768, tie_embeddings=True, dtype=jnp.float32,
+            remat=False, attn_impl="auto",
+        )
+    else:
+        # ~30M params: converges visibly within ~2 minutes on CPU
+        cfg = T.TransformerConfig(
+            name="lm-30m", n_layers=6, d_model=512, n_heads=8, n_kv_heads=4,
+            d_ff=1536, vocab_size=8192, tie_embeddings=True, dtype=jnp.float32,
+            remat=False, attn_impl="auto",
+        )
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {n/1e6:.1f}M params")
+
+    def loss_fn(p, batch):
+        return T.loss_fn(cfg, p, batch["tokens"], batch["targets"])
+
+    sched = linear_warmup_cosine_decay(2e-3, max(args.steps // 10, 2), args.steps)
+    opt = chain_clip(adamw(sched), 1.0)
+    pipe = DataPipeline(lm_synthetic_batch(cfg.vocab_size, args.batch, args.seq), seed=0)
+    loop = TrainLoopConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt, ckpt_interval=max(args.steps // 3, 1),
+        log_every=max(args.steps // 10, 1),
+    )
+    state, hist = run(loss_fn, opt, params, pipe, loop, donate=False)
+    pipe.close()
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} over {args.steps} steps")
+    assert min(h["loss"] for h in hist[1:]) < hist[0]["loss"], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

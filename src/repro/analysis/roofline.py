@@ -1,0 +1,202 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms, per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs            / (chips * peak_FLOP/s)
+  memory     = HLO_bytes_accessed   / (chips * HBM_bw)
+  collective = sum(collective operand bytes) / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are
+NOT in cost_analysis: we parse the post-SPMD optimized HLO
+(``compiled.as_text()``) and sum the operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Note on normalisation: cost_analysis on a partitioned module reports the
+*per-device* program cost; collective bytes are likewise per-device once
+summed over the module. We report per-device seconds (chips cancel), and
+MODEL_FLOPS ratios use global model math divided by chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|s32|u32|s64|u64|f8e4m3fn|f8e5m2|bf16|f16|f32|f64|c64|c128)\[([0-9,]*)\]")
+
+
+_OP_NAME_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\("
+)
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(segment):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind result bytes summed over the module.
+
+    An HLO op line reads ``%name = <result shape(s)> op-name(...)``; the
+    result shape sits between the '=' and the op name. `-start`/`-done`
+    async pairs are counted once (on the start)."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "=" not in line:
+            continue
+        m = _OP_NAME_RE.search(line)
+        if not m:
+            continue
+        eq = line.index("=")
+        if eq > m.start():  # op name inside the LHS? malformed; skip
+            continue
+        kind = m.group(1)
+        out[kind] = out.get(kind, 0) + _shape_bytes(line[eq + 1 : m.start()])
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per device
+    hlo_bytes: float  # per device
+    coll_bytes: float  # per device
+    coll_breakdown: dict
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+    model_flops: float = 0.0  # 6*N*D global
+    memory_per_device: Optional[dict] = None
+    raw_hbm_bytes: Optional[float] = None  # without fused-attention model
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips) — remat/redundancy waste."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful model FLOPs per second achievable / peak: the score.
+
+        step_time >= max(t_compute, t_memory, t_collective) (perfect
+        overlap assumption); achieved = model_flops / (chips * step_time)
+        / peak.
+        """
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t == 0:
+            return 0.0
+        return self.model_flops / self.chips / t / self.peak_flops
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            t_compute=self.t_compute,
+            t_memory=self.t_memory,
+            t_collective=self.t_collective,
+            bottleneck=self.bottleneck,
+            useful_flops_ratio=self.useful_flops_ratio,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+
+def from_compiled(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    compiled,
+    hw: dict,
+    model_flops: float = 0.0,
+    attn_io_lastdims: Optional[set] = None,
+) -> Roofline:
+    """FLOPs/bytes come from the loop-aware HLO cost model
+    (analysis/hlo_cost.py) — XLA's cost_analysis counts while bodies once,
+    under-counting scan-over-layers models by ~n_layers x.
+
+    ``attn_io_lastdims``: when set (LM cells), the byte count applies
+    fused-flash-kernel semantics to the `flash_attention_region` scope —
+    the TPU target runs attention as the Pallas kernel, whose score
+    tensors never touch HBM. The unfused count is kept in raw_hbm_bytes.
+    """
+    from repro.analysis import hlo_cost
+
+    text = compiled.as_text()
+    hc_raw = hlo_cost.analyze(text)
+    if attn_io_lastdims:
+        hc = hlo_cost.analyze(
+            text, attn_scope="flash_attention_region", attn_io_lastdims=attn_io_lastdims
+        )
+    else:
+        hc = hc_raw
+    flops = hc.flops
+    byts = hc.hbm_bytes
+    coll = hc.coll_bytes  # loop-multiplied (collectives inside layer scans)
+    mem = compiled.memory_analysis()
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=byts,
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown=coll,
+        peak_flops=hw["peak_bf16_flops"],
+        hbm_bw=hw["hbm_bw"],
+        ici_bw=hw["ici_bw"],
+        model_flops=model_flops,
+        memory_per_device=dict(
+            argument=mem.argument_size_in_bytes,
+            output=mem.output_size_in_bytes,
+            temp=mem.temp_size_in_bytes,
+            alias=mem.alias_size_in_bytes,
+        ),
+        raw_hbm_bytes=hc_raw.hbm_bytes,
+    )

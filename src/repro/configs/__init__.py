@@ -1,0 +1,49 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+from repro.configs import (
+    deepseek_moe_16b,
+    dlrm_mlperf,
+    gatedgcn,
+    lmi_protein,
+    mind,
+    mistral_large_123b,
+    phi35_moe,
+    stablelm_1_6b,
+    starcoder2_15b,
+    wide_deep,
+    xdeepfm,
+)
+from repro.configs.base import ArchSpec, ShapeSpec
+
+_MODULES = (
+    stablelm_1_6b,
+    mistral_large_123b,
+    starcoder2_15b,
+    phi35_moe,
+    deepseek_moe_16b,
+    gatedgcn,
+    wide_deep,
+    xdeepfm,
+    mind,
+    dlrm_mlperf,
+    lmi_protein,
+)
+
+REGISTRY: dict[str, ArchSpec] = {m.SPEC.name: m.SPEC for m in _MODULES}
+
+ASSIGNED_ARCHS = tuple(n for n in REGISTRY if n != "lmi-protein")
+
+
+def get(name: str) -> ArchSpec:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}") from None
+
+
+def list_archs() -> list[str]:
+    return sorted(REGISTRY)
+
+
+__all__ = ["ArchSpec", "ShapeSpec", "REGISTRY", "ASSIGNED_ARCHS", "get", "list_archs"]

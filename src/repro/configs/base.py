@@ -1,0 +1,76 @@
+"""Config registry plumbing: ArchSpec + the shared shape sets.
+
+Every assigned architecture contributes one module defining an ArchSpec:
+  * `make_full()`  — the exact published configuration (dry-run only;
+    params are never materialised, see launch/dryrun.py),
+  * `make_smoke()` — a reduced same-family configuration that runs a real
+    forward/train step on CPU (tests/test_configs_smoke.py),
+  * `shapes`      — the architecture's own input-shape set (the assigned
+    arch x shape grid).
+
+Families: "lm" (transformer LMs), "gnn", "recsys", "lmi" (the paper's
+own pipeline, registered as an arch so the launcher treats it uniformly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode | serve | retrieval | full_graph | minibatch | molecule | build | search
+    params: dict
+
+    def __repr__(self):
+        inner = ", ".join(f"{k}={v}" for k, v in self.params.items())
+        return f"{self.name}[{self.kind}]({inner})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str
+    make_full: Callable[[], Any]
+    make_smoke: Callable[[], Any]
+    shapes: tuple[ShapeSpec, ...]
+    source: str = ""
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.name} has no shape {name!r}; has {[s.name for s in self.shapes]}")
+
+
+# ------------------------------------------------- shared LM shape set
+LM_SHAPES = (
+    ShapeSpec("train_4k", "train", dict(seq_len=4096, global_batch=256)),
+    ShapeSpec("prefill_32k", "prefill", dict(seq_len=32768, global_batch=32)),
+    ShapeSpec("decode_32k", "decode", dict(seq_len=32768, global_batch=128)),
+    # decode with a 512k cache is O(L) per token; runnable even for
+    # full-attention archs (DESIGN.md §5 — skip-eligible but exercised).
+    ShapeSpec("long_500k", "decode", dict(seq_len=524288, global_batch=1)),
+)
+
+# ------------------------------------------------- GNN shape set (gatedgcn)
+GNN_SHAPES = (
+    ShapeSpec("full_graph_sm", "full_graph", dict(n_nodes=2708, n_edges=10556, d_feat=1433)),
+    ShapeSpec(
+        "minibatch_lg",
+        "minibatch",
+        dict(n_nodes=232_965, n_edges=114_615_892, batch_nodes=1024, fanout=(15, 10), d_feat=602),
+    ),
+    ShapeSpec("ogb_products", "full_graph", dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100)),
+    ShapeSpec("molecule", "molecule", dict(n_nodes=30, n_edges=64, batch=128)),
+)
+
+# ------------------------------------------------- recsys shape set
+RECSYS_SHAPES = (
+    ShapeSpec("train_batch", "train", dict(batch=65536)),
+    ShapeSpec("serve_p99", "serve", dict(batch=512)),
+    ShapeSpec("serve_bulk", "serve", dict(batch=262144)),
+    ShapeSpec("retrieval_cand", "retrieval", dict(batch=1, n_candidates=1_000_000)),
+)

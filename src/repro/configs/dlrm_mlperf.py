@@ -1,0 +1,45 @@
+"""dlrm-mlperf — MLPerf DLRM benchmark config (Criteo 1TB)
+[arXiv:1906.00091; paper].
+
+n_dense=13 n_sparse=26 embed_dim=128 bot=13-512-256-128
+top=1024-1024-512-256-1 interaction=dot. Real Criteo-1TB vocab sizes.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchSpec, RECSYS_SHAPES
+from repro.data.recsys_data import CRITEO_VOCAB_SIZES
+from repro.models.recsys import DLRMConfig
+
+
+def make_full() -> DLRMConfig:
+    return DLRMConfig(
+        name="dlrm-mlperf",
+        n_dense=13,
+        n_sparse=26,
+        embed_dim=128,
+        bot_mlp=(512, 256, 128),
+        top_mlp=(1024, 1024, 512, 256),
+        vocab_sizes=CRITEO_VOCAB_SIZES,
+    )
+
+
+def make_smoke() -> DLRMConfig:
+    return DLRMConfig(
+        name="dlrm-smoke",
+        n_dense=4,
+        n_sparse=8,
+        embed_dim=16,
+        bot_mlp=(32, 16),
+        top_mlp=(64, 32),
+        vocab_sizes=(100, 50, 200, 10, 400, 30, 60, 20),
+    )
+
+
+SPEC = ArchSpec(
+    name="dlrm-mlperf",
+    family="recsys",
+    make_full=make_full,
+    make_smoke=make_smoke,
+    shapes=RECSYS_SHAPES,
+    source="arXiv:1906.00091",
+)

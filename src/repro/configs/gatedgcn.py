@@ -1,0 +1,35 @@
+"""gatedgcn — [arXiv:2003.00982; paper]. 16L d_hidden=70 gated aggregator."""
+from __future__ import annotations
+
+from repro.configs.base import ArchSpec, GNN_SHAPES
+from repro.models.gnn import GatedGCNConfig
+
+
+def make_full() -> GatedGCNConfig:
+    return GatedGCNConfig(
+        name="gatedgcn",
+        n_layers=16,
+        d_hidden=70,
+        d_feat=1433,  # per-shape d_feat overrides in launch/dryrun.py
+        n_classes=47,
+    )
+
+
+def make_smoke() -> GatedGCNConfig:
+    return GatedGCNConfig(
+        name="gatedgcn-smoke",
+        n_layers=3,
+        d_hidden=16,
+        d_feat=32,
+        n_classes=5,
+    )
+
+
+SPEC = ArchSpec(
+    name="gatedgcn",
+    family="gnn",
+    make_full=make_full,
+    make_smoke=make_smoke,
+    shapes=GNN_SHAPES,
+    source="arXiv:2003.00982",
+)

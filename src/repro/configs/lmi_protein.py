@@ -1,0 +1,69 @@
+"""The paper's own architecture: LMI over protein embeddings.
+
+Best published configuration (Sec. 5): 10x10 embedding (45 dims),
+2-level K-Means LMI with arities 256-64, 1% stop condition, Euclidean
+filtering. Registered as an arch so the launcher/dry-run treats the
+paper's serving path (bucket-sharded kNN search) like any other model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.core.embedding import EmbeddingConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LMIProteinConfig:
+    name: str
+    embedding: EmbeddingConfig
+    arities: tuple[int, int]
+    model_type: str
+    stop_condition: float
+    filter_metric: str
+    radius_scale: float  # paper footnote 3: Q-range 0.5 ~ Euclidean 0.75
+    n_objects: int  # database size (PDB 2022 scale for the full config)
+    knn_k: int
+
+
+def make_full() -> LMIProteinConfig:
+    return LMIProteinConfig(
+        name="lmi-protein",
+        embedding=EmbeddingConfig(n_sections=10, cutoff=50.0),
+        arities=(256, 64),
+        model_type="kmeans",
+        stop_condition=0.01,
+        filter_metric="euclidean",
+        radius_scale=1.5,
+        n_objects=518_576,
+        knn_k=30,
+    )
+
+
+def make_smoke() -> LMIProteinConfig:
+    return LMIProteinConfig(
+        name="lmi-protein-smoke",
+        embedding=EmbeddingConfig(n_sections=10, cutoff=50.0),
+        arities=(8, 8),
+        model_type="kmeans",
+        stop_condition=0.05,
+        filter_metric="euclidean",
+        radius_scale=1.5,
+        n_objects=1000,
+        knn_k=10,
+    )
+
+
+SHAPES = (
+    ShapeSpec("build_518k", "build", dict(n_objects=518_576)),
+    ShapeSpec("search_512q", "search", dict(n_queries=512, n_objects=518_576)),
+)
+
+SPEC = ArchSpec(
+    name="lmi-protein",
+    family="lmi",
+    make_full=make_full,
+    make_smoke=make_smoke,
+    shapes=SHAPES,
+    source="this paper (SISAP 2022)",
+)

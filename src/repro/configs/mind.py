@@ -1,0 +1,41 @@
+"""mind — [arXiv:1904.08030; unverified].
+
+embed_dim=64 n_interests=4 capsule_iters=3 interaction=multi-interest.
+Item vocabulary 1M (retrieval-scale); history length 50.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchSpec, RECSYS_SHAPES
+from repro.models.recsys import MINDConfig
+
+
+def make_full() -> MINDConfig:
+    return MINDConfig(
+        name="mind",
+        embed_dim=64,
+        n_interests=4,
+        capsule_iters=3,
+        item_vocab=1_000_000,
+        hist_len=50,
+    )
+
+
+def make_smoke() -> MINDConfig:
+    return MINDConfig(
+        name="mind-smoke",
+        embed_dim=16,
+        n_interests=2,
+        capsule_iters=2,
+        item_vocab=1000,
+        hist_len=10,
+    )
+
+
+SPEC = ArchSpec(
+    name="mind",
+    family="recsys",
+    make_full=make_full,
+    make_smoke=make_smoke,
+    shapes=RECSYS_SHAPES,
+    source="arXiv:1904.08030",
+)

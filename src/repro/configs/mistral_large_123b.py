@@ -1,0 +1,53 @@
+"""mistral-large-123b — [hf:mistralai/Mistral-Large-Instruct-2407; unverified].
+
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, LM_SHAPES
+from repro.models.transformer import TransformerConfig
+
+
+def make_full() -> TransformerConfig:
+    return TransformerConfig(
+        name="mistral-large-123b",
+        n_layers=88,
+        d_model=12288,
+        n_heads=96,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=32768,
+        rope_theta=1000000.0,
+        tie_embeddings=False,
+        dtype=jnp.bfloat16,
+        attn_impl="chunked",
+    )
+
+
+def make_smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name="mistral-large-smoke",
+        n_layers=2,
+        d_model=96,
+        n_heads=6,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=224,
+        vocab_size=512,
+        tie_embeddings=False,
+        dtype=jnp.float32,
+        attn_impl="auto",
+    )
+
+
+SPEC = ArchSpec(
+    name="mistral-large-123b",
+    family="lm",
+    make_full=make_full,
+    make_smoke=make_smoke,
+    shapes=LM_SHAPES,
+    source="hf:mistralai/Mistral-Large-Instruct-2407",
+)

@@ -1,0 +1,59 @@
+"""phi3.5-moe-42b-a6.6b — [hf:microsoft/Phi-3.5-MoE-instruct; hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff(expert)=6400 vocab=32064,
+MoE 16 experts top-2.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, LM_SHAPES
+from repro.models.transformer import TransformerConfig
+
+
+def make_full() -> TransformerConfig:
+    return TransformerConfig(
+        name="phi3.5-moe-42b-a6.6b",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=0,
+        vocab_size=32064,
+        n_experts=16,
+        top_k=2,
+        d_ff_expert=6400,
+        rope_theta=10000.0,
+        tie_embeddings=False,
+        dtype=jnp.bfloat16,
+        attn_impl="chunked",
+    )
+
+
+def make_smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name="phi35-moe-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=0,
+        vocab_size=512,
+        n_experts=4,
+        top_k=2,
+        d_ff_expert=96,
+        capacity_factor=4.0,
+        tie_embeddings=False,
+        dtype=jnp.float32,
+        attn_impl="auto",
+    )
+
+
+SPEC = ArchSpec(
+    name="phi3.5-moe-42b-a6.6b",
+    family="lm",
+    make_full=make_full,
+    make_smoke=make_smoke,
+    shapes=LM_SHAPES,
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+)

@@ -1,0 +1,43 @@
+"""wide-deep — [arXiv:1606.07792; paper].
+
+n_sparse=40 embed_dim=32 mlp=1024-512-256 interaction=concat.
+Vocabulary sizes are synthetic Criteo-like (the paper's Play-store vocabs
+are not public) — DESIGN.md §8.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchSpec, RECSYS_SHAPES
+from repro.data.recsys_data import synthetic_vocab_sizes
+from repro.models.recsys import WideDeepConfig
+
+
+def make_full() -> WideDeepConfig:
+    return WideDeepConfig(
+        name="wide-deep",
+        n_sparse=40,
+        n_dense=0,
+        embed_dim=32,
+        mlp_dims=(1024, 512, 256),
+        vocab_sizes=synthetic_vocab_sizes(40, seed=17),
+    )
+
+
+def make_smoke() -> WideDeepConfig:
+    return WideDeepConfig(
+        name="wide-deep-smoke",
+        n_sparse=8,
+        n_dense=0,
+        embed_dim=8,
+        mlp_dims=(32, 16),
+        vocab_sizes=synthetic_vocab_sizes(8, seed=17, small=True),
+    )
+
+
+SPEC = ArchSpec(
+    name="wide-deep",
+    family="recsys",
+    make_full=make_full,
+    make_smoke=make_smoke,
+    shapes=RECSYS_SHAPES,
+    source="arXiv:1606.07792",
+)

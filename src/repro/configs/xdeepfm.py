@@ -1,0 +1,44 @@
+"""xdeepfm — [arXiv:1803.05170; paper].
+
+n_sparse=39 embed_dim=10 cin_layers=200-200-200 mlp=400-400.
+Criteo-39-field vocabularies (synthetic Criteo-like sizes).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchSpec, RECSYS_SHAPES
+from repro.data.recsys_data import synthetic_vocab_sizes
+from repro.models.recsys import XDeepFMConfig
+
+
+def make_full() -> XDeepFMConfig:
+    return XDeepFMConfig(
+        name="xdeepfm",
+        n_sparse=39,
+        n_dense=0,
+        embed_dim=10,
+        cin_layers=(200, 200, 200),
+        mlp_dims=(400, 400),
+        vocab_sizes=synthetic_vocab_sizes(39, seed=23),
+    )
+
+
+def make_smoke() -> XDeepFMConfig:
+    return XDeepFMConfig(
+        name="xdeepfm-smoke",
+        n_sparse=8,
+        n_dense=0,
+        embed_dim=8,
+        cin_layers=(16, 16),
+        mlp_dims=(32,),
+        vocab_sizes=synthetic_vocab_sizes(8, seed=23, small=True),
+    )
+
+
+SPEC = ArchSpec(
+    name="xdeepfm",
+    family="recsys",
+    make_full=make_full,
+    make_smoke=make_smoke,
+    shapes=RECSYS_SHAPES,
+    source="arXiv:1803.05170",
+)

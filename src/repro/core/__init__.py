@@ -1,0 +1,14 @@
+"""The paper's contribution: embedding -> learned metric index -> filtering."""
+
+from repro.core import distances, embedding, filtering, gmm, kmeans, lmi, logreg, qscore
+
+__all__ = [
+    "distances",
+    "embedding",
+    "filtering",
+    "gmm",
+    "kmeans",
+    "lmi",
+    "logreg",
+    "qscore",
+]

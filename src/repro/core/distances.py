@@ -1,0 +1,87 @@
+"""Vector distance functions used throughout the pipeline.
+
+These are the *cheap* distances the paper substitutes for the expensive
+structural Q-score: squared/plain Euclidean and cosine distance over the
+compact protein embeddings (repro.core.embedding).
+
+All functions are pure jnp, jit/vmap/pjit friendly, and accept either a
+single vector or a batch. The pairwise forms use the
+``|x|^2 + |y|^2 - 2 x.y`` decomposition so the inner loop is a single
+matmul (MXU-friendly); the Pallas kernel `repro.kernels.pairwise_l2`
+implements the same contraction with explicit VMEM tiling and is used by
+`repro.core.filtering` when enabled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+def sq_euclidean(x: Array, y: Array) -> Array:
+    """Squared Euclidean distance between two equal-shape vectors."""
+    d = x - y
+    return jnp.sum(d * d, axis=-1)
+
+
+def euclidean(x: Array, y: Array) -> Array:
+    return jnp.sqrt(jnp.maximum(sq_euclidean(x, y), 0.0))
+
+
+def cosine(x: Array, y: Array) -> Array:
+    """Cosine *distance* (1 - cosine similarity)."""
+    num = jnp.sum(x * y, axis=-1)
+    den = jnp.linalg.norm(x, axis=-1) * jnp.linalg.norm(y, axis=-1)
+    return 1.0 - num / jnp.maximum(den, _EPS)
+
+
+def pairwise_sq_euclidean(x: Array, y: Array) -> Array:
+    """All-pairs squared L2: x (n, d), y (m, d) -> (n, m).
+
+    Uses the norm-decomposition so the dominant cost is one (n,d)x(d,m)
+    matmul. Clamps at zero to kill the tiny negatives from cancellation.
+    """
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    xn = jnp.sum(x * x, axis=-1)[:, None]
+    yn = jnp.sum(y * y, axis=-1)[None, :]
+    # Promote the contraction to f32 accumulation when inputs are low precision.
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    return jnp.maximum(xn + yn - 2.0 * xy, 0.0)
+
+
+def pairwise_euclidean(x: Array, y: Array) -> Array:
+    return jnp.sqrt(pairwise_sq_euclidean(x, y))
+
+
+def pairwise_cosine(x: Array, y: Array) -> Array:
+    """All-pairs cosine distance: x (n, d), y (m, d) -> (n, m)."""
+    xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), _EPS)
+    yn = y / jnp.maximum(jnp.linalg.norm(y, axis=-1, keepdims=True), _EPS)
+    sim = jnp.dot(xn, yn.T, preferred_element_type=jnp.float32)
+    return 1.0 - sim
+
+
+DISTANCES = {
+    "euclidean": euclidean,
+    "sq_euclidean": sq_euclidean,
+    "cosine": cosine,
+}
+
+PAIRWISE = {
+    "euclidean": pairwise_euclidean,
+    "sq_euclidean": pairwise_sq_euclidean,
+    "cosine": pairwise_cosine,
+}
+
+
+def get_pairwise(name: str):
+    try:
+        return PAIRWISE[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown distance {name!r}; available: {sorted(PAIRWISE)}"
+        ) from None

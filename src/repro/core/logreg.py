@@ -1,0 +1,97 @@
+"""Multinomial logistic regression — the "K-Means + LogReg" LMI variant.
+
+In the paper's data-driven LMI, K-Means produces the partitioning and a
+logistic-regression classifier is trained on (vector -> cluster id) so that
+node inference is a single dense layer + softmax instead of a distance
+argmin. We train with full-batch Adam from `repro.optim` (our own
+substrate, no optax) on the weighted cross-entropy to the K-Means labels.
+
+Supports per-sample weights (0 == padding) and a vmapped `fit_many` for
+the LMI level-2 build, mirroring kmeans/gmm.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import adam, apply_updates
+
+Array = jax.Array
+
+
+class LogRegState(NamedTuple):
+    weights: Array  # (d, k)
+    bias: Array  # (k,)
+    final_loss: Array
+
+
+def _loss_fn(params, x, labels, w, l2: float):
+    wmat, b = params
+    logits = x @ wmat + b
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1e-8) + l2 * jnp.sum(wmat * wmat)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 5))
+def fit(
+    key: Array,
+    x: Array,
+    labels: Array,
+    k: int,
+    weights: Optional[Array] = None,
+    n_steps: int = 300,
+    lr: float = 0.05,
+    l2: float = 1e-5,
+) -> LogRegState:
+    x = jnp.asarray(x, jnp.float32)
+    n, d = x.shape
+    w = jnp.ones((n,), jnp.float32) if weights is None else jnp.asarray(weights, jnp.float32)
+    w0 = jax.random.normal(key, (d, k)) * 0.01
+    b0 = jnp.zeros((k,))
+    opt = adam(lr)
+    params = (w0, b0)
+    opt_state = opt.init(params)
+
+    def step(carry, _):
+        params, opt_state = carry
+        loss, grads = jax.value_and_grad(_loss_fn)(params, x, labels, w, l2)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return (params, opt_state), loss
+
+    (params, _), losses = jax.lax.scan(step, (params, opt_state), None, length=n_steps)
+    wmat, b = params
+    return LogRegState(weights=wmat, bias=b, final_loss=losses[-1])
+
+
+def fit_many(
+    key: Array,
+    xs: Array,  # (groups, cap, d)
+    labels: Array,  # (groups, cap) int32
+    ws: Array,  # (groups, cap)
+    k: int,
+    n_steps: int = 200,
+) -> LogRegState:
+    keys = jax.random.split(key, xs.shape[0])
+    f = functools.partial(fit, k=k, n_steps=n_steps)
+    return jax.vmap(lambda kk, x, y, w: f(kk, x, y, weights=w))(keys, xs, labels, ws)
+
+
+def predict_log_proba(weights: Array, bias: Array, x: Array) -> Array:
+    """log softmax(x @ w + b); weights may carry leading batch dims (…, d, k)."""
+    logits = jnp.einsum("nd,...dk->...nk", jnp.asarray(x, jnp.float32), weights)
+    logits = logits + bias[..., None, :]
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def predict_proba(state: LogRegState, x: Array) -> Array:
+    return jnp.exp(predict_log_proba(state.weights, state.bias, x))
+
+
+def predict(state: LogRegState, x: Array) -> Array:
+    x = jnp.asarray(x, jnp.float32)
+    return jnp.argmax(x @ state.weights + state.bias, axis=-1).astype(jnp.int32)

@@ -1,0 +1,145 @@
+"""The *expensive* structural distance the index substitutes.
+
+The paper uses the SSM Q-score [Krissinel & Henrick 2004]:
+
+    Q = N_align^2 / ((1 + (RMSD/R0)^2) * N_1 * N_2)
+
+with ``Q_distance = 1 - Q``. Computing it requires an optimal rigid-body
+superposition of the two chains — the costly step the learned pipeline
+avoids. We implement a faithful JAX oracle:
+
+  * both chains are resampled to ``n_points`` arc-length-uniform pseudo
+    residues (this plays the role of the aligned-residue correspondence;
+    N_align = n_points),
+  * optimal superposition via the Kabsch algorithm (cross-covariance SVD
+    with reflection correction),
+  * RMSD of the superposed point sets -> Q-score -> Q_distance.
+
+This is O(n_points) SVD-bound work per *pair* (vs. a 45-float vector op for
+the embedding), which preserves the paper's cost asymmetry while staying
+computable for ground-truth generation on tens of thousands of chains.
+
+Everything vmaps: ``qdistance_matrix`` computes a (Q, M) ground-truth panel
+with two nested vmaps and is used by the benchmarks to build the exact
+answers the recall/F1 numbers are measured against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Q-score characteristic distance (Angstrom). SSM uses 3.0 with *optimally
+# aligned* residue pairs; our oracle fixes the correspondence by uniform
+# resampling (no subsequence alignment), which inflates RMSD for length-
+# jittered chains — R0=5 restores the paper's qualitative bands
+# (0.1 high similarity, 0.5 marginal), documented in DESIGN.md §8.
+R0 = 5.0
+
+
+def resample_chain(coords: Array, length: Array, n_points: int) -> Array:
+    """Resample a padded (L_max, 3) chain to ``n_points`` uniform points.
+
+    Linear interpolation along the residue index of the true chain; this
+    fixes a correspondence between any two chains (pseudo-alignment).
+    """
+    L = coords.shape[0]
+    # Fractional positions 0 .. length-1 at n_points uniform stops.
+    t = jnp.linspace(0.0, 1.0, n_points) * (jnp.maximum(length, 2) - 1)
+    i0 = jnp.clip(jnp.floor(t).astype(jnp.int32), 0, L - 2)
+    frac = (t - i0)[:, None]
+    p0 = coords[i0]
+    p1 = coords[i0 + 1]
+    return p0 * (1.0 - frac) + p1 * frac
+
+
+def kabsch_rmsd(a: Array, b: Array) -> Array:
+    """Minimal RMSD between point sets a, b of identical shape (n, 3).
+
+    Classic Kabsch: center both, SVD of the cross-covariance, flip the
+    smallest singular vector if the rotation would be a reflection.
+    """
+    a = a - jnp.mean(a, axis=0, keepdims=True)
+    b = b - jnp.mean(b, axis=0, keepdims=True)
+    h = a.T @ b  # (3, 3)
+    u, s, vt = jnp.linalg.svd(h)
+    det = jnp.linalg.det(u @ vt)
+    d = jnp.array([1.0, 1.0, 0.0]) + jnp.array([0.0, 0.0, 1.0]) * jnp.sign(det)
+    # Optimal RMSD^2 = (|a|^2 + |b|^2 - 2 * sum(d * s)) / n
+    n = a.shape[0]
+    e0 = jnp.sum(a * a) + jnp.sum(b * b)
+    msd = jnp.maximum(e0 - 2.0 * jnp.sum(s * d), 0.0) / n
+    return jnp.sqrt(msd)
+
+
+def qscore(
+    coords_a: Array,
+    len_a: Array,
+    coords_b: Array,
+    len_b: Array,
+    n_points: int = 64,
+    r0: float = R0,
+) -> Array:
+    """Q-score between two padded chains (scalar in [0, 1])."""
+    pa = resample_chain(coords_a, len_a, n_points)
+    pb = resample_chain(coords_b, len_b, n_points)
+    rmsd = kabsch_rmsd(pa, pb)
+    # N_align == n_points by construction; N1, N2 are the true chain lengths
+    # scaled to the resampled resolution so the ratio matches the paper's
+    # (aligned / total) semantics.
+    n1 = jnp.maximum(len_a, 1).astype(jnp.float32)
+    n2 = jnp.maximum(len_b, 1).astype(jnp.float32)
+    n_align = jnp.minimum(n1, n2)
+    q = (n_align * n_align) / ((1.0 + (rmsd / r0) ** 2) * n1 * n2)
+    return jnp.clip(q, 0.0, 1.0)
+
+
+def qdistance(
+    coords_a: Array, len_a: Array, coords_b: Array, len_b: Array, n_points: int = 64
+) -> Array:
+    return 1.0 - qscore(coords_a, len_a, coords_b, len_b, n_points)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def qdistance_matrix(
+    q_coords: Array,  # (Q, L, 3)
+    q_lens: Array,  # (Q,)
+    db_coords: Array,  # (M, L, 3)
+    db_lens: Array,  # (M,)
+    n_points: int = 64,
+) -> Array:
+    """Ground-truth Q-distance panel (Q, M) — the brute-force scan."""
+
+    def one_query(qc, ql):
+        return jax.vmap(lambda dc, dl: qdistance(qc, ql, dc, dl, n_points))(
+            db_coords, db_lens
+        )
+
+    return jax.vmap(one_query)(q_coords, q_lens)
+
+
+def qdistance_matrix_chunked(
+    q_coords: Array,
+    q_lens: Array,
+    db_coords: Array,
+    db_lens: Array,
+    n_points: int = 64,
+    chunk: int = 2048,
+) -> Array:
+    """Host-chunked version for large DBs (bounds peak device memory)."""
+    import numpy as np
+
+    m = db_coords.shape[0]
+    outs = []
+    for s in range(0, m, chunk):
+        outs.append(
+            np.asarray(
+                qdistance_matrix(
+                    q_coords, q_lens, db_coords[s : s + chunk], db_lens[s : s + chunk], n_points
+                )
+            )
+        )
+    return jnp.asarray(np.concatenate(outs, axis=1))

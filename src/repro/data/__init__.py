@@ -1,0 +1,3 @@
+from repro.data import proteins
+
+__all__ = ["proteins"]

@@ -1,0 +1,136 @@
+"""Synthetic graph generation + neighbor sampling (GNN data substrate).
+
+Provides the four assigned GNN shapes:
+  * full_graph_sm   — Cora-scale SBM (2 708 nodes / ~10 556 edges / 1 433 feats)
+  * minibatch_lg    — Reddit-scale: a real fanout-based neighbor sampler
+                      over a large power-law graph (the sampler IS part of
+                      the system — kernel_taxonomy §GNN)
+  * ogb_products    — products-scale SBM (full-batch-large; dry-run only)
+  * molecule        — batched small graphs, block-diagonal packing
+
+Graphs are stored CSR-style (indptr, indices) on the host; JAX consumes
+padded edge arrays (src, dst, mask) per repro.models.gnn.Graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+
+class HostGraph(NamedTuple):
+    indptr: np.ndarray  # (N+1,) CSR over incoming edges
+    indices: np.ndarray  # (E,) neighbor ids
+    node_feat: np.ndarray  # (N, d)
+    labels: np.ndarray  # (N,)
+
+
+def sbm_graph(
+    seed: int,
+    n_nodes: int,
+    n_edges: int,
+    d_feat: int,
+    n_classes: int = 7,
+    homophily: float = 0.8,
+) -> HostGraph:
+    """Stochastic-block-model-ish graph with class-correlated features."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, n_nodes).astype(np.int32)
+    # sample edges: homophilous pairs with prob `homophily`
+    n_homo = int(n_edges * homophily)
+    src_h = rng.integers(0, n_nodes, n_homo)
+    # pick a random same-class partner via per-class pools
+    order = np.argsort(labels, kind="stable")
+    class_start = np.searchsorted(labels[order], np.arange(n_classes))
+    class_end = np.append(class_start[1:], n_nodes)
+    sizes = np.maximum(class_end - class_start, 1)
+    offs = rng.integers(0, 1 << 31, n_homo)
+    dst_h = order[class_start[labels[src_h]] + offs % sizes[labels[src_h]]]
+    src_r = rng.integers(0, n_nodes, n_edges - n_homo)
+    dst_r = rng.integers(0, n_nodes, n_edges - n_homo)
+    src = np.concatenate([src_h, src_r]).astype(np.int32)
+    dst = np.concatenate([dst_h, dst_r]).astype(np.int32)
+    # CSR over incoming edges (dst-major)
+    order_e = np.argsort(dst, kind="stable")
+    src, dst = src[order_e], dst[order_e]
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.add.at(indptr[1:], dst, 1)
+    np.cumsum(indptr, out=indptr)
+    # class-informative features
+    proto = rng.normal(size=(n_classes, d_feat)).astype(np.float32)
+    feat = proto[labels] + rng.normal(scale=1.0, size=(n_nodes, d_feat)).astype(np.float32)
+    return HostGraph(indptr=indptr, indices=src, node_feat=feat, labels=labels)
+
+
+def to_edge_arrays(g: HostGraph, pad_to: Optional[int] = None):
+    """CSR -> (src, dst, mask) padded edge arrays for repro.models.gnn."""
+    n = g.indptr.shape[0] - 1
+    e = g.indices.shape[0]
+    dst = np.repeat(np.arange(n, dtype=np.int32), np.diff(g.indptr))
+    src = g.indices.astype(np.int32)
+    target = pad_to or e
+    mask = np.zeros(target, np.float32)
+    mask[:e] = 1.0
+    src_p = np.full(target, n, np.int32)  # ghost row
+    dst_p = np.full(target, n, np.int32)
+    src_p[:e], dst_p[:e] = src, dst
+    return src_p, dst_p, mask
+
+
+def neighbor_sample(
+    g: HostGraph,
+    seeds: np.ndarray,
+    fanouts: tuple[int, ...],
+    rng: np.random.Generator,
+):
+    """Uniform fanout-bounded k-hop sampling (GraphSAGE style).
+
+    Returns a node list (seeds first) and padded edge arrays of the sampled
+    block-subgraph, with edges directed child -> parent (message flows
+    toward the seeds). Fixed output sizes: len(seeds) * prod(fanouts).
+    """
+    nodes = [np.asarray(seeds, np.int64)]
+    edges_src, edges_dst = [], []
+    frontier = np.asarray(seeds, np.int64)
+    for f in fanouts:
+        deg = np.diff(g.indptr)[frontier]
+        # sample up to f incoming neighbors per frontier node
+        offs = rng.integers(0, 1 << 62, size=(frontier.shape[0], f))
+        valid = deg > 0
+        safe_deg = np.maximum(deg, 1)
+        idx = g.indptr[frontier][:, None] + (offs % safe_deg[:, None])
+        nbrs = g.indices[idx]  # (|frontier|, f)
+        src = nbrs[valid].reshape(-1)
+        dst = np.repeat(frontier[valid], f)
+        edges_src.append(src)
+        edges_dst.append(dst)
+        frontier = np.unique(src)
+        nodes.append(frontier)
+    all_nodes, inverse = np.unique(np.concatenate(nodes), return_inverse=True)
+    # relabel edges into the subgraph's local ids
+    remap = {int(v): i for i, v in enumerate(all_nodes)}
+    src = np.asarray([remap[int(s)] for s in np.concatenate(edges_src)], np.int32)
+    dst = np.asarray([remap[int(d)] for d in np.concatenate(edges_dst)], np.int32)
+    seed_local = np.asarray([remap[int(s)] for s in seeds], np.int32)
+    return all_nodes, src, dst, seed_local
+
+
+def batched_molecules(
+    seed: int, n_graphs: int, n_nodes: int, n_edges: int, d_feat: int, n_classes: int = 2
+):
+    """Block-diagonal batch of small random graphs (the `molecule` shape)."""
+    rng = np.random.default_rng(seed)
+    N = n_graphs * n_nodes
+    E = n_graphs * n_edges
+    src = np.zeros(E, np.int32)
+    dst = np.zeros(E, np.int32)
+    for i in range(n_graphs):
+        s = rng.integers(0, n_nodes, n_edges)
+        d = rng.integers(0, n_nodes, n_edges)
+        src[i * n_edges : (i + 1) * n_edges] = s + i * n_nodes
+        dst[i * n_edges : (i + 1) * n_edges] = d + i * n_nodes
+    feat = rng.normal(size=(N, d_feat)).astype(np.float32)
+    labels = rng.integers(0, n_classes, N).astype(np.int32)
+    mask = np.ones(E, np.float32)
+    return src, dst, mask, feat, labels

@@ -1,0 +1,98 @@
+"""Host-side data pipeline: deterministic, resumable, shard-aware.
+
+The pipeline contract for fault tolerance: a pipeline is a pure function
+of (seed, step) -> batch, so resuming from checkpoint step S reproduces
+exactly the batches the failed run would have seen. No iterator state
+beyond the integer step needs saving.
+
+`DataPipeline` wraps a `make_batch(seed, step) -> pytree-of-numpy`
+callable with (a) a background prefetch thread (double buffering) and
+(b) `device_put` onto the correct NamedShardings so the train step never
+blocks on host work.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+class DataPipeline:
+    def __init__(
+        self,
+        make_batch: Callable[[int, int], Any],
+        seed: int,
+        shardings: Optional[Any] = None,
+        prefetch: int = 2,
+        start_step: int = 0,
+    ):
+        self.make_batch = make_batch
+        self.seed = seed
+        self.shardings = shardings
+        self.step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self.make_batch(self.seed, step)
+            try:
+                self._q.put((step, batch), timeout=1.0)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __next__(self):
+        while True:
+            step, batch = self._q.get()
+            if step < self.step:  # stale after a resume-seek
+                continue
+            self.step = step + 1
+            if self.shardings is not None:
+                batch = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), batch, self.shardings
+                )
+            else:
+                batch = jax.tree.map(jax.numpy.asarray, batch)
+            return batch
+
+    def __iter__(self):
+        return self
+
+    def state(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def lm_synthetic_batch(vocab_size: int, batch: int, seq_len: int):
+    """A (seed, step) -> {tokens, targets} generator for LM training.
+
+    Markov-chain-ish synthetic text: next-token structure exists, so the
+    LM loss actually decreases (quickstart / e2e example)."""
+
+    def make(seed: int, step: int):
+        rng = np.random.default_rng(np.uint64(seed) * np.uint64(1_000_003) + np.uint64(step))
+        # blockwise-repetitive tokens: learnable bigram structure
+        base = rng.integers(0, vocab_size, size=(batch, seq_len // 4 + 2))
+        tokens = np.repeat(base, 4, axis=1)[:, :seq_len + 1]
+        noise = rng.random((batch, seq_len + 1)) < 0.05
+        tokens = np.where(noise, rng.integers(0, vocab_size, tokens.shape), tokens)
+        return {
+            "tokens": tokens[:, :-1].astype(np.int32),
+            "targets": tokens[:, 1:].astype(np.int32),
+        }
+
+    return make

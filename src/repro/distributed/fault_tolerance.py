@@ -1,0 +1,142 @@
+"""Fault tolerance for 1000+-node runs: elastic meshes, restart, stragglers.
+
+What actually fails at scale and what we do about it:
+
+  * **Chip/host loss** — training must resume from the latest checkpoint
+    on the surviving devices. `elastic_mesh` rebuilds the largest usable
+    (data, model) mesh from whatever `jax.devices()` reports (the model
+    axis is fixed by the sharding scheme; the data axis shrinks), and
+    `RestartManager.resume` re-shards the checkpointed state onto it.
+    Because checkpoints are stored unsharded-logical (per-leaf full
+    arrays; on multi-host, per-shard files keyed by logical index), a
+    restore onto a *different* device count is just a different
+    device_put — no format change.
+  * **Stragglers** — `StepTimer` keeps an EWMA + variance of step wall
+    time; a step slower than mean + k*sigma (default 6) flags a straggler
+    event. The driver's policy (repro.train.loop) is: log it, and after
+    `patience` consecutive flags, checkpoint + request re-mesh (the
+    standard large-run mitigation — drop the slow host rather than let it
+    gate every step).
+  * **Preemption** — `RestartManager` is also the SIGTERM path: the
+    training loop checks `should_checkpoint(step)` every step; a
+    preemption signal forces an immediate checkpoint at the next step
+    boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro import checkpoint as ckpt_lib
+
+
+def elastic_mesh(
+    model_parallel: int,
+    devices: Optional[list] = None,
+    axis_names: tuple[str, ...] = ("data", "model"),
+) -> Mesh:
+    """Largest (data, model) mesh buildable from the live devices.
+
+    Keeps the model axis fixed (parameter sharding must not change) and
+    shrinks the data axis to the largest multiple that fits; leftover
+    devices idle (better than a dead run).
+    """
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    if n < model_parallel:
+        raise RuntimeError(
+            f"only {n} live devices but model parallelism needs {model_parallel}"
+        )
+    dp = n // model_parallel
+    used = devices[: dp * model_parallel]
+    arr = np.asarray(used).reshape(dp, model_parallel)
+    return Mesh(arr, axis_names)
+
+
+class StepTimer:
+    """EWMA step timer with straggler detection."""
+
+    def __init__(self, alpha: float = 0.05, k_sigma: float = 6.0, warmup: int = 5):
+        self.alpha = alpha
+        self.k_sigma = k_sigma
+        self.warmup = warmup
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.count = 0
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> tuple[float, bool]:
+        """Returns (elapsed_s, is_straggler)."""
+        return self.observe(time.perf_counter() - self._t0)
+
+    def observe(self, dt: float) -> tuple[float, bool]:
+        """Update with a measured duration (separated from wall-clock for
+        deterministic testing)."""
+        self.count += 1
+        if self.mean is None:
+            self.mean, self.var = dt, 0.0
+            return dt, False
+        straggler = False
+        if self.count > self.warmup:
+            sigma = math.sqrt(max(self.var, 1e-12))
+            straggler = dt > self.mean + self.k_sigma * max(sigma, 0.05 * self.mean)
+        d = dt - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return dt, straggler
+
+
+@dataclasses.dataclass
+class RestartManager:
+    """Checkpoint/restart policy + preemption handling."""
+
+    directory: str
+    interval: int = 100  # steps between periodic checkpoints
+    keep: int = 3
+    straggler_patience: int = 3
+
+    def __post_init__(self):
+        self._preempted = False
+        self._straggler_strikes = 0
+        try:
+            signal.signal(signal.SIGTERM, self._on_sigterm)
+        except ValueError:
+            pass  # not on the main thread (tests)
+
+    def _on_sigterm(self, signum, frame):
+        self._preempted = True
+
+    def note_straggler(self, is_straggler: bool) -> bool:
+        """Returns True when the re-mesh policy should trigger."""
+        if is_straggler:
+            self._straggler_strikes += 1
+        else:
+            self._straggler_strikes = 0
+        return self._straggler_strikes >= self.straggler_patience
+
+    def should_checkpoint(self, step: int) -> bool:
+        return self._preempted or (step > 0 and step % self.interval == 0)
+
+    @property
+    def preempted(self) -> bool:
+        return self._preempted
+
+    def save(self, step: int, state: Any) -> str:
+        return ckpt_lib.save(self.directory, step, state, keep=self.keep)
+
+    def resume(self, template: Any) -> tuple[Optional[int], Any]:
+        """(step, state) from the latest checkpoint, or (None, template)."""
+        step = ckpt_lib.latest_step(self.directory)
+        if step is None:
+            return None, template
+        return step, ckpt_lib.restore(self.directory, template, step)

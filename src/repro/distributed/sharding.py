@@ -1,0 +1,331 @@
+"""Sharding rules: how every model family maps onto the production mesh.
+
+Mesh axes (repro.launch.mesh):
+  single-pod: ("data", "model") = (16, 16)         — 256 chips
+  multi-pod:  ("pod", "data", "model") = (2,16,16) — 512 chips
+
+Conventions
+-----------
+* Batch dims shard over all data-like axes: ``("pod", "data")`` (or just
+  ``"data"`` single-pod).
+* Transformer: Megatron-style tensor parallelism over ``"model"`` —
+  attention q/o project over the head dim, k/v over kv-heads (when
+  n_kv_heads >= model axis; otherwise replicated — GQA limits TP of kv),
+  MLP w1/w3 column-, w2 row-parallel; embeddings vocab-sharded; MoE
+  experts expert-sharded over ``"model"`` (EP).
+* Recsys: fused embedding tables row-sharded over ALL axes (they are the
+  dominant bytes); MLPs replicated (they are tiny) with data-parallel
+  batch.
+* GNN: edge arrays shard over data axes, node tensors replicated
+  (edge-parallel aggregation, psum finish); params replicated.
+
+`shardings_for(tree_of_specs, mesh)` turns a PartitionSpec tree into a
+NamedSharding tree usable as jit in_shardings / out_shardings.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import TransformerConfig
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """(batch, …) sharded over the data axes, rest replicated."""
+    axes = data_axes(mesh)
+    key = axes if len(axes) > 1 else axes[0]
+    return P(key, *([None] * extra_dims))
+
+
+def shardings_for(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ------------------------------------------------------------- transformer
+def lm_strategy(cfg: TransformerConfig, mesh: Mesh) -> str:
+    """Pick the parallelism strategy by model size/kind (overridable):
+
+    dp — replicate params, batch over ALL axes, ZeRO-1 opt-state shard.
+         Right for small dense models (tensor-parallel a 1.6B model
+         16-ways is pure collective overhead — measured 4.2 s/step of
+         collectives vs 0.29 s compute before this policy existed).
+    ep — MoE: experts over the model axis, attention replicated,
+         ZeRO-1 for the replicated leaves.
+    tp — Megatron TP+SP over the model axis (big dense models that
+         cannot replicate: starcoder2-15b, mistral-large-123b).
+    """
+    param_bytes = 2 * cfg.param_count()  # bf16
+    if cfg.is_moe:
+        return "ep"
+    if param_bytes <= 6e9:
+        return "dp"
+    return "tp"
+
+
+def zero_shard_spec(shape: tuple, msize: int) -> P:
+    """ZeRO-1: shard the largest model-axis-divisible dim of an optimizer
+    moment leaf over 'model'; replicate if nothing divides."""
+    best = None
+    for i, d in enumerate(shape):
+        if d % msize == 0 and (best is None or d > shape[best]):
+            best = i
+    if best is None:
+        return P(*([None] * len(shape)))
+    spec = [None] * len(shape)
+    spec[best] = "model"
+    return P(*spec)
+
+
+def transformer_param_specs(cfg: TransformerConfig, mesh: Mesh) -> dict:
+    """PartitionSpec tree matching repro.models.transformer.init_params.
+
+    Leading layer-stack axis is never sharded. kv projections shard over
+    the model axis only when n_kv_heads divides by it (GQA with few kv
+    heads replicates kv, which is the standard choice).
+    """
+    m = "model"
+    msize = mesh.shape[m]
+    kv_shardable = cfg.n_kv_heads % msize == 0
+    kv = P(None, None, m) if kv_shardable else P(None, None, None)
+    layers = {
+        "rms1": P(None, None),
+        "rms2": P(None, None),
+        "wq": P(None, None, m),
+        "wk": kv,
+        "wv": kv,
+        "wo": P(None, m, None),
+    }
+    if cfg.is_moe:
+        layers.update(
+            router=P(None, None, None),
+            moe_w1=P(None, m, None, None),  # experts over model axis (EP)
+            moe_w3=P(None, m, None, None),
+            moe_w2=P(None, m, None, None),
+        )
+        if cfg.n_shared_experts:
+            layers.update(
+                shared_w1=P(None, None, m),
+                shared_w3=P(None, None, m),
+                shared_w2=P(None, m, None),
+            )
+    elif cfg.mlp_type == "gelu":
+        layers.update(
+            w1=P(None, None, m),
+            w2=P(None, m, None),
+        )
+    else:
+        layers.update(
+            w1=P(None, None, m),
+            w3=P(None, None, m),
+            w2=P(None, m, None),
+        )
+    specs = {
+        "embed": P(m, None),  # vocab-sharded
+        "layers": layers,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, m)
+    return specs
+
+
+def transformer_param_specs_2d(cfg: TransformerConfig, mesh: Mesh) -> dict:
+    """TP x FSDP: model-axis tensor parallelism (heads/ffn columns) plus
+    data-axis sharding of the other weight dim (ZeRO-3-style). Required
+    wherever 1D TP leaves >HBM per device (mistral-large: 15.4 GiB/chip
+    at TP=16; 0.96 GiB at 2D) and for serving placements that dedicate
+    the whole pod to one replica."""
+    m = "model"
+    d = "data"
+    msize = mesh.shape[m]
+    kv_shardable = cfg.n_kv_heads % msize == 0
+    kv = P(None, d, m) if kv_shardable else P(None, d, None)
+    layers = {
+        "rms1": P(None, None),
+        "rms2": P(None, None),
+        "wq": P(None, d, m),
+        "wk": kv,
+        "wv": kv,
+        "wo": P(None, m, d),
+    }
+    if cfg.is_moe:
+        layers.update(
+            router=P(None, None, None),
+            moe_w1=P(None, m, d, None),
+            moe_w3=P(None, m, d, None),
+            moe_w2=P(None, m, None, d),
+        )
+        if cfg.n_shared_experts:
+            layers.update(
+                shared_w1=P(None, d, m),
+                shared_w3=P(None, d, m),
+                shared_w2=P(None, m, d),
+            )
+    elif cfg.mlp_type == "gelu":
+        layers.update(
+            w1=P(None, d, m),
+            w2=P(None, m, d),
+        )
+    else:
+        layers.update(
+            w1=P(None, d, m),
+            w3=P(None, d, m),
+            w2=P(None, m, d),
+        )
+    specs = {
+        "embed": P(m, d),
+        "layers": layers,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(d, m)
+    return specs
+
+
+def transformer_param_specs_dp(cfg: TransformerConfig, params_shapes, mesh: Mesh) -> dict:
+    """Pure data parallel: every parameter replicated."""
+    return jax.tree.map(lambda s: P(*([None] * len(s.shape))), params_shapes)
+
+
+def transformer_param_specs_ep(cfg: TransformerConfig, params_shapes, mesh: Mesh) -> dict:
+    """Expert parallel: MoE expert leaves over 'model' x 'data' (EP +
+    FSDP on the expert hidden dim — expert weights are 95% of a
+    fine-grained MoE, sharding them over one axis leaves 5 GiB/chip of
+    replicas), rest replicated. Embeddings vocab-sharded."""
+    msize = mesh.shape["model"]
+    d_ok = cfg.d_model % max(mesh.shape.get("data", 1), 1) == 0
+    dax = "data" if d_ok else None
+    specs = transformer_param_specs_dp(cfg, params_shapes, mesh)
+    layers = dict(specs["layers"])
+    for k in ("moe_w1", "moe_w3"):
+        if k in layers:
+            layers[k] = P(None, "model", dax, None)
+    if "moe_w2" in layers:
+        layers["moe_w2"] = P(None, "model", None, dax)
+    specs["layers"] = layers
+    if cfg.vocab_size % msize == 0:
+        specs["embed"] = P("model", None)
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P(None, "model")
+    return specs
+
+
+def opt_specs_with_zero(param_specs, params_shapes, mesh: Mesh):
+    """Optimizer-moment specs: mirror sharded params + ZeRO-extend.
+
+    Replicated leaves get their largest divisible dim sharded over
+    'model'; partially-sharded leaves get one more free dim sharded over
+    'data' when divisible (f32 moments are 4x params — 1D sharding left
+    21 GiB/chip of moments on phi3.5-moe)."""
+    msize = mesh.shape["model"]
+    dsize = mesh.shape.get("data", 1)
+
+    def one(spec: P, shape_struct):
+        shape = shape_struct.shape
+        if not any(ax is not None for ax in spec):
+            return zero_shard_spec(shape, msize)
+        if "data" in jax.tree.leaves(tuple(spec)):
+            return spec
+        # extend over 'data': shard the largest free divisible dim
+        best = None
+        for i, d in enumerate(shape):
+            if spec[i] is None and d % dsize == 0 and (best is None or d > shape[best]):
+                best = i
+        if best is None:
+            return spec
+        new = list(spec) + [None] * (len(shape) - len(spec))
+        new[best] = "data"
+        return P(*new)
+
+    return jax.tree.map(
+        one, param_specs, params_shapes, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def transformer_cache_specs(cfg: TransformerConfig, mesh: Mesh):
+    """KV cache (L, B, Hkv, S, dh): batch over data axes, kv-heads over
+    model when divisible."""
+    from repro.models.transformer import KVCache
+
+    msize = mesh.shape["model"]
+    kv_axis = "model" if cfg.n_kv_heads % msize == 0 else None
+    b = data_axes(mesh)
+    b = b if len(b) > 1 else b[0]
+    kv = P(None, b, kv_axis, None, None)
+    return KVCache(k=kv, v=kv, length=P())
+
+
+# ------------------------------------------------------------------ recsys
+def recsys_param_specs(params: Any, mesh: Mesh) -> Any:
+    """Row-shard every big embedding table over ALL mesh axes; replicate
+    the small MLP leaves. Decided per-leaf by size threshold."""
+    all_axes = tuple(mesh.axis_names)
+    key = all_axes if len(all_axes) > 1 else all_axes[0]
+
+    def rule(leaf):
+        if leaf.ndim == 2 and leaf.shape[0] >= 100_000:  # embedding table
+            return P(key, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(rule, params)
+
+
+# --------------------------------------------------------------------- gnn
+def gnn_batch_specs(mesh: Mesh):
+    """(node_feat, edge_src, edge_dst, edge_mask, labels, label_mask)."""
+    axes = data_axes(mesh)
+    e = axes if len(axes) > 1 else axes[0]
+    return {
+        "node_feat": P(None, None),  # replicated nodes
+        "edge_src": P(e),  # edge-parallel
+        "edge_dst": P(e),
+        "edge_mask": P(e),
+        "labels": P(None),
+        "label_mask": P(None),
+    }
+
+
+# ------------------------------------------------ explicit sharded lookup
+def sharded_embedding_lookup(
+    weight: jax.Array,  # (V, D) row-sharded over `axis`
+    ids: jax.Array,  # (B, F) int32, batch-sharded over data axes
+    mesh: Mesh,
+    axis: str = "model",
+):
+    """Mod-sharded owner-computes lookup under shard_map (DESIGN.md §6).
+
+    Device r on the model axis owns rows {v : v % n == r} stored
+    contiguously as weight_local[v // n]. Every device looks up the ids it
+    owns, zeros the rest, and a psum over the model axis completes the
+    row. Collective volume: (B, F, D) — one all-reduce, no table gather.
+    """
+    n = mesh.shape[axis]
+
+    def local_fn(w_local, ids_local):
+        r = jax.lax.axis_index(axis)
+        mine = (ids_local % n) == r
+        local_rows = jnp.where(mine, ids_local // n, 0)
+        emb = jnp.take(w_local, local_rows, axis=0)  # (B, F, D)
+        emb = jnp.where(mine[..., None], emb, 0.0)
+        return jax.lax.psum(emb, axis)
+
+    daxes = data_axes(mesh)
+    dkey = daxes if len(daxes) > 1 else daxes[0]
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(dkey, None)),
+        out_specs=P(dkey, None, None),
+        check_vma=False,
+    )(weight, ids)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a jnp oracle.
+
+  pairwise_l2     — tiled all-pairs squared-L2 (filtering / retrieval)
+  kmeans_assign   — fused distance+argmin (LMI build Lloyd iterations)
+  flash_attention — blockwise online-softmax attention (LM prefill)
+  embedding_bag   — gather + segment-sum (recsys lookup)  [pure-JAX ref +
+                    Pallas one-hot-matmul variant]
+
+Kernels target TPU (BlockSpec VMEM tiling, MXU-aligned shapes) and are
+validated in interpret mode on CPU. `ops.py` wrappers pad shapes to
+hardware alignment and choose interpret automatically per backend.
+"""

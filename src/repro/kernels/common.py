@@ -1,0 +1,36 @@
+"""Shared Pallas kernel utilities.
+
+All kernels in this package target TPU (pl.pallas_call + BlockSpec VMEM
+tiling) and are *validated* on CPU in interpret mode, which executes the
+kernel body in Python. `should_interpret()` decides per-backend; set
+REPRO_PALLAS_INTERPRET=0/1 to force.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def should_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_to(arr, axis: int, multiple: int, value=0.0):
+    """Zero-pad ``arr`` along ``axis`` up to the next multiple."""
+    import jax.numpy as jnp
+
+    n = arr.shape[axis]
+    target = round_up(n, multiple)
+    if target == n:
+        return arr
+    pads = [(0, 0)] * arr.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(arr, pads, constant_values=value)

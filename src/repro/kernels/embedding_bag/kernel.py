@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: embedding-bag as a tiled multi-hot matmul.
+
+TPU adaptation note (DESIGN.md §3): GPUs implement EmbeddingBag as a
+row-gather + atomics scatter. TPUs have no fast random gather from HBM in
+the TC core — but the MXU turns the lookup into linear algebra:
+
+    out = C @ table,  C[b, v] = sum_l weight[b, l] * [ids[b, l] == v]
+
+C is never materialised in HBM: the grid walks vocab blocks (sequential
+axis), builds the (bb, bv) count tile in VREGs by looping over the bag
+slots, and accumulates  count_tile @ table_tile  into a VMEM scratch.
+For the vocab-shard sizes that survive row-sharding across a pod
+(V_local ~ 10k-100k), this is bandwidth-optimal: the table streams
+through VMEM exactly once per batch block.
+
+Grid: (B / bb, V / bv), vocab innermost/sequential. ids/weights ride as
+(bb, L) VMEM blocks; L is the (padded) bag length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _embag_kernel(ids_ref, w_ref, tab_ref, o_ref, acc_scr, *, bv, bag_len):
+    v_idx = pl.program_id(1)
+
+    @pl.when(v_idx == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ids = ids_ref[...]  # (bb, L) int32 (global vocab ids)
+    w = w_ref[...]  # (bb, L) f32
+    bb = ids.shape[0]
+    base = v_idx * bv
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bb, bv), 1) + base  # (bb, bv)
+
+    def body(l, counts):
+        hit = (ids[:, l][:, None] == lanes).astype(jnp.float32)
+        return counts + hit * w[:, l][:, None]
+
+    counts = jax.lax.fori_loop(0, bag_len, body, jnp.zeros((bb, bv), jnp.float32))
+    acc_scr[...] += jax.lax.dot_general(
+        counts, tab_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(v_idx == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bv", "interpret"))
+def embedding_bag_pallas(table, ids, weights, *, bb: int = 128, bv: int = 512, interpret: bool = True):
+    """table (V, D), ids (B, L), weights (B, L) -> (B, D) f32 sum-bag.
+
+    B % bb == 0, V % bv == 0 (ops.py pads; padded ids point at a padded
+    zero row so they contribute nothing).
+    """
+    V, D = table.shape
+    B, L = ids.shape
+    grid = (B // bb, V // bv)
+    return pl.pallas_call(
+        functools.partial(_embag_kernel, bv=bv, bag_len=L),
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, L), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bb, L), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bv, D), lambda i, j: (j, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((bb, D), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
+        scratch_shapes=[pltpu.VMEM((bb, D), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(ids, weights, table)

@@ -1,0 +1,37 @@
+"""Jitted public wrapper for the embedding_bag kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, round_up, should_interpret
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def embedding_bag(table, ids, weights=None, mode: str = "sum", interpret: bool | None = None):
+    """EmbeddingBag via the Pallas multi-hot-matmul kernel.
+
+    table (V, D), ids (B, L) int32, optional weights (B, L).
+    Padded vocab rows are zero; padded batch rows are sliced off; ids are
+    left intact (they always fall inside the padded vocab range since
+    V_pad >= V > max id).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    V, D = table.shape
+    B, L = ids.shape
+    w = jnp.ones((B, L), jnp.float32) if weights is None else jnp.asarray(weights, jnp.float32)
+    bb = 128 if B >= 128 else 8
+    bv = 512 if V >= 512 else 128
+    tp = pad_to(pad_to(jnp.asarray(table), 0, bv), 1, 128)
+    ip = pad_to(jnp.asarray(ids, jnp.int32), 0, bb)
+    wp = pad_to(w, 0, bb)
+    out = embedding_bag_pallas(tp, ip, wp, bb=bb, bv=bv, interpret=interpret)
+    out = out[:B, :D]
+    if mode == "mean":
+        denom = jnp.sum(w, axis=1, keepdims=True) if weights is not None else jnp.full((B, 1), L, jnp.float32)
+        out = out / jnp.maximum(denom, 1e-9)
+    return out

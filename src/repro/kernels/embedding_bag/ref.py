@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for embedding_bag: gather + (weighted) sum reduce."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, weights=None, mode: str = "sum"):
+    """table (V, D), ids (B, L) int32, weights (B, L) or None -> (B, D).
+
+    The torch `nn.EmbeddingBag` semantic (sum/mean over the bag dim),
+    written as the obvious take + reduce. JAX has no native EmbeddingBag —
+    this op IS part of the system (kernel_taxonomy §RecSys).
+    """
+    emb = jnp.take(jnp.asarray(table), jnp.asarray(ids), axis=0)  # (B, L, D)
+    if weights is not None:
+        emb = emb * weights[..., None]
+    out = jnp.sum(emb, axis=1)
+    if mode == "mean":
+        denom = (
+            jnp.sum(weights, axis=1, keepdims=True)
+            if weights is not None
+            else jnp.full((ids.shape[0], 1), ids.shape[1], out.dtype)
+        )
+        out = out / jnp.maximum(denom, 1e-9)
+    return out

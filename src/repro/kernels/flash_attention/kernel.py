@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: FlashAttention-style blockwise attention (forward).
+
+The prefill hot spot of the LM model zoo (DESIGN.md §5): full-matrix
+attention at 32k materialises a (T, S) score tile per head (2 GB at bf16);
+the blockwise online-softmax schedule keeps live state at
+(bq, bk) + (bq, dh) in VMEM.
+
+Grid: (B * Hq, T / bq, S / bk). The kv axis is the innermost, *sequential*
+("arbitrary") dimension: scratch accumulators (m, l, acc) persist across
+kv steps and the normalised output is written on the last step. Causal
+masking supports the decode offset (S >= T), and GQA maps q-head h to
+kv-head h // (Hq / Hkv) in the BlockSpec index maps.
+
+This is the TPU-native adaptation of the paper-adjacent GPU kernel: same
+online softmax math, but tiled for VMEM/MXU (128-aligned blocks) instead
+of warp-level shared memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, causal, s_offset, bq, bk):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)  # (bk, dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bk)
+
+    if causal:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_idx * bq + s_offset
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1) + kv_idx * bk
+        s = jnp.where(rows >= cols, s, _NEG_INF)
+
+    m_prev = m_scr[...]  # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)  # (bk, dh)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, dh)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kv_idx == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "interpret", "scale")
+)
+def flash_attention_pallas(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+):
+    """q (B, Hq, T, dh); k, v (B, Hkv, S, dh) -> (B, Hq, T, dh).
+
+    T % bq == 0, S % bk == 0, dh lane-aligned (ops.py pads).
+    """
+    B, Hq, T, dh = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = Hq // Hkv
+    scale = scale if scale is not None else dh**-0.5
+    s_offset = S - T  # decode: queries sit at the end of the kv stream
+
+    qr = q.reshape(B * Hq, T, dh)
+    kr = k.reshape(B * Hkv, S, dh)
+    vr = v.reshape(B * Hkv, S, dh)
+
+    grid = (B * Hq, T // bq, S // bk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, s_offset=s_offset, bq=bq, bk=bk
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, T, dh), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec(
+                (1, bk, dh), lambda h, i, j, g=group: (h // g, j, 0), memory_space=pltpu.VMEM
+            ),
+            pl.BlockSpec(
+                (1, bk, dh), lambda h, i, j, g=group: (h // g, j, 0), memory_space=pltpu.VMEM
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bq, dh), lambda h, i, j: (h, i, 0), memory_space=pltpu.VMEM
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, T, dh)

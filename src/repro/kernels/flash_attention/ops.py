@@ -1,0 +1,38 @@
+"""Jitted public wrapper for the flash_attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, should_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, interpret: bool | None = None):
+    """GQA attention via the Pallas blockwise kernel.
+
+    q: (B, Hq, T, dh); k, v: (B, Hkv, S, dh). Pads T/S to 128 multiples
+    and dh to the lane width. Padded kv positions are masked out by
+    giving them -inf scores via a large negative key trick — here we
+    instead rely on causal masking plus explicit length slicing: padded
+    kv rows are zero, which would corrupt softmax, so we pad with the
+    query-side convention: extra kv columns get scores of exactly
+    q.(0-vector) = 0 ... To stay exact we require padding-free S and T
+    multiples of 128 from the model (the transformer configs use
+    128-aligned sequence lengths), and only dh is padded here (zero
+    padding of dh leaves q.k and p.v unchanged).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    dh = q.shape[-1]
+    if q.shape[2] % 128 or k.shape[2] % 128:
+        raise ValueError("flash_attention requires 128-aligned T and S")
+    scale = dh**-0.5  # scale by the TRUE head dim, pre-padding
+    qp = pad_to(q, 3, 128)
+    kp = pad_to(k, 3, 128)
+    vp = pad_to(v, 3, 128)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, scale=scale, interpret=interpret)
+    return out[..., :dh]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash_attention kernel: full-matrix attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Multi-head (optionally grouped-KV) attention, full score matrix.
+
+    q: (B, Hq, T, dh); k, v: (B, Hkv, S, dh) with Hq % Hkv == 0.
+    Returns (B, Hq, T, dh) in q's dtype; math in f32.
+    """
+    B, Hq, T, dh = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = scale if scale is not None else dh**-0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to match q heads
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    scores = jnp.einsum("bhtd,bhsd->bhts", qf, kf)
+    if causal:
+        # decode offset: query position i attends kv positions <= i + (S - T)
+        mask = jnp.arange(T)[:, None] + (S - T) >= jnp.arange(S)[None, :]
+        scores = jnp.where(mask, scores, -jnp.inf)
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bhts,bhsd->bhtd", w, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.kmeans_assign import ops, ref
+from repro.kernels.kmeans_assign.ops import kmeans_assign, kmeans_assign_with_dist
+
+__all__ = ["ops", "ref", "kmeans_assign", "kmeans_assign_with_dist"]

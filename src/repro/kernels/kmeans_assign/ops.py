@@ -1,0 +1,37 @@
+"""Jitted public wrapper for the fused K-Means assignment kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, round_up, should_interpret
+from repro.kernels.kmeans_assign.kernel import kmeans_assign_pallas
+
+# Padded centroid rows sit at +BIG in every coordinate so their distance
+# to any real point exceeds any real distance -> they never win argmin.
+_SENTINEL = 1e15
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kmeans_assign_with_dist(x, centroids, interpret: bool | None = None):
+    """Fused assignment: returns (labels (n,) int32, min_d2 (n,) f32)."""
+    if interpret is None:
+        interpret = should_interpret()
+    n, d = x.shape
+    k = centroids.shape[0]
+    bn = 512 if n >= 512 else 128
+    xp = pad_to(pad_to(jnp.asarray(x, jnp.float32), 0, bn), 1, 128)
+    cp = pad_to(jnp.asarray(centroids, jnp.float32), 1, 128)
+    kp = round_up(k, 128)
+    if kp != k:
+        pad_rows = jnp.full((kp - k, cp.shape[1]), _SENTINEL, jnp.float32)
+        cp = jnp.concatenate([cp, pad_rows], axis=0)
+    labels, mind = kmeans_assign_pallas(xp, cp, bn=bn, interpret=interpret)
+    return labels[:n], mind[:n]
+
+
+def kmeans_assign(x, centroids, interpret: bool | None = None):
+    """Labels only (drop-in for `repro.core.kmeans.assign`)."""
+    return kmeans_assign_with_dist(x, centroids, interpret=interpret)[0]

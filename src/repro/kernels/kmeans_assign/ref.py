@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused kmeans_assign kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x, centroids):
+    """x (n, d), centroids (k, d) -> (labels (n,) int32, min_d2 (n,) f32).
+
+    Ties broken toward the lower index (matches jnp.argmin semantics).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(centroids, jnp.float32)
+    d2 = jnp.sum((x[:, None, :] - c[None, :, :]) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32), jnp.min(d2, axis=-1)

@@ -1,0 +1,4 @@
+from repro.kernels.pairwise_l2 import ops, ref
+from repro.kernels.pairwise_l2.ops import pairwise_l2
+
+__all__ = ["ops", "ref", "pairwise_l2"]

@@ -1,0 +1,40 @@
+"""Jitted public wrapper for the pairwise_l2 kernel (pads + dispatches)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, round_up, should_interpret
+from repro.kernels.pairwise_l2.kernel import pairwise_l2_pallas
+
+_VMEM_BUDGET = 6 * 1024 * 1024  # bytes per tile set, conservative
+
+
+def _pick_blocks(n: int, m: int, d: int) -> tuple[int, int]:
+    """Largest (bn, bm) multiples of 128 (capped 512) fitting the budget."""
+    for b in (512, 384, 256, 128):
+        vmem = (2 * b * d + b * b) * 4
+        if vmem <= _VMEM_BUDGET:
+            return b, b
+    return 128, 128
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pairwise_l2(x, y, interpret: bool | None = None):
+    """Squared-L2 distance matrix (n, m) between x (n, d) and y (m, d).
+
+    Pads every dim to hardware-aligned multiples (zero-padding leaves
+    squared-L2 of real rows unchanged), dispatches to the Pallas kernel,
+    slices the result back.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    n, d = x.shape
+    m = y.shape[0]
+    bn, bm = _pick_blocks(n, m, d)
+    xp = pad_to(pad_to(jnp.asarray(x), 0, bn), 1, 128)
+    yp = pad_to(pad_to(jnp.asarray(y), 0, bm), 1, 128)
+    out = pairwise_l2_pallas(xp, yp, bn=bn, bm=bm, interpret=interpret)
+    return out[:n, :m]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the pairwise_l2 kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_l2_ref(x, y):
+    """Squared Euclidean distances: x (n, d), y (m, d) -> (n, m) f32.
+
+    Direct (non-decomposed) form — the numerically straightforward oracle
+    the kernel is checked against.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)

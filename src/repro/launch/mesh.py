@@ -1,0 +1,46 @@
+"""Production meshes (TPU v5e pods).
+
+Importing this module never touches jax device state —
+`make_production_mesh` is a function, called only by the launcher after
+device initialisation (dryrun.py sets the 512-placeholder-device flag
+BEFORE any jax import).
+
+Topology:
+  single-pod:  (16, 16)    axes ("data", "model")          — 256 chips
+  multi-pod:   (2, 16, 16) axes ("pod", "data", "model")   — 512 chips
+
+The model axis (16) matches the v5e ICI torus dimension so tensor/expert
+parallel collectives stay on-pod; the pod axis carries only data-parallel
+gradient all-reduces (DCN-friendly).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests, examples)."""
+    n = len(jax.devices())
+    dp = max(1, n // model_parallel)
+    return jax.make_mesh(
+        (dp, model_parallel),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+HW = dict(
+    name="tpu-v5e",
+    peak_bf16_flops=197e12,  # per chip
+    hbm_bw=819e9,  # bytes/s per chip
+    ici_bw=50e9,  # bytes/s per link (~ per-chip injection, one direction)
+    hbm_bytes=16 * 1024**3,
+)

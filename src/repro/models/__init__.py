@@ -1,0 +1,3 @@
+from repro.models import gnn, layers, moe, recsys, transformer
+
+__all__ = ["gnn", "layers", "moe", "recsys", "transformer"]

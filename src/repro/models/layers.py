@@ -1,0 +1,307 @@
+"""Transformer building blocks: RMSNorm, RoPE, SwiGLU, chunked attention.
+
+All functions are parameter-dict based (no framework), f32 math on bf16
+storage, and shard transparently under pjit: batch dims follow the data
+axes, head/ffn dims follow the model axis (repro.distributed.sharding).
+
+Attention has three execution paths:
+  * `full_attention`    — materialises (T, S) scores; fine to ~4k.
+  * `chunked_attention` — Rabe–Staats online-softmax double-scan; live
+    memory (bq, bk) per (batch, head); the path the big dry-run shapes
+    compile through. Mathematically identical to full attention.
+  * Pallas `flash_attention` kernel — the TPU target of the same
+    schedule (repro.kernels.flash_attention); selected via cfg.use_pallas
+    on real TPU runs, validated in interpret mode in tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_angles(positions: Array, head_dim: int, theta: float = 10000.0):
+    """cos/sin tables for RoPE. positions (…,) -> (…, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (…, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (B, H, T, dh); cos/sin (B, T, dh/2) or (T, dh/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (T, half) -> broadcast over B, H
+        cos_b, sin_b = cos[None, None], sin[None, None]
+    else:  # (B, T, half) -> broadcast over H
+        cos_b, sin_b = cos[:, None], sin[:, None]
+    out1 = x1 * cos_b - x2 * sin_b
+    out2 = x2 * cos_b + x1 * sin_b
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+_NEG_INF = -1e30
+
+
+def full_attention(
+    q: Array, k: Array, v: Array, *, causal: bool, q_offset: int | Array = 0
+) -> Array:
+    """q (B,Hq,T,dh), k/v (B,Hkv,S,dh) -> (B,Hq,T,dh). Materialises scores."""
+    B, Hq, T, dh = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32) * (dh**-0.5)
+    # fold groups into the kv head dim: (B, Hkv, group, T, dh)
+    qf = qf.reshape(B, Hkv, group, T, dh)
+    scores = jnp.einsum("bhgtd,bhsd->bhgts", qf, k.astype(jnp.float32))
+    if causal:
+        qpos = jnp.arange(T) + q_offset
+        mask = qpos[:, None] >= jnp.arange(S)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", w, v.astype(jnp.float32))
+    return out.reshape(B, Hq, T, dh).astype(q.dtype)
+
+
+def _attn_fwd_blocks(qf, kf, vf, *, causal, q_offset, q_chunk, kv_chunk, km):
+    """Blockwise online-softmax forward. qf (B,Hkv,g,T,dh) pre-scaled f32;
+    kf/vf (B,Hkv,S,dh) f32. Returns (out (…,T,dh), lse (…,T,1))."""
+    B, Hkv, group, T, dh = qf.shape
+    S = kf.shape[2]
+    nq, nk = T // q_chunk, S // kv_chunk
+    qr = jnp.moveaxis(qf.reshape(B, Hkv, group, nq, q_chunk, dh), 3, 0)
+    kr = jnp.moveaxis(kf.reshape(B, Hkv, nk, kv_chunk, dh), 2, 0)
+    vr = jnp.moveaxis(vf.reshape(B, Hkv, nk, kv_chunk, dh), 2, 0)
+
+    def q_block(args):
+        qi, qc = args[0], args[1]
+        qpos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            s = jnp.einsum("bhgqd,bhsd->bhgqs", qc, inp["k"])
+            kpos = inp["i"] * kv_chunk + jnp.arange(kv_chunk)
+            if causal:
+                s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None], s, _NEG_INF)
+            if km is not None:
+                s = jnp.where(inp["m"][:, None, None, None, :], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum("bhgqs,bhsd->bhgqd", p, inp["v"])
+            return (m_new, l_new, acc_new), None
+
+        shape = (B, Hkv, group, q_chunk, 1)
+        init = (
+            jnp.full(shape, _NEG_INF, jnp.float32),
+            jnp.zeros(shape, jnp.float32),
+            jnp.zeros((B, Hkv, group, q_chunk, dh), jnp.float32),
+        )
+        xs = {"i": jnp.arange(nk), "k": kr, "v": vr}
+        if km is not None:
+            xs["m"] = jnp.moveaxis(km, 1, 0)
+        (m, l, acc), _ = jax.lax.scan(kv_block, init, xs)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return acc / jnp.maximum(l, 1e-30), lse
+
+    out, lse = jax.lax.map(q_block, (jnp.arange(nq), qr))
+    out = jnp.moveaxis(out, 0, 3).reshape(B, Hkv, group, T, dh)
+    lse = jnp.moveaxis(lse, 0, 3).reshape(B, Hkv, group, T, 1)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _chunked_attention_core(qf, kf, vf, causal, q_offset, q_chunk, kv_chunk):
+    with jax.named_scope("flash_attention_region"):
+        out, _ = _attn_fwd_blocks(
+            qf, kf, vf, causal=causal, q_offset=q_offset, q_chunk=q_chunk, kv_chunk=kv_chunk, km=None
+        )
+    return out
+
+
+def _core_fwd(qf, kf, vf, causal, q_offset, q_chunk, kv_chunk):
+    with jax.named_scope("flash_attention_region"):
+        out, lse = _attn_fwd_blocks(
+            qf, kf, vf, causal=causal, q_offset=q_offset, q_chunk=q_chunk, kv_chunk=kv_chunk, km=None
+        )
+    return out, (qf, kf, vf, out, lse)
+
+
+def _core_bwd(causal, q_offset, q_chunk, kv_chunk, res, do):
+    """FlashAttention-style backward: recompute p blockwise from the saved
+    logsumexp — the (T, S) probability matrix is never materialised, which
+    is what keeps the 32k-token backward inside HBM (the naive scan VJP
+    stacks every kv-chunk's p: full T x S x f32)."""
+    with jax.named_scope("flash_attention_region"):
+        return _core_bwd_impl(causal, q_offset, q_chunk, kv_chunk, res, do)
+
+
+def _core_bwd_impl(causal, q_offset, q_chunk, kv_chunk, res, do):
+    qf, kf, vf, out, lse = res
+    B, Hkv, group, T, dh = qf.shape
+    S = kf.shape[2]
+    nq, nk = T // q_chunk, S // kv_chunk
+    delta = jnp.sum(do * out, axis=-1, keepdims=True)  # (B,Hkv,g,T,1)
+
+    qr = jnp.moveaxis(qf.reshape(B, Hkv, group, nq, q_chunk, dh), 3, 0)
+    dor = jnp.moveaxis(do.reshape(B, Hkv, group, nq, q_chunk, dh), 3, 0)
+    lser = jnp.moveaxis(lse.reshape(B, Hkv, group, nq, q_chunk, 1), 3, 0)
+    deltar = jnp.moveaxis(delta.reshape(B, Hkv, group, nq, q_chunk, 1), 3, 0)
+    kr = jnp.moveaxis(kf.reshape(B, Hkv, nk, kv_chunk, dh), 2, 0)
+    vr = jnp.moveaxis(vf.reshape(B, Hkv, nk, kv_chunk, dh), 2, 0)
+
+    def kv_block(carry, inp):
+        dq_acc = carry
+        ki, kc, vc = inp["i"], inp["k"], inp["v"]
+        kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+
+        def q_block(carry2, qinp):
+            dkc, dvc = carry2
+            qi, qc, doc, lsec, dc = qinp["i"], qinp["q"], qinp["do"], qinp["lse"], qinp["d"]
+            s = jnp.einsum("bhgqd,bhsd->bhgqs", qc, kc)
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+                s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None], s, _NEG_INF)
+            p = jnp.exp(s - lsec)  # (B,Hkv,g,qc,kc)
+            dvc = dvc + jnp.einsum("bhgqs,bhgqd->bhsd", p, doc)
+            dp = jnp.einsum("bhgqd,bhsd->bhgqs", doc, vc)
+            ds = p * (dp - dc)
+            dq_c = jnp.einsum("bhgqs,bhsd->bhgqd", ds, kc)
+            dkc = dkc + jnp.einsum("bhgqs,bhgqd->bhsd", ds, qc)
+            return (dkc, dvc), dq_c
+
+        init2 = (jnp.zeros_like(kc), jnp.zeros_like(vc))
+        (dkc, dvc), dq_chunks = jax.lax.scan(
+            q_block,
+            init2,
+            {"i": jnp.arange(nq), "q": qr, "do": dor, "lse": lser, "d": deltar},
+        )
+        # dq_chunks: (nq, B, Hkv, g, q_chunk, dh) — this kv chunk's dq share
+        return dq_acc + dq_chunks, (dkc, dvc)
+
+    dq0 = jnp.zeros((nq, B, Hkv, group, q_chunk, dh), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(
+        kv_block, dq0, {"i": jnp.arange(nk), "k": kr, "v": vr}
+    )
+    # dk/dv stacked per kv chunk: (nk, B, Hkv, kv_chunk, dh)
+    dq = jnp.moveaxis(dq, 0, 3).reshape(B, Hkv, group, T, dh)
+    dk = jnp.moveaxis(dk, 0, 2).reshape(B, Hkv, S, dh)
+    dv = jnp.moveaxis(dv, 0, 2).reshape(B, Hkv, S, dh)
+    return dq, dk, dv
+
+
+_chunked_attention_core.defvjp(_core_fwd, _core_bwd)
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool,
+    q_offset: int | Array = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    kv_mask: Optional[Array] = None,
+) -> Array:
+    """Online-softmax attention, O(q_chunk * kv_chunk) live scores.
+
+    ``q_offset`` places the query block inside the kv stream (decode).
+    ``kv_mask`` (B, S) optionally invalidates kv positions (padded cache).
+    The un-masked path uses a custom VJP (flash-style recompute backward);
+    the masked path (decode caches, not differentiated) uses plain scans.
+    """
+    B, Hq, T, dh = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    q_chunk = min(q_chunk, T)
+    kv_chunk = min(kv_chunk, S)
+    assert T % q_chunk == 0 and S % kv_chunk == 0, "chunk sizes must divide T, S"
+
+    qf = (q.astype(jnp.float32) * (dh**-0.5)).reshape(B, Hkv, group, T, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    if kv_mask is None:
+        out = _chunked_attention_core(qf, kf, vf, causal, q_offset, q_chunk, kv_chunk)
+    else:
+        km = kv_mask.reshape(B, S // kv_chunk, kv_chunk)
+        out, _ = _attn_fwd_blocks(
+            qf, kf, vf, causal=causal, q_offset=q_offset, q_chunk=q_chunk, kv_chunk=kv_chunk, km=km
+        )
+    return out.reshape(B, Hq, T, dh).astype(q.dtype)
+
+
+def attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    q_offset: int | Array = 0,
+    kv_mask: Optional[Array] = None,
+    impl: str = "auto",
+    chunk: int = 1024,
+) -> Array:
+    """Dispatcher. impl: auto|full|chunked|pallas."""
+    T, S = q.shape[2], k.shape[2]
+    if impl == "auto":
+        impl = "full" if (T * S <= 4096 * 4096 and kv_mask is None) else "chunked"
+    if T <= 16 and impl == "chunked":
+        # decode: (B, H, T<=16, S) scores are small and the full path
+        # contracts over a (possibly sequence-sharded) cache without a
+        # scan — pjit inserts the softmax/contraction collectives.
+        impl = "full_masked" if kv_mask is not None else "full"
+    if impl == "full_masked":
+        B, Hq, _, dh = q.shape
+        Hkv = k.shape[1]
+        group = Hq // Hkv
+        qf = (q.astype(jnp.float32) * (dh**-0.5)).reshape(B, Hkv, group, T, dh)
+        scores = jnp.einsum("bhgtd,bhsd->bhgts", qf, k.astype(jnp.float32))
+        if causal:
+            qpos = jnp.arange(T) + q_offset
+            cmask = qpos[:, None] >= jnp.arange(S)[None, :]
+            scores = jnp.where(cmask[None, None, None], scores, _NEG_INF)
+        scores = jnp.where(kv_mask[:, None, None, None, :], scores, _NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgts,bhsd->bhgtd", w, v.astype(jnp.float32))
+        return out.reshape(B, Hq, T, dh).astype(q.dtype)
+    if impl == "full":
+        return full_attention(q, k, v, causal=causal, q_offset=q_offset)
+    if impl == "chunked":
+        # The named scope marks this region in HLO metadata: the roofline
+        # byte model applies flash-kernel semantics to it (score tensors
+        # are VMEM-resident in the Pallas kernel; only q/k/v/o stream
+        # through HBM) — analysis/hlo_cost.py `attn_scope`.
+        with jax.named_scope("flash_attention_region"):
+            return chunked_attention(
+                q, k, v, causal=causal, q_offset=q_offset, q_chunk=chunk, kv_chunk=chunk, kv_mask=kv_mask
+            )
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        if kv_mask is not None:
+            raise NotImplementedError("pallas path handles dense caches only")
+        return fa_ops.flash_attention(q, k, v, causal=causal)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ------------------------------------------------------------------ SwiGLU
+def swiglu(x: Array, w1: Array, w3: Array, w2: Array) -> Array:
+    """LLaMA-style gated MLP: (silu(x@w1) * (x@w3)) @ w2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2

@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based dispatch.
+
+Covers both assigned MoE archs:
+  * phi3.5-moe   — 16 experts, top-2, no shared experts
+  * deepseek-moe — 64 fine-grained routed experts top-6 + 2 shared experts
+
+Dispatch is the TPU-friendly sort-based schedule (MegaBlocks-style,
+adapted from block-sparse GPU GEMMs to dense grouped einsums):
+
+  1. top-k gate -> (T*k) (token, expert) pairs,
+  2. stable-sort pairs by expert id -> expert-contiguous order,
+  3. rank-within-expert via position - searchsorted(expert_start),
+  4. scatter token rows into an (E, capacity, d) buffer (overflow drops,
+     like GShard capacity-factor routing),
+  5. one grouped einsum per FFN matrix: (E, C, d) x (E, d, f) -> (E, C, f),
+  6. scatter-add back through the inverse permutation, weighted by gate.
+
+Everything is static-shape; under pjit the (E, …) dims shard over the
+model axis (expert parallelism) and XLA inserts the token all-to-alls.
+
+Router z-loss + load-balancing auxiliary loss are returned for training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class MoEOutput(NamedTuple):
+    out: Array  # (T, d)
+    aux_loss: Array  # scalar load-balance loss
+    router_z_loss: Array  # scalar
+
+
+def moe_ffn(
+    x: Array,  # (T, d) flattened tokens
+    router_w: Array,  # (d, E)
+    w1: Array,  # (E, d, f)
+    w3: Array,  # (E, d, f)
+    w2: Array,  # (E, f, d)
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> MoEOutput:
+    T, d = x.shape
+    E = router_w.shape[1]
+    xf = x.astype(jnp.float32)
+
+    logits = xf @ router_w.astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- flatten (token, expert) pairs and group by expert
+    flat_expert = gate_idx.reshape(-1)  # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(T), top_k)  # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)  # expert-contiguous
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    capacity = int(max(1, capacity_factor * T * top_k / E))
+    # rank of each entry within its expert group
+    expert_start = jnp.searchsorted(sorted_expert, jnp.arange(E), side="left")
+    rank = jnp.arange(T * top_k) - expert_start[sorted_expert]
+    keep = rank < capacity
+
+    # ---- scatter tokens into the (E, C, d) dispatch buffer
+    slot = sorted_expert * capacity + rank  # (T*k,)
+    slot = jnp.where(keep, slot, E * capacity)  # overflow -> dropped row
+    buf = jnp.zeros((E * capacity + 1, d), x.dtype)
+    buf = buf.at[slot].set(x[sorted_token], mode="drop")
+    groups = buf[:-1].reshape(E, capacity, d)
+
+    # ---- grouped FFN (einsum over the expert dim shards via EP)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", groups, w1)) * jnp.einsum(
+        "ecd,edf->ecf", groups, w3
+    )
+    y = jnp.einsum("ecf,efd->ecd", h, w2)  # (E, C, d)
+
+    # ---- combine back, gate-weighted scatter-add over tokens
+    y_flat = y.reshape(E * capacity, d)
+    contrib = y_flat[jnp.minimum(slot, E * capacity - 1)]  # (T*k, d)
+    contrib = jnp.where(keep[:, None], contrib, 0.0) * sorted_gate[:, None].astype(x.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[sorted_token].add(contrib)
+
+    # ---- auxiliary losses (Switch-style)
+    me = jnp.mean(probs, axis=0)  # (E,) mean router prob
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32), axis=0
+    )  # top-1 load fraction
+    aux = E * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return MoEOutput(out=out, aux_loss=aux, router_z_loss=z)

@@ -1,0 +1,201 @@
+"""Expert-parallel MoE via shard_map + all-to-all (the production path).
+
+Why this exists: the dense sort-based dispatch (repro.models.moe) is
+correct but its global scatter/gather defeats GSPMD — the dry-run showed
+every device computing ALL experts (16x over-compute) and 7.7 TB of
+all-reduce per step on phi3.5-moe. The scalable schedule is the classic
+GShard/Switch one, written explicitly:
+
+  per device (tokens sharded over every mesh axis, experts sharded over
+  the model axis, expert weights replicated across data axes):
+
+    1. route locally: top-k gates for the local token block;
+    2. bucket (token, k) pairs by OWNER PEER on the model axis
+       (peer p owns experts [p*E_loc, (p+1)*E_loc)), capacity-bounded
+       send buffer (n_peers, C_send, d);
+    3. `lax.all_to_all` over the model axis — tokens travel to the
+       devices that hold their experts;
+    4. local dispatch: group received tokens by local expert (same
+       sort-based trick, now device-local), grouped einsum through the
+       E_loc local experts, scatter back to arrival order;
+    5. reverse all_to_all; combine with gates at the source.
+
+  Weight-gradient reduction across data-axis replicas is left to pjit
+  (the weights are replicated over data axes, so XLA inserts the psum).
+
+All shapes static; differentiable end-to-end (all_to_all has a transpose
+rule). Exactness vs. the dense reference is tested in
+tests/test_moe_ep.py on a host mesh (capacity permitting, same results).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+Array = jax.Array
+
+
+class EPConfig(NamedTuple):
+    mesh: Mesh
+    x_spec: P  # PartitionSpec of the (B, T, d) token tensor, e.g.
+    #            P(("pod","data"), "model", None) — T over the expert axis
+    #            keeps every token block distinct (no duplicated routing)
+    expert_axis: str  # mesh axis the experts shard over ("model")
+    capacity_factor: float = 1.25
+
+
+def _local_group(
+    x: Array,  # (N, d) tokens to group
+    expert: Array,  # (N,) int32 local-expert id (E_loc)
+    valid: Array,  # (N,) bool
+    n_experts: int,
+    capacity: int,
+):
+    """Sort-based local dispatch -> (groups (E, C, d), slot (N,), keep (N,))."""
+    N, d = x.shape
+    key = jnp.where(valid, expert, n_experts)  # invalid -> overflow bucket
+    order = jnp.argsort(key, stable=True)
+    sorted_e = key[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    rank = jnp.arange(N) - start[jnp.minimum(sorted_e, n_experts - 1)]
+    keep = (rank < capacity) & (sorted_e < n_experts)
+    slot_sorted = jnp.where(keep, sorted_e * capacity + rank, n_experts * capacity)
+    # slot per ORIGINAL position
+    slot = jnp.zeros((N,), jnp.int32).at[order].set(slot_sorted.astype(jnp.int32))
+    buf = jnp.zeros((n_experts * capacity + 1, d), x.dtype)
+    buf = buf.at[slot].set(x, mode="drop")
+    return buf[:-1].reshape(n_experts, capacity, d), slot
+
+
+def moe_ffn_ep_local(
+    x: Array,  # (T_loc, d) this device's flattened tokens
+    router_w: Array,  # (d, E) replicated
+    w1: Array,  # (E_loc, d, f) this device's expert shard
+    w3: Array,
+    w2: Array,  # (E_loc, f, d)
+    *,
+    n_experts: int,
+    top_k: int,
+    expert_axis: str,
+    capacity_factor: float,
+):
+    """Body executed inside shard_map. Returns (out (T_loc, d), aux, z)."""
+    T_loc, d = x.shape
+    e_loc = w1.shape[0]
+    n_peers = n_experts // e_loc
+    xf = x.astype(jnp.float32)
+
+    logits = xf @ router_w.astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- bucket (token, k) pairs by owner peer
+    flat_expert = gate_idx.reshape(-1)  # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(T_loc), top_k)
+    peer = flat_expert // e_loc  # (T*k,)
+    c_send = max(1, int(capacity_factor * T_loc * top_k / n_peers))
+    order = jnp.argsort(peer, stable=True)
+    sorted_peer = peer[order]
+    start = jnp.searchsorted(sorted_peer, jnp.arange(n_peers), side="left")
+    rank = jnp.arange(T_loc * top_k) - start[jnp.minimum(sorted_peer, n_peers - 1)]
+    keep = rank < c_send
+    send_slot_sorted = jnp.where(keep, sorted_peer * c_send + rank, n_peers * c_send)
+    send_slot = jnp.zeros((T_loc * top_k,), jnp.int32).at[order].set(
+        send_slot_sorted.astype(jnp.int32)
+    )  # per (token,k) pair: its position in the send buffer (or overflow)
+
+    send_x = jnp.zeros((n_peers * c_send + 1, d), x.dtype)
+    send_x = send_x.at[send_slot].set(x[flat_token], mode="drop")
+    send_e = jnp.full((n_peers * c_send + 1,), e_loc, jnp.int32)  # local id at dest
+    send_e = send_e.at[send_slot].set((flat_expert % e_loc).astype(jnp.int32), mode="drop")
+
+    send_x = send_x[:-1].reshape(n_peers, c_send, d)
+    send_e = send_e[:-1].reshape(n_peers, c_send)
+
+    # ---- expert all-to-all
+    recv_x = jax.lax.all_to_all(send_x, expert_axis, split_axis=0, concat_axis=0, tiled=True)
+    recv_e = jax.lax.all_to_all(send_e, expert_axis, split_axis=0, concat_axis=0, tiled=True)
+    recv_x = recv_x.reshape(n_peers * c_send, d)
+    recv_e = recv_e.reshape(n_peers * c_send)
+
+    # ---- local grouped expert compute
+    cap2 = max(1, int(capacity_factor * n_peers * c_send / max(e_loc, 1)))
+    groups, slot2 = _local_group(recv_x, recv_e, recv_e < e_loc, e_loc, cap2)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", groups, w1)) * jnp.einsum(
+        "ecd,edf->ecf", groups, w3
+    )
+    y = jnp.einsum("ecf,efd->ecd", h, w2).reshape(e_loc * cap2, d)
+    # back to arrival order (dropped/invalid -> 0)
+    back = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
+    processed = back[jnp.minimum(slot2, e_loc * cap2)]
+    processed = jnp.where((slot2 < e_loc * cap2)[:, None], processed, 0.0)
+
+    # ---- return trip + combine
+    ret = processed.reshape(n_peers, c_send, d)
+    ret = jax.lax.all_to_all(ret, expert_axis, split_axis=0, concat_axis=0, tiled=True)
+    ret = ret.reshape(n_peers * c_send, d)
+    ret = jnp.concatenate([ret, jnp.zeros((1, d), ret.dtype)], axis=0)
+    contrib = ret[jnp.minimum(send_slot, n_peers * c_send)]  # (T*k, d)
+    ok = send_slot < n_peers * c_send
+    contrib = jnp.where(ok[:, None], contrib, 0.0) * gate_vals.reshape(-1, 1).astype(x.dtype)
+    out = jnp.zeros((T_loc, d), x.dtype).at[flat_token].add(contrib)
+
+    # ---- aux losses (global means via psum over the expert axis only;
+    # the data axes average out in the final loss mean)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], n_experts, dtype=jnp.float32), axis=0)
+    aux = n_experts * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, aux, z
+
+
+def moe_ffn_ep(
+    x: Array,  # (B, T, d) global
+    router_w: Array,  # (d, E)
+    w1: Array,  # (E, d, f) global
+    w3: Array,
+    w2: Array,
+    *,
+    top_k: int,
+    ep: EPConfig,
+):
+    """shard_map wrapper: tokens per ep.x_spec, experts over
+    ep.expert_axis. Returns ((B, T, d), aux, z)."""
+    B, T, d = x.shape
+    E = w1.shape[0]
+
+    def body(xb, rw, w1b, w3b, w2b):
+        xl = xb.reshape(-1, d)
+        out, aux, z = moe_ffn_ep_local(
+            xl,
+            rw,
+            w1b,
+            w3b,
+            w2b,
+            n_experts=E,
+            top_k=top_k,
+            expert_axis=ep.expert_axis,
+            capacity_factor=ep.capacity_factor,
+        )
+        aux = jax.lax.pmean(aux, ep.expert_axis)
+        z = jax.lax.pmean(z, ep.expert_axis)
+        return out.reshape(xb.shape), aux, z
+
+    fn = jax.shard_map(
+        body,
+        mesh=ep.mesh,
+        in_specs=(
+            ep.x_spec,
+            P(None, None),
+            P(ep.expert_axis, None, None),
+            P(ep.expert_axis, None, None),
+            P(ep.expert_axis, None, None),
+        ),
+        out_specs=(ep.x_spec, P(), P()),
+        check_vma=False,
+    )
+    return fn(x, router_w, w1, w3, w2)

@@ -1,0 +1,349 @@
+"""RecSys model zoo: Wide&Deep, xDeepFM (CIN), MIND, DLRM.
+
+Shared substrate:
+  * `EmbeddingTables` — one (vocab_f, dim) table per sparse field, fused
+    into a single stacked parameter with per-field row offsets, so one
+    lookup indexes one array and shards uniformly.
+  * Lookup is `jnp.take` (+ `segment_sum` for bags) — JAX has no native
+    EmbeddingBag; this substrate IS part of the system. The Pallas
+    `embedding_bag` kernel is the TPU hot-path variant for bag lookups.
+  * Under pjit the fused table shards row-wise over the model axis
+    (mod-sharded ownership inside shard_map for the explicit path —
+    repro.distributed.sharding.sharded_embedding_lookup).
+
+All four models expose:  init_params, forward(params, batch) -> logits,
+loss_fn (BCE for CTR; sampled-softmax for MIND retrieval), and a
+`user_embedding` / `item_embedding` pair where retrieval applies
+(MIND + DLRM-style two-tower scoring for the `retrieval_cand` shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------- embeddings
+def field_offsets(vocab_sizes: Sequence[int]) -> Array:
+    """Static per-field row offsets into the fused table (not a param —
+    int metadata derived from the config, kept out of the grad tree)."""
+    import numpy as np
+
+    return jnp.asarray(np.concatenate([[0], np.cumsum(vocab_sizes)[:-1]]), jnp.int32)
+
+
+def init_tables(key: Array, vocab_sizes: Sequence[int], dim: int, dtype=jnp.float32) -> Array:
+    """Fused per-field embedding tables -> one (sum(vocabs), dim) weight.
+
+    Rows are padded to a multiple of 512 so the fused table row-shards
+    evenly over any production mesh (2 x 16 x 16); padded rows are never
+    indexed (offsets cover only real vocab)."""
+    total = int(sum(vocab_sizes))
+    padded = ((total + 511) // 512) * 512
+    return (jax.random.normal(key, (padded, dim), jnp.float32) * dim**-0.5).astype(dtype)
+
+
+def lookup(weight: Array, vocab_sizes: Sequence[int], ids: Array) -> Array:
+    """ids (B, F) per-field single-hot -> (B, F, dim)."""
+    rows = ids + field_offsets(vocab_sizes)[None, :]
+    return jnp.take(weight, rows, axis=0)
+
+
+def bag_lookup(table: Array, ids: Array, weights: Optional[Array] = None, use_kernel: bool = False) -> Array:
+    """Multi-hot bag: table (V, D), ids (B, L) -> (B, D) sum-reduced."""
+    if use_kernel:
+        from repro.kernels.embedding_bag import ops as eb_ops
+
+        return eb_ops.embedding_bag(table, ids, weights)
+    emb = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        emb = emb * weights[..., None]
+    return jnp.sum(emb, axis=1)
+
+
+def _mlp_params(key: Array, dims: Sequence[int], dtype=jnp.float32) -> list:
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": (jax.random.normal(ks[i], (dims[i], dims[i + 1]), jnp.float32) * dims[i] ** -0.5).astype(dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        }
+        for i in range(len(dims) - 1)
+    ]
+
+
+def _mlp(params: list, x: Array, final_act: bool = False) -> Array:
+    for i, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+class Batch(NamedTuple):
+    dense: Array  # (B, n_dense) f32 (may be zero-width)
+    sparse: Array  # (B, F) int32 single-hot ids
+    history: Optional[Array]  # (B, L) int32 multi-hot bag (MIND) or None
+    target_item: Optional[Array]  # (B,) int32 (MIND) or None
+    label: Array  # (B,) f32 click labels
+
+
+def bce_loss(logits: Array, labels: Array):
+    logits = logits.astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"bce": loss}
+
+
+# ================================================================ Wide&Deep
+@dataclasses.dataclass(frozen=True)
+class WideDeepConfig:
+    name: str = "wide-deep"
+    n_sparse: int = 40
+    n_dense: int = 0
+    embed_dim: int = 32
+    mlp_dims: tuple = (1024, 512, 256)
+    vocab_sizes: tuple = ()
+    dtype: object = jnp.float32
+
+    def param_count(self) -> int:
+        total_vocab = sum(self.vocab_sizes)
+        deep_in = self.n_sparse * self.embed_dim + self.n_dense
+        dims = (deep_in,) + self.mlp_dims + (1,)
+        mlp = sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        return total_vocab * (self.embed_dim + 1) + mlp
+
+
+def widedeep_init(key: Array, cfg: WideDeepConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    deep_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    return {
+        "tables": init_tables(k1, cfg.vocab_sizes, cfg.embed_dim, cfg.dtype),
+        "wide": init_tables(k2, cfg.vocab_sizes, 1, cfg.dtype),  # per-id scalar weights
+        "mlp": _mlp_params(k3, (deep_in,) + cfg.mlp_dims + (1,), cfg.dtype),
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+
+
+def widedeep_forward(cfg: WideDeepConfig, params: dict, batch: Batch) -> Array:
+    emb = lookup(params["tables"], cfg.vocab_sizes, batch.sparse)  # (B, F, D)
+    deep_in = emb.reshape(emb.shape[0], -1)
+    if cfg.n_dense:
+        deep_in = jnp.concatenate([batch.dense.astype(cfg.dtype), deep_in], axis=-1)
+    deep = _mlp(params["mlp"], deep_in)[:, 0]
+    wide = jnp.sum(lookup(params["wide"], cfg.vocab_sizes, batch.sparse)[..., 0], axis=-1)
+    return (deep + wide + params["bias"]).astype(jnp.float32)
+
+
+# ================================================================== xDeepFM
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    n_dense: int = 0
+    embed_dim: int = 10
+    cin_layers: tuple = (200, 200, 200)
+    mlp_dims: tuple = (400, 400)
+    vocab_sizes: tuple = ()
+    dtype: object = jnp.float32
+
+    def param_count(self) -> int:
+        total_vocab = sum(self.vocab_sizes)
+        n = 0
+        h_prev, h0 = self.n_sparse, self.n_sparse
+        for h in self.cin_layers:
+            n += h * h_prev * h0
+            h_prev = h
+        deep_in = self.n_sparse * self.embed_dim + self.n_dense
+        dims = (deep_in,) + self.mlp_dims + (1,)
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        n += sum(self.cin_layers)  # CIN output linear
+        return total_vocab * (self.embed_dim + 1) + n
+
+
+def xdeepfm_init(key: Array, cfg: XDeepFMConfig) -> dict:
+    ks = jax.random.split(key, 5 + len(cfg.cin_layers))
+    cin = []
+    h_prev, h0 = cfg.n_sparse, cfg.n_sparse
+    for i, h in enumerate(cfg.cin_layers):
+        cin.append(
+            (jax.random.normal(ks[3 + i], (h, h_prev, h0), jnp.float32) * (h_prev * h0) ** -0.5).astype(cfg.dtype)
+        )
+        h_prev = h
+    deep_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    return {
+        "tables": init_tables(ks[0], cfg.vocab_sizes, cfg.embed_dim, cfg.dtype),
+        "linear": init_tables(ks[1], cfg.vocab_sizes, 1, cfg.dtype),
+        "cin": cin,
+        "cin_out": _mlp_params(ks[2], (sum(cfg.cin_layers), 1), cfg.dtype),
+        "mlp": _mlp_params(ks[-1], (deep_in,) + cfg.mlp_dims + (1,), cfg.dtype),
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+
+
+def xdeepfm_forward(cfg: XDeepFMConfig, params: dict, batch: Batch) -> Array:
+    x0 = lookup(params["tables"], cfg.vocab_sizes, batch.sparse)  # (B, H0, D)
+    xk = x0
+    pooled = []
+    for w in params["cin"]:  # w: (H, H_prev, H0)
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)  # (B, H_prev, H0, D)
+        xk = jnp.einsum("bhmd,nhm->bnd", z, w)  # (B, H, D)
+        pooled.append(jnp.sum(xk, axis=-1))  # (B, H)
+    cin_feat = jnp.concatenate(pooled, axis=-1)
+    cin_logit = _mlp(params["cin_out"], cin_feat)[:, 0]
+    deep_in = x0.reshape(x0.shape[0], -1)
+    if cfg.n_dense:
+        deep_in = jnp.concatenate([batch.dense.astype(cfg.dtype), deep_in], axis=-1)
+    deep_logit = _mlp(params["mlp"], deep_in)[:, 0]
+    lin_logit = jnp.sum(lookup(params["linear"], cfg.vocab_sizes, batch.sparse)[..., 0], axis=-1)
+    return (cin_logit + deep_logit + lin_logit + params["bias"]).astype(jnp.float32)
+
+
+# ===================================================================== MIND
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    item_vocab: int = 1_000_000
+    hist_len: int = 50
+    dtype: object = jnp.float32
+
+    def param_count(self) -> int:
+        return self.item_vocab * self.embed_dim + self.embed_dim * self.embed_dim
+
+
+def mind_init(key: Array, cfg: MINDConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    # rows padded to a 512 multiple so the table shards over any mesh
+    padded = ((cfg.item_vocab + 511) // 512) * 512
+    return {
+        "items": (jax.random.normal(k1, (padded, cfg.embed_dim), jnp.float32) * cfg.embed_dim**-0.5).astype(cfg.dtype),
+        "S": (jax.random.normal(k2, (cfg.embed_dim, cfg.embed_dim), jnp.float32) * cfg.embed_dim**-0.5).astype(cfg.dtype),
+    }
+
+
+def _squash(x: Array, axis: int = -1) -> Array:
+    n2 = jnp.sum(x.astype(jnp.float32) ** 2, axis=axis, keepdims=True)
+    return (n2 / (1 + n2) * x / jnp.sqrt(n2 + 1e-9)).astype(x.dtype)
+
+
+def mind_user_capsules(cfg: MINDConfig, params: dict, history: Array, hist_mask: Optional[Array] = None) -> Array:
+    """B2I dynamic routing: history (B, L) -> interest capsules (B, K, D)."""
+    e = jnp.take(params["items"], history, axis=0)  # (B, L, D)
+    eh = e @ params["S"]  # behavior->interest projection
+    B, Lh, D = eh.shape
+    K = cfg.n_interests
+    if hist_mask is None:
+        hist_mask = jnp.ones((B, Lh), jnp.float32)
+    b = jnp.zeros((B, K, Lh), jnp.float32)  # routing logits
+
+    caps = jnp.zeros((B, K, D), eh.dtype)
+    for _ in range(cfg.capsule_iters):
+        c = jax.nn.softmax(b, axis=1) * hist_mask[:, None, :]  # compete over capsules
+        caps = _squash(jnp.einsum("bkl,bld->bkd", c, eh.astype(jnp.float32)))
+        b = b + jnp.einsum("bkd,bld->bkl", caps, eh.astype(jnp.float32))
+    return caps.astype(cfg.dtype)
+
+
+def mind_score(cfg: MINDConfig, params: dict, caps: Array, item_ids: Array, pow_p: float = 2.0) -> Array:
+    """Label-aware attention score of items (B,) against capsules (B, K, D)."""
+    te = jnp.take(params["items"], item_ids, axis=0)  # (B, D)
+    sims = jnp.einsum("bkd,bd->bk", caps.astype(jnp.float32), te.astype(jnp.float32))
+    w = jax.nn.softmax(pow_p * sims, axis=-1)
+    return jnp.sum(w * sims, axis=-1)
+
+
+def mind_forward(cfg: MINDConfig, params: dict, batch: Batch) -> Array:
+    caps = mind_user_capsules(cfg, params, batch.history)
+    return mind_score(cfg, params, caps, batch.target_item).astype(jnp.float32)
+
+
+def mind_sampled_softmax_loss(cfg: MINDConfig, params: dict, batch: Batch, n_neg: int = 4096, key=None):
+    """Sampled softmax: positive vs. a shared in-batch negative block.
+
+    The negative pool is the first min(n_neg, B) rows' target items —
+    capping the pool keeps the similarity tensor at (B, K, n_neg) instead
+    of the quadratic (B, K, B) (65k^2 at the train_batch shape)."""
+    caps = mind_user_capsules(cfg, params, batch.history)  # (B, K, D)
+    b = batch.target_item.shape[0]
+    n_neg = min(n_neg, b)
+    pos_items = jnp.take(params["items"], batch.target_item, axis=0)  # (B, D)
+    neg_items = pos_items[:n_neg]  # (n_neg, D) shared pool
+    capsf = caps.astype(jnp.float32)
+    pos = jnp.max(jnp.einsum("bkd,bd->bk", capsf, pos_items.astype(jnp.float32)), axis=1)  # (B,)
+    neg = jnp.max(jnp.einsum("bkd,nd->bkn", capsf, neg_items.astype(jnp.float32)), axis=1)  # (B, n_neg)
+    # own-positive may appear in the pool for rows < n_neg; mask it out
+    row = jnp.arange(b)[:, None]
+    col = jnp.arange(n_neg)[None, :]
+    neg = jnp.where(row == col, -1e30, neg)
+    logits = jnp.concatenate([pos[:, None], neg], axis=1)  # (B, 1+n_neg)
+    loss = -jnp.mean(jax.nn.log_softmax(logits, axis=-1)[:, 0])
+    return loss, {"sampled_softmax": loss}
+
+
+def mind_retrieve(cfg: MINDConfig, params: dict, history: Array, candidates: Array, k: int = 100):
+    """Retrieval scoring: one user's capsules vs a candidate id block.
+
+    candidates (Ncand,) -> top-k ids + scores. Batched-dot, no loop; the
+    LMI-accelerated variant lives in repro.core (DESIGN.md §4).
+    """
+    caps = mind_user_capsules(cfg, params, history)  # (1, K, D)
+    ce = jnp.take(params["items"], candidates, axis=0)  # (Ncand, D)
+    sims = jnp.einsum("kd,nd->kn", caps[0].astype(jnp.float32), ce.astype(jnp.float32))
+    score = jnp.max(sims, axis=0)  # best interest per candidate
+    top, idx = jax.lax.top_k(score, k)
+    return candidates[idx], top
+
+
+# ===================================================================== DLRM
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    bot_mlp: tuple = (512, 256, 128)
+    top_mlp: tuple = (1024, 1024, 512, 256)
+    vocab_sizes: tuple = ()
+    dtype: object = jnp.float32
+
+    def param_count(self) -> int:
+        total_vocab = sum(self.vocab_sizes)
+        n = total_vocab * self.embed_dim
+        dims = (self.n_dense,) + self.bot_mlp
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        f = self.n_sparse + 1
+        top_in = f * (f - 1) // 2 + self.embed_dim
+        dims = (top_in,) + self.top_mlp + (1,)
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        return n
+
+
+def dlrm_init(key: Array, cfg: DLRMConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    f = cfg.n_sparse + 1
+    top_in = f * (f - 1) // 2 + cfg.embed_dim
+    return {
+        "tables": init_tables(k1, cfg.vocab_sizes, cfg.embed_dim, cfg.dtype),
+        "bot": _mlp_params(k2, (cfg.n_dense,) + cfg.bot_mlp, cfg.dtype),
+        "top": _mlp_params(k3, (top_in,) + cfg.top_mlp + (1,), cfg.dtype),
+    }
+
+
+def dlrm_forward(cfg: DLRMConfig, params: dict, batch: Batch) -> Array:
+    dense = _mlp(params["bot"], batch.dense.astype(cfg.dtype), final_act=True)  # (B, D)
+    emb = lookup(params["tables"], cfg.vocab_sizes, batch.sparse)  # (B, F, D)
+    feats = jnp.concatenate([dense[:, None, :], emb], axis=1)  # (B, F+1, D)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)  # (B, F+1, F+1)
+    f = feats.shape[1]
+    iu = jnp.triu_indices(f, k=1)
+    flat = inter[:, iu[0], iu[1]]  # (B, f(f-1)/2)
+    top_in = jnp.concatenate([dense, flat.astype(cfg.dtype)], axis=-1)
+    return _mlp(params["top"], top_in)[:, 0].astype(jnp.float32)

@@ -1,0 +1,465 @@
+"""Decoder-only transformer LM (dense + MoE), scan-over-layers, KV-cache.
+
+Covers the five assigned LM architectures (stablelm-1.6b,
+mistral-large-123b, starcoder2-15b, phi3.5-moe, deepseek-moe-16b):
+GQA + RoPE + RMSNorm + SwiGLU (or MoE FFN), tied or untied embeddings.
+
+Design choices for the 512-chip dry-run:
+  * layer parameters are stacked on a leading L axis and the forward is a
+    single `lax.scan` -> HLO size is layer-count independent (88-layer
+    mistral-large compiles in seconds);
+  * `jax.checkpoint` (remat) around the scanned layer body bounds
+    activation memory at train time;
+  * attention uses the chunked online-softmax path for big shapes
+    (layers.attention impl="auto"/"chunked"); the Pallas flash kernel is
+    the TPU-native equivalent;
+  * decode (`decode_step`) carries a static-shape KV cache
+    (L, B, Hkv, S_max, dh) x2 updated via dynamic_update_slice; attention
+    masks cache positions >= cur_len.
+
+Param pytree layout (all leaves bf16 by default):
+  embed:    (V, d)
+  layers:   dict of stacked (L, …) leaves — attention + ffn/moe + norms
+  final_norm: (d,)
+  lm_head:  (d, V) or absent when tied.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.moe import moe_ffn
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # --- MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    # --- misc
+    mlp_type: str = "swiglu"  # swiglu (3 mats) | gelu (2 mats, starcoder2)
+    # Megatron-SP: PartitionSpec for the (B, T, d) activations at layer
+    # boundaries, e.g. P(("pod","data"), "model", None). None = off.
+    act_sharding: Any = None
+    # head-parallel attention: PartitionSpecs for (B, H, T, dh) q and kv
+    # tensors. Pins the attention loops to local heads so no collective
+    # lands inside the kv scan (one boundary reshard per layer instead).
+    q_sharding: Any = None
+    kv_sharding: Any = None
+    # broadcast kv heads to the full q-head count before attention: the
+    # grouped 5D (B, Hkv, g, T, dh) layout defeats GSPMD when Hq shards
+    # over the model axis but Hkv/g don't divide it (mistral: 96 q / 8 kv
+    # on 16 devices -> "involuntary full rematerialization" all-gathers
+    # of the score tensors). Costs group-x kv bytes, keeps sharding clean.
+    gqa_repeat: bool = False
+    # (B, T, V) logits sharding — vocab-shards the f32 CE pipeline even
+    # when the head itself is replicated (DP strategy): 1.6 GiB -> 100 MiB
+    logits_sharding: Any = None
+    # chunked CE: when the batch is sharded over ALL mesh axes (DP) there
+    # is no axis left for the vocab dim; computing the loss in sequence
+    # chunks bounds the live f32 logits at (B, loss_chunk, V). 0 = off.
+    loss_chunk: int = 0
+    # expert parallelism: moe_ep.EPConfig — shard_map all-to-all dispatch
+    # (the dense fallback over-computes E/E_local-fold under GSPMD).
+    ep_config: Any = None
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_impl: str = "auto"  # auto|full|chunked|pallas
+    attn_chunk: int = 1024
+    aux_loss_weight: float = 0.01
+    z_loss_weight: float = 1e-3
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        """Total parameters N (for MODEL_FLOPS = 6*N*D roofline math)."""
+        d, dh = self.d_model, self.dh
+        attn = d * (self.n_heads * dh) + 2 * d * (self.n_kv_heads * dh) + (self.n_heads * dh) * d
+        n_mats = 2 if self.mlp_type == "gelu" else 3
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * self.d_ff_expert + d * self.n_experts
+            ffn += self.n_shared_experts * 3 * d * self.d_ff_expert
+        else:
+            ffn = n_mats * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        head = 0 if self.tie_embeddings else d * self.vocab_size
+        return self.n_layers * per_layer + self.vocab_size * d + d + head
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed top-k experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, dh = self.d_model, self.dh
+        attn = d * (self.n_heads * dh) + 2 * d * (self.n_kv_heads * dh) + (self.n_heads * dh) * d
+        ffn = (self.top_k + self.n_shared_experts) * 3 * d * self.d_ff_expert
+        ffn += d * self.n_experts
+        per_layer = attn + ffn + 2 * d
+        head = 0 if self.tie_embeddings else d * self.vocab_size
+        return self.n_layers * per_layer + self.vocab_size * d + d + head
+
+
+# ------------------------------------------------------------------ params
+def init_params(key: Array, cfg: TransformerConfig) -> dict:
+    """Materialise parameters (smoke tests / real training).
+
+    For the dry-run use `jax.eval_shape(lambda: init_params(key, cfg))` —
+    no allocation happens.
+    """
+    d, dh, Hq, Hkv = cfg.d_model, cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    Lc = cfg.n_layers
+    dt = cfg.dtype
+    k = jax.random.split(key, 16)
+
+    def norm(kk, *shape, scale=None):
+        scale = scale if scale is not None else (shape[-2] ** -0.5 if len(shape) >= 2 else 0.02)
+        return (jax.random.normal(kk, shape, jnp.float32) * scale).astype(dt)
+
+    layers: dict[str, Array] = {
+        "rms1": jnp.ones((Lc, d), dt),
+        "rms2": jnp.ones((Lc, d), dt),
+        "wq": norm(k[0], Lc, d, Hq * dh),
+        "wk": norm(k[1], Lc, d, Hkv * dh),
+        "wv": norm(k[2], Lc, d, Hkv * dh),
+        "wo": norm(k[3], Lc, Hq * dh, d),
+    }
+    if cfg.is_moe:
+        fe = cfg.d_ff_expert
+        layers.update(
+            router=norm(k[4], Lc, d, cfg.n_experts),
+            moe_w1=norm(k[5], Lc, cfg.n_experts, d, fe),
+            moe_w3=norm(k[6], Lc, cfg.n_experts, d, fe),
+            moe_w2=norm(k[7], Lc, cfg.n_experts, fe, d, scale=fe**-0.5),
+        )
+        if cfg.n_shared_experts:
+            fs = fe * cfg.n_shared_experts
+            layers.update(
+                shared_w1=norm(k[8], Lc, d, fs),
+                shared_w3=norm(k[9], Lc, d, fs),
+                shared_w2=norm(k[10], Lc, fs, d, scale=fs**-0.5),
+            )
+    elif cfg.mlp_type == "gelu":
+        layers.update(
+            w1=norm(k[4], Lc, d, cfg.d_ff),
+            w2=norm(k[6], Lc, cfg.d_ff, d, scale=cfg.d_ff**-0.5),
+        )
+    else:
+        layers.update(
+            w1=norm(k[4], Lc, d, cfg.d_ff),
+            w3=norm(k[5], Lc, d, cfg.d_ff),
+            w2=norm(k[6], Lc, cfg.d_ff, d, scale=cfg.d_ff**-0.5),
+        )
+    params = {
+        "embed": norm(k[11], cfg.vocab_size, d, scale=0.02),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = norm(k[12], d, cfg.vocab_size)
+    return params
+
+
+# ----------------------------------------------------------------- forward
+class LayerAux(NamedTuple):
+    aux_loss: Array
+    z_loss: Array
+
+
+def _layer_fwd(
+    cfg: TransformerConfig,
+    lp: dict,
+    x: Array,  # (B, T, d)
+    cos: Array,
+    sin: Array,
+    *,
+    causal: bool = True,
+    q_offset: int | Array = 0,
+    kv_cache: Optional[tuple[Array, Array]] = None,  # (B, Hkv, S, dh) x2
+    cache_pos: Optional[Array] = None,  # scalar int: current cache fill
+):
+    """One decoder layer. Returns (x_out, aux, new_kv)."""
+    B, T, d = x.shape
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+
+    h = L.rms_norm(x, lp["rms1"])
+    q = (h @ lp["wq"]).reshape(B, T, Hq, dh).transpose(0, 2, 1, 3)
+    kk = (h @ lp["wk"]).reshape(B, T, Hkv, dh).transpose(0, 2, 1, 3)
+    vv = (h @ lp["wv"]).reshape(B, T, Hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.gqa_repeat and Hkv != Hq and kv_cache is None:
+        kk = jnp.repeat(kk, Hq // Hkv, axis=1)
+        vv = jnp.repeat(vv, Hq // Hkv, axis=1)
+    if cfg.q_sharding is not None:
+        q = jax.lax.with_sharding_constraint(q, cfg.q_sharding)
+    if cfg.kv_sharding is not None:
+        kv_spec = cfg.q_sharding if (cfg.gqa_repeat and kv_cache is None) else cfg.kv_sharding
+        kk = jax.lax.with_sharding_constraint(kk, kv_spec)
+        vv = jax.lax.with_sharding_constraint(vv, kv_spec)
+    q = L.apply_rope(q, cos, sin)
+    kk = L.apply_rope(kk, cos, sin)
+
+    kv_mask = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        S = ck.shape[2]
+        ck = jax.lax.dynamic_update_slice(ck, kk.astype(ck.dtype), (0, 0, cache_pos, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vv.astype(cv.dtype), (0, 0, cache_pos, 0))
+        kk, vv = ck, cv
+        kv_mask = (jnp.arange(S) < cache_pos + T)[None, :].astype(bool)
+        kv_mask = jnp.broadcast_to(kv_mask, (B, S))
+        new_cache = (ck, cv)
+    else:
+        new_cache = None
+
+    attn = L.attention(
+        q,
+        kk,
+        vv,
+        causal=causal,
+        q_offset=q_offset,
+        kv_mask=kv_mask,
+        impl=cfg.attn_impl,
+        chunk=cfg.attn_chunk,
+    )
+    attn = attn.transpose(0, 2, 1, 3).reshape(B, T, Hq * dh)
+    x = x + attn @ lp["wo"]
+
+    h2 = L.rms_norm(x, lp["rms2"])
+    if cfg.is_moe:
+        if cfg.ep_config is not None:
+            from repro.models.moe_ep import moe_ffn_ep
+
+            ff, aux_loss, z_loss = moe_ffn_ep(
+                h2,
+                lp["router"],
+                lp["moe_w1"],
+                lp["moe_w3"],
+                lp["moe_w2"],
+                top_k=cfg.top_k,
+                ep=cfg.ep_config,
+            )
+            aux = LayerAux(aux_loss, z_loss)
+        else:
+            flat = h2.reshape(B * T, d)
+            res = moe_ffn(
+                flat,
+                lp["router"],
+                lp["moe_w1"],
+                lp["moe_w3"],
+                lp["moe_w2"],
+                top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+            )
+            ff = res.out.reshape(B, T, d)
+            aux = LayerAux(res.aux_loss, res.router_z_loss)
+        if cfg.n_shared_experts:
+            ff = ff + L.swiglu(h2, lp["shared_w1"], lp["shared_w3"], lp["shared_w2"])
+    elif cfg.mlp_type == "gelu":
+        ff = jax.nn.gelu(h2 @ lp["w1"]) @ lp["w2"]
+        aux = LayerAux(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    else:
+        ff = L.swiglu(h2, lp["w1"], lp["w3"], lp["w2"])
+        aux = LayerAux(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    return x + ff, aux, new_cache
+
+
+def forward(
+    cfg: TransformerConfig,
+    params: dict,
+    tokens: Array,  # (B, T) int32
+    positions: Optional[Array] = None,  # (T,) or (B, T)
+) -> tuple[Array, LayerAux]:
+    """Full forward -> (logits (B, T, V), aux). Training path (no cache)."""
+    B, T = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    pos = positions if positions is not None else jnp.arange(T)
+    cos, sin = L.rope_angles(pos, cfg.dh, cfg.rope_theta)
+
+    if cfg.act_sharding is not None:
+        # Megatron sequence parallelism: activations between layers are
+        # sharded on the sequence dim over the model axis; XLA inserts the
+        # all-gather into the TP region / reduce-scatter back. This is the
+        # lever that fits 88-layer scan carries in HBM (DESIGN.md §6).
+        x = jax.lax.with_sharding_constraint(x, cfg.act_sharding)
+
+    def body(carry, lp):
+        x = carry
+        if cfg.remat:
+            fwd = jax.checkpoint(
+                lambda lp_, x_: _layer_fwd(cfg, lp_, x_, cos, sin)[:2], static_argnums=()
+            )
+            x, aux = fwd(lp, x)
+        else:
+            x, aux, _ = _layer_fwd(cfg, lp, x, cos, sin)
+        if cfg.act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, cfg.act_sharding)
+        return x, aux
+
+    x, auxes = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(cfg.dtype)).astype(jnp.float32)
+    if cfg.logits_sharding is not None:
+        logits = jax.lax.with_sharding_constraint(logits, cfg.logits_sharding)
+    return logits, LayerAux(jnp.sum(auxes.aux_loss), jnp.sum(auxes.z_loss))
+
+
+def forward_hidden(
+    cfg: TransformerConfig, params: dict, tokens: Array
+) -> tuple[Array, LayerAux]:
+    """Forward up to the final norm (no LM head) -> ((B, T, d), aux)."""
+    B, T = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    cos, sin = L.rope_angles(jnp.arange(T), cfg.dh, cfg.rope_theta)
+    if cfg.act_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, cfg.act_sharding)
+
+    def body(carry, lp):
+        x = carry
+        if cfg.remat:
+            fwd = jax.checkpoint(lambda lp_, x_: _layer_fwd(cfg, lp_, x_, cos, sin)[:2])
+            x, aux = fwd(lp, x)
+        else:
+            x, aux, _ = _layer_fwd(cfg, lp, x, cos, sin)
+        if cfg.act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, cfg.act_sharding)
+        return x, aux
+
+    x, auxes = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"])
+    return x, LayerAux(jnp.sum(auxes.aux_loss), jnp.sum(auxes.z_loss))
+
+
+def loss_fn(cfg: TransformerConfig, params: dict, tokens: Array, targets: Array):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if cfg.loss_chunk:
+        x, aux = forward_hidden(cfg, params, tokens)
+        B, T, d = x.shape
+        nch = T // cfg.loss_chunk
+        xr = jnp.moveaxis(x.reshape(B, nch, cfg.loss_chunk, d), 1, 0)
+        tr = jnp.moveaxis(targets.reshape(B, nch, cfg.loss_chunk), 1, 0)
+
+        def chunk(nll_sum, inp):
+            xc, tc = inp
+            logits = (xc @ head.astype(cfg.dtype)).astype(jnp.float32)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+            return nll_sum + jnp.sum(nll), None
+
+        nll_sum, _ = jax.lax.scan(chunk, jnp.zeros((), jnp.float32), (xr, tr))
+        loss = nll_sum / (B * T)
+    else:
+        logits, aux = forward(cfg, params, tokens)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+    total = loss + cfg.aux_loss_weight * aux.aux_loss + cfg.z_loss_weight * aux.z_loss
+    return total, {"ce": loss, "aux": aux.aux_loss, "z": aux.z_loss}
+
+
+# ------------------------------------------------------------------ decode
+class KVCache(NamedTuple):
+    k: Array  # (L, B, Hkv, S_max, dh)
+    v: Array  # (L, B, Hkv, S_max, dh)
+    length: Array  # scalar int32 — filled positions
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None) -> KVCache:
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.dh)
+    return KVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt), length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(
+    cfg: TransformerConfig,
+    params: dict,
+    tokens: Array,  # (B, 1) int32 — the next token per sequence
+    cache: KVCache,
+) -> tuple[Array, KVCache]:
+    """One autoregressive step. Returns (logits (B, V), updated cache)."""
+    B = tokens.shape[0]
+    pos = cache.length  # scalar: all sequences aligned (batch decode)
+    x = params["embed"][tokens].astype(cfg.dtype)  # (B, 1, d)
+    cos, sin = L.rope_angles(pos[None], cfg.dh, cfg.rope_theta)  # (1, dh/2)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        x, _aux, new_cache = _layer_fwd(
+            cfg,
+            lp,
+            x,
+            cos,
+            sin,
+            causal=False,  # single query attends to the whole valid cache
+            q_offset=pos,
+            kv_cache=(ck, cv),
+            cache_pos=pos,
+        )
+        return x, new_cache
+
+    x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0, :] @ head.astype(cfg.dtype)).astype(jnp.float32)
+    return logits, KVCache(k=new_k, v=new_v, length=cache.length + 1)
+
+
+def prefill(
+    cfg: TransformerConfig,
+    params: dict,
+    tokens: Array,
+    max_len: int,
+    full_logits: bool = True,
+) -> tuple[Array, KVCache]:
+    """Prefill a prompt, building the cache. Returns (logits, cache).
+
+    ``full_logits=False`` (serving) applies the LM head only at the last
+    position — at 32k x 100k-vocab the full (B, T, V) f32 logits tensor
+    is the single largest allocation in the serve path, and only the last
+    position is consumed by the sampler.
+    """
+    B, T = tokens.shape
+    cache = init_cache(cfg, B, max_len)
+    x = params["embed"][tokens].astype(cfg.dtype)
+    cos, sin = L.rope_angles(jnp.arange(T), cfg.dh, cfg.rope_theta)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        x, _aux, new_cache = _layer_fwd(
+            cfg, lp, x, cos, sin, causal=True, q_offset=0, kv_cache=(ck, cv), cache_pos=jnp.asarray(0)
+        )
+        return x, new_cache
+
+    x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    x = L.rms_norm(x, params["final_norm"])
+    if not full_logits:
+        x = x[:, -1:, :]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(cfg.dtype)).astype(jnp.float32)
+    if not full_logits:
+        logits = logits[:, 0, :]
+    return logits, KVCache(k=new_k, v=new_v, length=jnp.asarray(T, jnp.int32))

@@ -1,0 +1,25 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    apply_updates,
+    chain_clip,
+    clip_by_global_norm,
+    constant_schedule,
+    global_norm,
+    linear_warmup_cosine_decay,
+    sgd,
+)
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "adamw",
+    "apply_updates",
+    "chain_clip",
+    "clip_by_global_norm",
+    "constant_schedule",
+    "global_norm",
+    "linear_warmup_cosine_decay",
+    "sgd",
+]

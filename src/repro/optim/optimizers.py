@@ -1,0 +1,182 @@
+"""Tree-based optimizers (no optax): SGD, Adam, AdamW + schedules + clipping.
+
+API mirrors the optax gradient-transformation convention so the training
+loop composes them uniformly:
+
+    opt = adamw(lr_schedule, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All states are pytrees of arrays -> they checkpoint, shard, and `lax.scan`
+like any other model state.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Any
+Schedule = Callable[[Array], Array]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[..., tuple[Params, Any]]
+
+
+def _lr_at(lr: ScalarOrSchedule, count: Array) -> Array:
+    if callable(lr):
+        return lr(count)
+    return jnp.asarray(lr)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: Params) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> tuple[Params, Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+# ---------------------------------------------------------------- schedules
+def constant_schedule(value: float) -> Schedule:
+    return lambda count: jnp.asarray(value)
+
+
+def linear_warmup_cosine_decay(
+    peak_lr: float, warmup_steps: int, total_steps: int, end_lr_frac: float = 0.1
+) -> Schedule:
+    def sched(count):
+        count = jnp.asarray(count, jnp.float32)
+        warm = peak_lr * count / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip(
+            (count - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (end_lr_frac + (1 - end_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(count < warmup_steps, warm, cos)
+
+    return sched
+
+
+# ---------------------------------------------------------------- optimizers
+class SGDState(NamedTuple):
+    count: Array
+    momentum: Optional[Params]
+
+
+def sgd(lr: ScalarOrSchedule, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    use_mom = momentum != 0.0
+
+    def init(params):
+        mom = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params) if use_mom else None
+        return SGDState(count=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params=None):
+        step_lr = _lr_at(lr, state.count)
+        if use_mom:
+            new_mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.momentum, grads
+            )
+            if nesterov:
+                upd = jax.tree.map(
+                    lambda m, g: -step_lr * (momentum * m + g.astype(jnp.float32)), new_mom, grads
+                )
+            else:
+                upd = jax.tree.map(lambda m: -step_lr * m, new_mom)
+            return upd, SGDState(count=state.count + 1, momentum=new_mom)
+        upd = jax.tree.map(lambda g: -step_lr * g.astype(jnp.float32), grads)
+        return upd, SGDState(count=state.count + 1, momentum=None)
+
+    return Optimizer(init=init, update=update)
+
+
+class AdamState(NamedTuple):
+    count: Array
+    mu: Params
+    nu: Params
+
+
+def adam(
+    lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamState(
+            count=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(z, params),
+            nu=jax.tree.map(z, params),
+        )
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        step_lr = _lr_at(lr, state.count)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+        )
+        bc1 = 1 - b1**count.astype(jnp.float32)
+        bc2 = 1 - b2**count.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v: -step_lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+        )
+        return upd, AdamState(count=count, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(
+    lr: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    mask: Optional[Callable[[Params], Params]] = None,
+) -> Optimizer:
+    """Adam with decoupled weight decay. ``mask(params)`` returns a tree of
+    bools selecting which leaves are decayed (default: ndim >= 2)."""
+    base = adam(lr, b1, b2, eps)
+
+    def default_mask(params):
+        return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+    def init(params):
+        return base.init(params)
+
+    def update(grads, state, params):
+        upd, new_state = base.update(grads, state, params)
+        step_lr = _lr_at(lr, state.count)
+        m = (mask or default_mask)(params)
+        upd = jax.tree.map(
+            lambda u, p, keep: u - step_lr * weight_decay * p.astype(jnp.float32) * keep,
+            upd,
+            params,
+            m,
+        )
+        return upd, new_state
+
+    return Optimizer(init=init, update=update)
+
+
+def chain_clip(optimizer: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm gradient clipping."""
+
+    def init(params):
+        return optimizer.init(params)
+
+    def update(grads, state, params=None):
+        grads, _ = clip_by_global_norm(grads, max_norm)
+        return optimizer.update(grads, state, params)
+
+    return Optimizer(init=init, update=update)

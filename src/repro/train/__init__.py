@@ -1,0 +1,3 @@
+from repro.train.loop import TrainLoopConfig, TrainState, make_train_step, run
+
+__all__ = ["TrainLoopConfig", "TrainState", "make_train_step", "run"]

@@ -1,0 +1,126 @@
+"""The training driver: jit-compiled step + checkpoint/restart + stragglers.
+
+Generic over model families: the caller provides
+  * `loss_fn(params, batch) -> (loss, metrics)`,
+  * an optimizer from repro.optim,
+  * optionally a mesh + sharding spec trees (single-device otherwise),
+and gets a fault-tolerant loop:
+
+  state = TrainState(params, opt_state, step, rng)
+  for step: batch -> grads (optionally microbatched) -> update
+  checkpoints every `interval` steps (and on SIGTERM), resumes exactly,
+  flags stragglers via StepTimer and triggers the re-mesh policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.collectives import microbatch_grads
+from repro.distributed.fault_tolerance import RestartManager, StepTimer
+from repro.optim.optimizers import Optimizer, apply_updates
+
+log = logging.getLogger("repro.train")
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_interval: int = 50
+    ckpt_keep: int = 3
+    n_microbatches: int = 1
+    log_every: int = 10
+
+
+def make_train_step(
+    loss_fn: Callable, optimizer: Optimizer, n_microbatches: int = 1
+) -> Callable:
+    """Builds the jit-able (state, batch) -> (state, metrics) step."""
+
+    def step_fn(state: TrainState, batch: Any):
+        if n_microbatches > 1:
+            loss, metrics, grads = microbatch_grads(
+                loss_fn, state.params, batch, n_microbatches
+            )
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch
+            )
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return step_fn
+
+
+def run(
+    loss_fn: Callable,
+    optimizer: Optimizer,
+    init_params: Any,
+    data_iter,
+    cfg: TrainLoopConfig,
+    mesh=None,
+    donate: bool = True,
+) -> tuple[TrainState, list[dict]]:
+    """Run the loop; returns (final_state, metric history)."""
+    state = TrainState(
+        params=init_params,
+        opt_state=optimizer.init(init_params),
+        step=jnp.zeros((), jnp.int32),
+    )
+    manager = (
+        RestartManager(cfg.ckpt_dir, interval=cfg.ckpt_interval, keep=cfg.ckpt_keep)
+        if cfg.ckpt_dir
+        else None
+    )
+    start_step = 0
+    if manager is not None:
+        resumed_step, state = manager.resume(state)
+        if resumed_step is not None:
+            start_step = resumed_step
+            log.info("resumed from checkpoint step %d", start_step)
+            if hasattr(data_iter, "step"):
+                data_iter.step = start_step
+
+    step_fn = make_train_step(loss_fn, optimizer, cfg.n_microbatches)
+    jit_kwargs = {"donate_argnums": (0,)} if donate else {}
+    step_fn = jax.jit(step_fn, **jit_kwargs)
+
+    timer = StepTimer()
+    history: list[dict] = []
+    for step in range(start_step, cfg.total_steps):
+        batch = next(data_iter)
+        timer.start()
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt, straggler = timer.stop()
+        if manager is not None and manager.note_straggler(straggler):
+            log.warning("straggler policy triggered at step %d: checkpoint + re-mesh", step)
+            manager.save(step + 1, state)
+        if (step + 1) % cfg.log_every == 0 or step == start_step:
+            row = {k: float(v) for k, v in metrics.items()}
+            row.update(step=step + 1, sec_per_step=dt)
+            history.append(row)
+            log.info("step %d: %s", step + 1, row)
+        if manager is not None and manager.should_checkpoint(step + 1):
+            manager.save(step + 1, state)
+            if manager.preempted:
+                log.warning("preempted: checkpointed at step %d, exiting", step + 1)
+                break
+    if manager is not None:
+        manager.save(cfg.total_steps, state)
+    return state, history

@@ -1,0 +1,40 @@
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def protein_ds():
+    """Small shared synthetic protein dataset (kept tiny for CI speed)."""
+    from repro.data.proteins import ProteinGenConfig, generate_dataset
+
+    return generate_dataset(0, ProteinGenConfig(n_proteins=800, n_families=25, max_length=192))
+
+
+@pytest.fixture(scope="session")
+def protein_embeddings(protein_ds):
+    import jax.numpy as jnp
+
+    from repro.core.embedding import EmbeddingConfig, embed_dataset
+
+    return embed_dataset(
+        jnp.asarray(protein_ds.coords), jnp.asarray(protein_ds.lengths), EmbeddingConfig()
+    )
+
+
+@pytest.fixture(scope="session")
+def small_lmi(key, protein_embeddings):
+    from repro.core import lmi
+
+    return lmi.build(key, protein_embeddings, arities=(8, 8), model_type="kmeans")

@@ -1,0 +1,94 @@
+"""Attention path equivalences: full vs chunked vs Pallas; grads; decode."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import attention, chunked_attention, full_attention
+
+RNG = np.random.default_rng(0)
+
+
+def _qkv(B=2, Hq=4, Hkv=2, T=128, S=128, dh=32):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, T, dh)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, dh)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, dh)).astype(np.float32))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("chunks", [(32, 32), (64, 128), (128, 64)])
+def test_chunked_equals_full(causal, chunks):
+    q, k, v = _qkv()
+    qc, kc = chunks
+    got = chunked_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    want = full_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_chunked_grads_equal_full():
+    q, k, v = _qkv(T=64, S=64)
+
+    def lc(q, k, v):
+        return jnp.sum(chunked_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=32) ** 2)
+
+    def lf(q, k, v):
+        return jnp.sum(full_attention(q, k, v, causal=True) ** 2)
+
+    gc = jax.grad(lc, argnums=(0, 1, 2))(q, k, v)
+    gf = jax.grad(lf, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gc, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-5)
+
+
+def test_decode_offset_matches_suffix_of_full():
+    """Attention for the last T2 queries with q_offset == suffix of full."""
+    q, k, v = _qkv(T=128, S=128)
+    q2 = q[:, :, 96:, :]
+    got = chunked_attention(q2, k, v, causal=True, q_offset=96, q_chunk=32, kv_chunk=32)
+    want = full_attention(q, k, v, causal=True)[:, :, 96:, :]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_kv_mask_hides_positions():
+    """Masked cache positions must be equivalent to truncating the cache."""
+    q, k, v = _qkv(B=1, T=32, S=128)
+    kv_mask = (jnp.arange(128) < 96)[None, :]
+    kv_mask = jnp.broadcast_to(kv_mask, (1, 128))
+    got = chunked_attention(
+        q, k, v, causal=False, kv_mask=kv_mask, q_chunk=32, kv_chunk=32
+    )
+    want = full_attention(q, k[:, :, :96], v[:, :, :96], causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_dispatcher_selects_full_for_decode():
+    q, k, v = _qkv(T=1, S=256)
+    out = attention(q, k, v, causal=True, q_offset=255, impl="chunked")
+    want = full_attention(q, k, v, causal=True, q_offset=255)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t_pow=st.integers(5, 7),  # T in {32, 64, 128}
+    hq=st.sampled_from([2, 4, 8]),
+    group=st.sampled_from([1, 2]),
+)
+def test_property_chunked_softmax_rows_normalised(t_pow, hq, group):
+    """Output of attention = convex combination of V rows -> bounded by
+    the extremes of V (softmax weights sum to 1)."""
+    T = 2**t_pow
+    rng = np.random.default_rng(t_pow * 97 + hq)
+    hkv = max(1, hq // group)
+    q = jnp.asarray(rng.normal(size=(1, hq, T, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, hkv, T, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, hkv, T, 16)).astype(np.float32))
+    out = np.asarray(chunked_attention(q, k, v, causal=False, q_chunk=T // 2, kv_chunk=T // 2))
+    vmax = np.asarray(v).max(axis=2, keepdims=True)
+    vmin = np.asarray(v).min(axis=2, keepdims=True)
+    # per kv-head group bounds
+    vmax = np.repeat(vmax, hq // hkv, axis=1)
+    vmin = np.repeat(vmin, hq // hkv, axis=1)
+    assert (out <= vmax + 1e-4).all() and (out >= vmin - 1e-4).all()

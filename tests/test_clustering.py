@@ -1,0 +1,160 @@
+"""K-Means / GMM / LogReg correctness on separable synthetic data."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import gmm, kmeans, logreg
+
+
+def _blobs(rng, n=600, k=4, d=8, spread=0.15):
+    centers = rng.normal(size=(k, d)) * 3.0
+    labels = rng.integers(0, k, n)
+    x = centers[labels] + rng.normal(size=(n, d)) * spread
+    return x.astype(np.float32), labels, centers.astype(np.float32)
+
+
+def _cluster_accuracy(pred, true, k):
+    """Best-match accuracy over greedy label alignment."""
+    pred, true = np.asarray(pred), np.asarray(true)
+    acc = 0
+    used = set()
+    for c in range(k):
+        best, best_t = -1, None
+        for t in range(k):
+            if t in used:
+                continue
+            m = int(np.sum((pred == c) & (true == t)))
+            if m > best:
+                best, best_t = m, t
+        used.add(best_t)
+        acc += best
+    return acc / len(true)
+
+
+def test_kmeans_recovers_blobs(key):
+    rng = np.random.default_rng(0)
+    x, labels, _ = _blobs(rng)
+    st = kmeans.fit(key, jnp.asarray(x), 4)
+    pred = kmeans.predict(st, jnp.asarray(x))
+    assert _cluster_accuracy(pred, labels, 4) > 0.98
+    assert int(st.n_iter) >= 1
+
+
+def test_kmeans_inertia_decreases(key):
+    rng = np.random.default_rng(1)
+    x, _, _ = _blobs(rng, spread=0.6)
+    st1 = kmeans.fit(key, jnp.asarray(x), 4, max_iter=1)
+    st50 = kmeans.fit(key, jnp.asarray(x), 4, max_iter=50)
+    assert float(st50.inertia) <= float(st1.inertia) + 1e-3
+
+
+def test_kmeans_weighted_ignores_padding(key):
+    rng = np.random.default_rng(2)
+    x, labels, _ = _blobs(rng, n=300)
+    pad = rng.normal(size=(100, 8)).astype(np.float32) * 50  # junk far away
+    xp = np.concatenate([x, pad])
+    w = np.concatenate([np.ones(300), np.zeros(100)]).astype(np.float32)
+    st = kmeans.fit(key, jnp.asarray(xp), 4, weights=jnp.asarray(w))
+    pred = kmeans.predict(st, jnp.asarray(x))
+    assert _cluster_accuracy(pred, labels, 4) > 0.97
+    # centroids stay in the data region, not dragged toward junk
+    assert float(jnp.max(jnp.abs(st.centroids))) < 20.0
+
+
+def test_kmeans_fit_many_matches_individual(key):
+    rng = np.random.default_rng(3)
+    xs, ws = [], []
+    for i in range(3):
+        x, _, _ = _blobs(rng, n=200, k=3)
+        xs.append(x)
+        ws.append(np.ones(200, np.float32))
+    xs, ws = jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ws))
+    many = kmeans.fit_many(key, xs, ws, k=3, max_iter=25)
+    assert many.centroids.shape == (3, 3, 8)
+    # each group's inertia should match a direct fit to ~the same level
+    for i in range(3):
+        solo = kmeans.fit(jax.random.split(key, 3)[i], xs[i], 3, weights=ws[i], max_iter=25)
+        assert float(many.inertia[i]) < float(solo.inertia) * 2.0 + 1e-3
+
+
+def test_kmeans_empty_cluster_repair(key):
+    """k > number of distinct points still yields finite centroids."""
+    x = jnp.asarray(np.repeat(np.eye(3, 8, dtype=np.float32), 5, axis=0))
+    st = kmeans.fit(key, x, 8)
+    assert np.isfinite(np.asarray(st.centroids)).all()
+
+
+def test_gmm_recovers_blobs(key):
+    rng = np.random.default_rng(4)
+    x, labels, _ = _blobs(rng)
+    st = gmm.fit(key, jnp.asarray(x), 4)
+    pred = gmm.predict(st, jnp.asarray(x))
+    assert _cluster_accuracy(pred, labels, 4) > 0.97
+
+
+def test_gmm_loglik_improves(key):
+    rng = np.random.default_rng(5)
+    x, _, _ = _blobs(rng, spread=0.8)
+    st_short = gmm.fit(key, jnp.asarray(x), 4, max_iter=1)
+    st_long = gmm.fit(key, jnp.asarray(x), 4, max_iter=60)
+    assert float(st_long.log_likelihood) >= float(st_short.log_likelihood) - 1e-4
+
+
+def test_gmm_proba_normalised(key):
+    rng = np.random.default_rng(6)
+    x, _, _ = _blobs(rng)
+    st = gmm.fit(key, jnp.asarray(x), 4)
+    p = np.asarray(gmm.predict_proba(st, jnp.asarray(x)))
+    np.testing.assert_allclose(p.sum(axis=-1), 1.0, atol=1e-5)
+    assert (p >= 0).all()
+
+
+def test_logreg_learns_kmeans_labels(key):
+    rng = np.random.default_rng(7)
+    x, _, _ = _blobs(rng)
+    km = kmeans.fit(key, jnp.asarray(x), 4)
+    labels = kmeans.predict(km, jnp.asarray(x))
+    lr = logreg.fit(key, jnp.asarray(x), labels, 4)
+    pred = logreg.predict(lr, jnp.asarray(x))
+    assert float(jnp.mean((pred == labels).astype(jnp.float32))) > 0.97
+
+
+def test_logreg_weighted_padding(key):
+    rng = np.random.default_rng(8)
+    x, labels, _ = _blobs(rng, n=300)
+    km = kmeans.fit(key, jnp.asarray(x), 4)
+    y = kmeans.predict(km, jnp.asarray(x))
+    pad_x = np.zeros((50, 8), np.float32)
+    pad_y = np.zeros(50, np.int32)
+    xp = jnp.asarray(np.concatenate([x, pad_x]))
+    yp = jnp.concatenate([y, jnp.asarray(pad_y)])
+    w = jnp.asarray(np.concatenate([np.ones(300), np.zeros(50)]).astype(np.float32))
+    lr = logreg.fit(key, xp, yp, 4, weights=w)
+    pred = logreg.predict(lr, jnp.asarray(x))
+    assert float(jnp.mean((pred == y).astype(jnp.float32))) > 0.95
+
+
+def test_minibatch_kmeans_converges(key):
+    """Mini-batch K-Means reaches near-full-batch inertia on blobs."""
+    rng = np.random.default_rng(9)
+    x, labels, _ = _blobs(rng, n=2000, k=4)
+    full = kmeans.fit(key, jnp.asarray(x), 4)
+    mb = kmeans.fit_minibatch(key, jnp.asarray(x), 4, batch_size=256, n_steps=100)
+    assert float(mb.inertia) < float(full.inertia) * 1.5 + 1.0
+    pred = kmeans.predict(kmeans.KMeansState(mb.centroids, mb.inertia, mb.n_iter), jnp.asarray(x))
+    assert _cluster_accuracy(pred, labels, 4) > 0.95
+
+
+def test_distributed_kmeans_matches_single(key):
+    """shard_map Lloyd on a 1-device mesh == plain fit (same seeds)."""
+    rng = np.random.default_rng(10)
+    x, labels, _ = _blobs(rng, n=512, k=4)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    st = kmeans.fit_distributed(key, jnp.asarray(x), 4, mesh, data_axes=("data",), max_iter=30)
+    pred = kmeans.predict(kmeans.KMeansState(st.centroids, st.inertia, st.n_iter), jnp.asarray(x))
+    assert _cluster_accuracy(pred, labels, 4) > 0.97
+    # inertia should be close to the plain fit's
+    ref = kmeans.fit(key, jnp.asarray(x), 4)
+    assert float(st.inertia) < float(ref.inertia) * 1.2 + 1e-3

@@ -1,0 +1,194 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs. The FULL configs are exercised only via the
+dry-run (launch/dryrun.py, ShapeDtypeStruct — no allocation)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(tree) if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+def test_registry_has_all_assigned_archs():
+    expected = {
+        "stablelm-1.6b",
+        "mistral-large-123b",
+        "starcoder2-15b",
+        "phi3.5-moe-42b-a6.6b",
+        "deepseek-moe-16b",
+        "gatedgcn",
+        "wide-deep",
+        "xdeepfm",
+        "mind",
+        "dlrm-mlperf",
+    }
+    assert expected <= set(configs.REGISTRY)
+    assert "lmi-protein" in configs.REGISTRY
+    assert set(configs.ASSIGNED_ARCHS) == expected
+
+
+def test_lm_full_configs_match_assignment():
+    c = configs.get("stablelm-1.6b").make_full()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        24, 2048, 32, 32, 5632, 100352,
+    )
+    c = configs.get("mistral-large-123b").make_full()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        88, 12288, 96, 8, 28672, 32768,
+    )
+    assert 115e9 < c.param_count() < 135e9  # "123b"
+    c = configs.get("starcoder2-15b").make_full()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        40, 6144, 48, 4, 24576, 49152,
+    )
+    assert 13e9 < c.param_count() < 18e9
+    c = configs.get("phi3.5-moe-42b-a6.6b").make_full()
+    assert (c.n_experts, c.top_k, c.d_ff_expert) == (16, 2, 6400)
+    assert 38e9 < c.param_count() < 46e9
+    assert 5.5e9 < c.active_param_count() < 7.5e9  # "a6.6b"
+    c = configs.get("deepseek-moe-16b").make_full()
+    assert (c.n_experts, c.top_k, c.n_shared_experts, c.d_ff_expert) == (64, 6, 2, 1408)
+    assert 14e9 < c.param_count() < 18.5e9
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["stablelm-1.6b", "mistral-large-123b", "starcoder2-15b", "phi3.5-moe-42b-a6.6b", "deepseek-moe-16b"],
+)
+def test_lm_smoke_train_and_decode(arch):
+    from repro.models import transformer as T
+
+    spec = configs.get(arch)
+    cfg = spec.make_smoke()
+    params = T.init_params(KEY, cfg)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    # train step
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: T.loss_fn(cfg, p, tokens, tokens), has_aux=True
+    )(params)
+    assert np.isfinite(float(loss))
+    assert _finite(grads)
+    # prefill + decode
+    logits, cache = T.prefill(cfg, params, tokens[:, :16], max_len=64)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    step_logits, cache = T.decode_step(cfg, params, tokens[:, 16:17], cache)
+    assert step_logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.isfinite(step_logits).all())
+    # decode must match full forward
+    full_logits, _ = T.forward(cfg, params, tokens[:, :17])
+    np.testing.assert_allclose(
+        np.asarray(step_logits), np.asarray(full_logits[:, 16]), rtol=5e-2, atol=5e-3
+    )
+
+
+def test_gnn_smoke_full_graph_and_molecule():
+    from repro.data.graphs import batched_molecules, sbm_graph, to_edge_arrays
+    from repro.models import gnn
+
+    spec = configs.get("gatedgcn")
+    cfg = spec.make_smoke()
+    host = sbm_graph(0, 300, 1200, cfg.d_feat, cfg.n_classes)
+    src, dst, mask = to_edge_arrays(host)
+    g = gnn.Graph(
+        jnp.asarray(host.node_feat), jnp.asarray(src), jnp.asarray(dst),
+        jnp.asarray(mask), jnp.asarray(host.labels), jnp.ones(300, jnp.float32),
+    )
+    params = gnn.init_params(KEY, cfg)
+    (loss, m), grads = jax.value_and_grad(lambda p: gnn.loss_fn(cfg, p, g), has_aux=True)(params)
+    assert np.isfinite(float(loss)) and _finite(grads)
+    # molecule batch (block-diagonal)
+    src, dst, mask, feat, labels = batched_molecules(0, 8, 10, 20, cfg.d_feat, cfg.n_classes)
+    gm = gnn.Graph(
+        jnp.asarray(feat), jnp.asarray(src), jnp.asarray(dst), jnp.asarray(mask),
+        jnp.asarray(labels), jnp.ones(80, jnp.float32),
+    )
+    logits = gnn.forward(cfg, params, gm)
+    assert logits.shape == (80, cfg.n_classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_gnn_smoke_minibatch_sampler():
+    from repro.data.graphs import neighbor_sample, sbm_graph
+    from repro.models import gnn
+
+    cfg = configs.get("gatedgcn").make_smoke()
+    host = sbm_graph(1, 2000, 16000, cfg.d_feat, cfg.n_classes)
+    rng = np.random.default_rng(0)
+    nodes, src, dst, seed_local = neighbor_sample(host, np.arange(64), (5, 3), rng)
+    n = nodes.shape[0]
+    label_mask = np.zeros(n, np.float32)
+    label_mask[seed_local] = 1.0
+    g = gnn.Graph(
+        jnp.asarray(host.node_feat[nodes]),
+        jnp.asarray(src), jnp.asarray(dst), jnp.ones(src.shape[0], jnp.float32),
+        jnp.asarray(host.labels[nodes]), jnp.asarray(label_mask),
+    )
+    params = gnn.init_params(KEY, cfg)
+    loss, m = gnn.loss_fn(cfg, params, g)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ["wide-deep", "xdeepfm", "dlrm-mlperf"])
+def test_recsys_ctr_smoke_train(arch):
+    from repro.data.recsys_data import make_ctr_batch
+    from repro.models import recsys as R
+
+    spec = configs.get(arch)
+    cfg = spec.make_smoke()
+    b = make_ctr_batch(0, 32, cfg.vocab_sizes, n_dense=cfg.n_dense)
+    batch = R.Batch(
+        jnp.asarray(b["dense"]), jnp.asarray(b["sparse"]), None, None, jnp.asarray(b["label"])
+    )
+    init = {"wide-deep": R.widedeep_init, "xdeepfm": R.xdeepfm_init, "dlrm-mlperf": R.dlrm_init}[arch]
+    fwd = {"wide-deep": R.widedeep_forward, "xdeepfm": R.xdeepfm_forward, "dlrm-mlperf": R.dlrm_forward}[arch]
+    params = init(KEY, cfg)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: R.bce_loss(fwd(cfg, p, batch), batch.label), has_aux=True
+    )(params)
+    assert np.isfinite(float(loss)) and _finite(grads)
+    logits = fwd(cfg, params, batch)
+    assert logits.shape == (32,)
+
+
+def test_mind_smoke_train_and_retrieve():
+    from repro.data.recsys_data import make_ctr_batch
+    from repro.models import recsys as R
+
+    cfg = configs.get("mind").make_smoke()
+    b = make_ctr_batch(0, 16, (10,), hist_len=cfg.hist_len, item_vocab=cfg.item_vocab)
+    batch = R.Batch(
+        jnp.zeros((16, 0)), jnp.asarray(b["sparse"]), jnp.asarray(b["history"]),
+        jnp.asarray(b["target_item"]), jnp.asarray(b["label"]),
+    )
+    params = R.mind_init(KEY, cfg)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: R.mind_sampled_softmax_loss(cfg, p, batch), has_aux=True
+    )(params)
+    assert np.isfinite(float(loss)) and _finite(grads)
+    ids, scores = R.mind_retrieve(cfg, params, batch.history[:1], jnp.arange(cfg.item_vocab), k=10)
+    assert ids.shape == (10,) and bool(jnp.isfinite(scores).all())
+
+
+def test_lmi_protein_smoke_build_and_query(protein_embeddings):
+    from repro.core import filtering, lmi
+
+    cfg = configs.get("lmi-protein").make_smoke()
+    emb = protein_embeddings[: cfg.n_objects]
+    index = lmi.build(KEY, emb, arities=cfg.arities, model_type=cfg.model_type)
+    ids, d = filtering.knn_query(
+        index, emb[:8], k=cfg.knn_k, stop_condition=cfg.stop_condition, metric=cfg.filter_metric
+    )
+    assert ids.shape == (8, cfg.knn_k)
+    assert bool((ids[:, 0] == jnp.arange(8)).all())  # self is the 1-NN
+
+
+def test_every_arch_has_four_shapes():
+    for name in configs.ASSIGNED_ARCHS:
+        spec = configs.get(name)
+        assert len(spec.shapes) == 4, name

@@ -1,0 +1,103 @@
+"""Embedding properties: shape, range, invariances (paper Sec. 4)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.embedding import EmbeddingConfig, embed_batch, embed_one, section_means
+
+
+def _random_chain(rng, length, l_max=128):
+    coords = np.zeros((l_max, 3), np.float32)
+    steps = rng.normal(size=(length, 3)).astype(np.float32)
+    coords[:length] = np.cumsum(steps, axis=0) * 3.8
+    return coords
+
+
+def test_shape_and_range():
+    rng = np.random.default_rng(0)
+    cfg = EmbeddingConfig(n_sections=10, cutoff=50.0)
+    c = _random_chain(rng, 100)
+    e = embed_one(jnp.asarray(c), jnp.asarray(100), cfg)
+    assert e.shape == (45,)
+    assert float(e.min()) >= 0.0 and float(e.max()) <= 1.0
+
+
+def test_dim_formula():
+    for n in (5, 10, 30, 50):
+        assert EmbeddingConfig(n_sections=n).dim == n * (n - 1) // 2
+
+
+@pytest.mark.parametrize("n_sections", [5, 10, 30])
+def test_translation_invariance(n_sections):
+    rng = np.random.default_rng(1)
+    cfg = EmbeddingConfig(n_sections=n_sections)
+    c = _random_chain(rng, 90)
+    e0 = embed_one(jnp.asarray(c), jnp.asarray(90), cfg)
+    shifted = c.copy()
+    shifted[:90] += np.asarray([123.0, -55.0, 9.0], np.float32)
+    e1 = embed_one(jnp.asarray(shifted), jnp.asarray(90), cfg)
+    np.testing.assert_allclose(np.asarray(e0), np.asarray(e1), atol=1e-4)
+
+
+def test_rotation_invariance():
+    rng = np.random.default_rng(2)
+    cfg = EmbeddingConfig()
+    c = _random_chain(rng, 110)
+    # random rotation via QR
+    q, r = np.linalg.qr(rng.normal(size=(3, 3)))
+    q = q * np.sign(np.diag(r))
+    rotated = c.copy()
+    rotated[:110] = c[:110] @ q.T.astype(np.float32)
+    e0 = embed_one(jnp.asarray(c), jnp.asarray(110), cfg)
+    e1 = embed_one(jnp.asarray(rotated), jnp.asarray(110), cfg)
+    np.testing.assert_allclose(np.asarray(e0), np.asarray(e1), atol=1e-3)
+
+
+def test_padding_independence():
+    """Values in the padded tail must not affect the embedding."""
+    rng = np.random.default_rng(3)
+    cfg = EmbeddingConfig()
+    c = _random_chain(rng, 60)
+    e0 = embed_one(jnp.asarray(c), jnp.asarray(60), cfg)
+    dirty = c.copy()
+    dirty[60:] = 1e6
+    e1 = embed_one(jnp.asarray(dirty), jnp.asarray(60), cfg)
+    np.testing.assert_allclose(np.asarray(e0), np.asarray(e1), atol=1e-5)
+
+
+def test_section_means_simple():
+    """Two sections over 4 points = means of halves."""
+    coords = jnp.asarray(
+        [[0, 0, 0], [2, 0, 0], [10, 0, 0], [20, 0, 0]], jnp.float32
+    )
+    m = section_means(coords, jnp.asarray(4), 2)
+    np.testing.assert_allclose(np.asarray(m[0]), [1, 0, 0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m[1]), [15, 0, 0], atol=1e-6)
+
+
+def test_batch_matches_single():
+    rng = np.random.default_rng(4)
+    cfg = EmbeddingConfig()
+    chains = np.stack([_random_chain(rng, l) for l in (40, 70, 128)])
+    lengths = jnp.asarray([40, 70, 128])
+    batched = embed_batch(jnp.asarray(chains), lengths, cfg)
+    for i in range(3):
+        single = embed_one(jnp.asarray(chains[i]), lengths[i], cfg)
+        np.testing.assert_allclose(np.asarray(batched[i]), np.asarray(single), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    length=st.integers(min_value=12, max_value=128),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_embedding_bounds(length, seed):
+    """For any chain, the embedding is finite and inside [0, 1]."""
+    rng = np.random.default_rng(seed)
+    cfg = EmbeddingConfig()
+    c = _random_chain(rng, length)
+    e = np.asarray(embed_one(jnp.asarray(c), jnp.asarray(length), cfg))
+    assert np.isfinite(e).all()
+    assert (e >= 0).all() and (e <= 1).all()

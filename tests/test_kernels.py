@@ -1,0 +1,188 @@
+"""Per-kernel validation: shape/dtype sweeps, allclose vs the jnp oracle.
+
+All Pallas kernels run in interpret mode on CPU (the kernel body executes
+in Python), which validates the blockwise math, masking, and accumulation
+logic that will run on TPU.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.embedding_bag import ops as eb_ops, ref as eb_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.kmeans_assign import ops as ka_ops, ref as ka_ref
+from repro.kernels.pairwise_l2 import ops as pw_ops, ref as pw_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _randn(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+# ------------------------------------------------------------- pairwise_l2
+@pytest.mark.parametrize(
+    "n,m,d",
+    [
+        (8, 8, 4),  # tiny, heavy padding
+        (128, 128, 45),  # paper embedding dim
+        (300, 200, 45),  # non-aligned
+        (256, 512, 128),  # aligned
+        (100, 1000, 435),  # 30x30 embedding dim
+        (17, 3, 1225),  # 50x50 embedding dim, degenerate m
+    ],
+)
+def test_pairwise_l2_shapes(n, m, d):
+    x, y = _randn(n, d), _randn(m, d)
+    got = pw_ops.pairwise_l2(x, y)
+    want = pw_ref.pairwise_l2_ref(x, y)
+    assert got.shape == (n, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_l2_dtypes(dtype):
+    x = _randn(64, 64).astype(dtype)
+    y = _randn(96, 64).astype(dtype)
+    got = pw_ops.pairwise_l2(x, y)
+    want = pw_ref.pairwise_l2_ref(x, y)
+    tol = 1e-3 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_pairwise_l2_self_distance_zero():
+    x = _randn(50, 45)
+    d = np.asarray(pw_ops.pairwise_l2(x, x))
+    assert np.abs(np.diag(d)).max() < 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    m=st.integers(1, 200),
+    d=st.integers(1, 100),
+)
+def test_pairwise_l2_property(n, m, d):
+    rng = np.random.default_rng(n * 7919 + m * 131 + d)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    got = pw_ops.pairwise_l2(x, y)
+    want = pw_ref.pairwise_l2_ref(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+# ----------------------------------------------------------- kmeans_assign
+@pytest.mark.parametrize(
+    "n,k,d",
+    [
+        (64, 8, 45),
+        (512, 256, 45),  # the paper's level-1 arity
+        (1000, 64, 45),  # level-2 arity, non-aligned n
+        (333, 37, 17),  # everything ragged
+        (128, 128, 256),
+    ],
+)
+def test_kmeans_assign_shapes(n, k, d):
+    x, c = _randn(n, d), _randn(k, d)
+    labels, mind = ka_ops.kmeans_assign_with_dist(x, c)
+    labels_ref, mind_ref = ka_ref.kmeans_assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(labels), np.asarray(labels_ref))
+    np.testing.assert_allclose(np.asarray(mind), np.asarray(mind_ref), rtol=1e-4, atol=1e-3)
+
+
+def test_kmeans_assign_sentinel_never_wins():
+    """Padded centroid rows must never be selected."""
+    x, c = _randn(100, 45), _randn(5, 45)  # k=5 padded to 128
+    labels, _ = ka_ops.kmeans_assign_with_dist(x, c)
+    assert int(jnp.max(labels)) < 5
+
+
+def test_kmeans_assign_agrees_with_core():
+    from repro.core import kmeans as km
+
+    x, c = _randn(200, 45), _randn(16, 45)
+    got = ka_ops.kmeans_assign(x, c)
+    want = km.assign(x, c, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------- flash_attention
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,T,S,dh",
+    [
+        (1, 4, 4, 128, 128, 64),  # MHA
+        (2, 8, 2, 256, 256, 64),  # GQA 4:1
+        (1, 4, 1, 128, 128, 128),  # MQA
+        (1, 8, 8, 128, 512, 64),  # decode-offset (S > T)
+        (2, 4, 2, 256, 256, 96),  # dh needs padding
+    ],
+)
+def test_flash_attention_shapes(B, Hq, Hkv, T, S, dh):
+    q = _randn(B, Hq, T, dh)
+    k = _randn(B, Hkv, S, dh)
+    v = _randn(B, Hkv, S, dh)
+    got = fa_ops.flash_attention(q, k, v, causal=True)
+    want = fa_ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_noncausal():
+    q, k, v = _randn(1, 2, 128, 64), _randn(1, 2, 256, 64), _randn(1, 2, 256, 64)
+    got = fa_ops.flash_attention(q, k, v, causal=False)
+    want = fa_ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = _randn(1, 2, 128, 64).astype(jnp.bfloat16)
+    k = _randn(1, 2, 128, 64).astype(jnp.bfloat16)
+    v = _randn(1, 2, 128, 64).astype(jnp.bfloat16)
+    got = fa_ops.flash_attention(q, k, v, causal=True).astype(jnp.float32)
+    want = fa_ref.attention_ref(q, k, v, causal=True).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_rejects_unaligned():
+    q, k, v = _randn(1, 2, 100, 64), _randn(1, 2, 100, 64), _randn(1, 2, 100, 64)
+    with pytest.raises(ValueError):
+        fa_ops.flash_attention(q, k, v)
+
+
+# ------------------------------------------------------------ embedding_bag
+@pytest.mark.parametrize(
+    "V,D,B,L",
+    [
+        (1000, 32, 64, 8),
+        (5000, 128, 256, 26),  # DLRM-ish
+        (64, 16, 10, 3),  # tiny, heavy padding
+        (2048, 64, 128, 1),  # single-id bags
+    ],
+)
+def test_embedding_bag_shapes(V, D, B, L):
+    rng = np.random.default_rng(V + D + B + L)
+    table = jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, V, size=(B, L)).astype(np.int32))
+    got = eb_ops.embedding_bag(table, ids)
+    want = eb_ref.embedding_bag_ref(table, ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+def test_embedding_bag_weighted_and_mean():
+    rng = np.random.default_rng(7)
+    table = jnp.asarray(rng.normal(size=(500, 32)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 500, size=(32, 6)).astype(np.int32))
+    w = jnp.asarray(rng.uniform(0.1, 2.0, size=(32, 6)).astype(np.float32))
+    for mode in ("sum", "mean"):
+        got = eb_ops.embedding_bag(table, ids, w, mode=mode)
+        want = eb_ref.embedding_bag_ref(table, ids, w, mode=mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+def test_embedding_bag_duplicate_ids_accumulate():
+    table = jnp.asarray(np.eye(8, 16, dtype=np.float32))
+    ids = jnp.asarray([[3, 3, 3, 0]], dtype=jnp.int32)
+    got = np.asarray(eb_ops.embedding_bag(table, ids))
+    assert got[0, 3] == pytest.approx(3.0)
+    assert got[0, 0] == pytest.approx(1.0)

@@ -1,0 +1,48 @@
+"""Launcher-layer units: mesh construction, registry, dry-run cell wiring."""
+import numpy as np
+import pytest
+import jax
+
+from repro import configs
+from repro.launch.mesh import HW, make_host_mesh
+
+
+def test_host_mesh_builds():
+    mesh = make_host_mesh(model_parallel=1)
+    assert set(mesh.axis_names) == {"data", "model"}
+    assert mesh.shape["model"] == 1
+
+
+def test_hw_constants_are_v5e():
+    assert HW["peak_bf16_flops"] == 197e12
+    assert HW["hbm_bw"] == 819e9
+    assert HW["ici_bw"] == 50e9
+
+
+def test_registry_shapes_cover_assignment():
+    """40 assigned cells: 5 LM x 4 + 1 GNN x 4 + 4 recsys x 4."""
+    total = sum(len(configs.get(a).shapes) for a in configs.ASSIGNED_ARCHS)
+    assert total == 40
+    # + the paper's own arch
+    assert len(configs.get("lmi-protein").shapes) == 2
+
+
+def test_all_full_configs_construct():
+    for name in configs.list_archs():
+        spec = configs.get(name)
+        cfg = spec.make_full()
+        smoke = spec.make_smoke()
+        assert cfg is not None and smoke is not None
+        if spec.family == "lm":
+            assert cfg.param_count() > smoke.param_count()
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        configs.get("nonexistent-arch")
+
+
+def test_lm_shapes_have_required_kinds():
+    for name in ("stablelm-1.6b", "mistral-large-123b"):
+        kinds = {s.kind for s in configs.get(name).shapes}
+        assert kinds == {"train", "prefill", "decode"}

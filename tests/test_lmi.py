@@ -1,0 +1,138 @@
+"""LMI structural invariants + search semantics (paper Sec. 4/5)."""
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import filtering, lmi
+
+
+def test_partition_is_complete(small_lmi, protein_embeddings):
+    """Every object lives in exactly one bucket."""
+    idx = small_lmi
+    assert int(jnp.sum(idx.bucket_sizes())) == protein_embeddings.shape[0]
+    ids = np.sort(np.asarray(idx.sorted_ids))
+    np.testing.assert_array_equal(ids, np.arange(protein_embeddings.shape[0]))
+
+
+def test_csr_offsets_monotone(small_lmi):
+    off = np.asarray(small_lmi.bucket_offsets)
+    assert (np.diff(off) >= 0).all()
+    assert off[0] == 0 and off[-1] == small_lmi.n_objects
+
+
+def test_full_stop_condition_returns_everything(small_lmi, protein_embeddings):
+    """stop_condition=1.0 must return the whole dataset as candidates."""
+    res = lmi.search(small_lmi, protein_embeddings[:4], stop_condition=1.0)
+    n = protein_embeddings.shape[0]
+    assert (np.asarray(res.n_candidates) == n).all()
+    for i in range(4):
+        got = np.sort(np.asarray(res.candidate_ids[i])[np.asarray(res.valid[i])])
+        np.testing.assert_array_equal(got, np.arange(n))
+
+
+def test_recall_monotone_in_stop_condition(small_lmi, protein_embeddings):
+    """Larger candidate sets can only add candidates (superset property)."""
+    q = protein_embeddings[:8]
+    r1 = lmi.search(small_lmi, q, stop_condition=0.02)
+    r2 = lmi.search(small_lmi, q, stop_condition=0.10)
+    for i in range(8):
+        s1 = set(np.asarray(r1.candidate_ids[i])[np.asarray(r1.valid[i])].tolist())
+        s2 = set(np.asarray(r2.candidate_ids[i])[np.asarray(r2.valid[i])].tolist())
+        assert s1 <= s2
+
+
+def test_stop_condition_respected(small_lmi, protein_embeddings):
+    """Candidates ~ stop_count, overshooting by at most one bucket."""
+    q = protein_embeddings[:16]
+    stop = 0.05
+    res = lmi.search(small_lmi, q, stop_condition=stop)
+    stop_count = math.ceil(stop * small_lmi.n_objects)
+    max_bucket = int(jnp.max(small_lmi.bucket_sizes()))
+    n = np.asarray(res.n_candidates)
+    assert (n >= min(stop_count, small_lmi.n_objects)).all()
+    assert (n <= stop_count + max_bucket).all()
+
+
+def test_buckets_visited_in_probability_order(small_lmi, protein_embeddings):
+    q = protein_embeddings[:2]
+    logp = np.asarray(lmi.leaf_log_probs(small_lmi, q))
+    res = lmi.search(small_lmi, q, stop_condition=0.05)
+    sizes = np.asarray(small_lmi.bucket_sizes())
+    off = np.asarray(small_lmi.bucket_offsets)
+    ids = np.asarray(small_lmi.sorted_ids)
+    for i in range(2):
+        order = np.argsort(-logp[i], kind="stable")
+        expected = []
+        for b in order:
+            if len(expected) >= math.ceil(0.05 * small_lmi.n_objects):
+                break
+            expected.extend(ids[off[b] : off[b + 1]].tolist())
+        got = np.asarray(res.candidate_ids[i])[np.asarray(res.valid[i])].tolist()
+        assert got[: len(expected)] == expected
+
+
+@pytest.mark.parametrize("model_type", ["kmeans", "gmm", "kmeans+logreg"])
+def test_model_types_build_and_search(key, protein_embeddings, model_type):
+    idx = lmi.build(key, protein_embeddings[:400], arities=(4, 4), model_type=model_type)
+    res = lmi.search(idx, protein_embeddings[:8], stop_condition=0.1)
+    assert (np.asarray(res.n_candidates) > 0).all()
+    # index is internally consistent
+    assert int(jnp.sum(idx.bucket_sizes())) == 400
+
+
+def test_self_query_recall(small_lmi, protein_embeddings):
+    """A database object queried against the index should find itself in a
+    reasonably small candidate set (the embedding maps it to its bucket)."""
+    q = protein_embeddings[:64]
+    res = lmi.search(small_lmi, q, stop_condition=0.05)
+    hits = 0
+    for i in range(64):
+        c = np.asarray(res.candidate_ids[i])[np.asarray(res.valid[i])]
+        hits += int((c == i).any())
+    assert hits / 64 > 0.9
+
+
+def test_insert_then_search(key, protein_embeddings):
+    idx = lmi.build(key, protein_embeddings[:500], arities=(4, 4))
+    extra = protein_embeddings[500:520]
+    idx2 = lmi.insert(idx, extra)
+    assert idx2.n_objects == 520
+    # inserted objects are findable
+    res = lmi.search(idx2, extra, stop_condition=0.1)
+    found = 0
+    for i in range(20):
+        c = np.asarray(res.candidate_ids[i])[np.asarray(res.valid[i])]
+        found += int((c == 500 + i).any())
+    assert found >= 16
+
+
+def test_memory_bytes_accounts_structure(small_lmi):
+    m_struct = small_lmi.memory_bytes()
+    m_all = small_lmi.memory_bytes(include_data=True)
+    assert 0 < m_struct < m_all
+
+
+def test_knn_filtering_exact_over_candidates(small_lmi, protein_embeddings):
+    """kNN results = brute-force over the candidate set."""
+    q = protein_embeddings[:4]
+    ids, dists = filtering.knn_query(small_lmi, q, k=5, stop_condition=0.2)
+    res = lmi.search(small_lmi, q, stop_condition=0.2)
+    emb = np.asarray(protein_embeddings)
+    for i in range(4):
+        cand = np.asarray(res.candidate_ids[i])[np.asarray(res.valid[i])]
+        d = np.linalg.norm(emb[cand] - emb[i], axis=1)
+        best = cand[np.argsort(d, kind="stable")[:5]]
+        assert set(np.asarray(ids[i]).tolist()) == set(best.tolist())
+
+
+def test_range_query_radius_semantics(small_lmi, protein_embeddings):
+    q = protein_embeddings[:4]
+    r = filtering.range_query(small_lmi, q, radius=0.3, stop_condition=0.2)
+    d = np.asarray(r.distances)
+    m = np.asarray(r.mask)
+    assert (d[m] <= 0.3 + 1e-6).all()
+    ids = np.asarray(r.ids)
+    assert (ids[~m] == -1).all()

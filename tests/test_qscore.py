@@ -1,0 +1,93 @@
+"""Kabsch/Q-score ground-truth oracle tests."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.qscore import kabsch_rmsd, qdistance, qdistance_matrix, qscore, resample_chain
+
+
+def _chain(rng, n, l_max=128):
+    c = np.zeros((l_max, 3), np.float32)
+    c[:n] = np.cumsum(rng.normal(size=(n, 3)), axis=0) * 3.8
+    return c
+
+
+def _rot(rng):
+    q, r = np.linalg.qr(rng.normal(size=(3, 3)))
+    q = q * np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:  # proper rotation, not a reflection
+        q[:, 0] = -q[:, 0]
+    return q.astype(np.float32)
+
+
+def test_kabsch_zero_for_identical():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(32, 3)).astype(np.float32)
+    assert float(kabsch_rmsd(jnp.asarray(a), jnp.asarray(a))) < 1e-4
+
+
+def test_kabsch_invariant_to_rigid_motion():
+    rng = np.random.default_rng(1)
+    a = rng.normal(size=(32, 3)).astype(np.float32) * 5
+    b = a @ _rot(rng).T + np.asarray([10.0, -3.0, 7.0], np.float32)
+    # fp32 cancellation in E0 - 2*tr(S) bounds attainable precision ~1e-2
+    assert float(kabsch_rmsd(jnp.asarray(a), jnp.asarray(b))) < 0.05
+
+
+def test_kabsch_detects_noise():
+    rng = np.random.default_rng(2)
+    a = rng.normal(size=(64, 3)).astype(np.float32) * 5
+    b = a + rng.normal(size=a.shape).astype(np.float32) * 2.0
+    r = float(kabsch_rmsd(jnp.asarray(a), jnp.asarray(b)))
+    assert 1.0 < r < 4.0
+
+
+def test_qscore_self_is_one():
+    rng = np.random.default_rng(3)
+    c = _chain(rng, 100)
+    q = float(qscore(jnp.asarray(c), jnp.asarray(100), jnp.asarray(c), jnp.asarray(100)))
+    assert q > 0.99
+
+
+def test_qdistance_rigid_motion_zero():
+    rng = np.random.default_rng(4)
+    c = _chain(rng, 80)
+    moved = c.copy()
+    moved[:80] = c[:80] @ _rot(rng).T + np.asarray([5.0, 5.0, 5.0], np.float32)
+    d = float(qdistance(jnp.asarray(c), jnp.asarray(80), jnp.asarray(moved), jnp.asarray(80)))
+    assert d < 0.01
+
+
+def test_qdistance_in_unit_interval():
+    rng = np.random.default_rng(5)
+    a, b = _chain(rng, 60), _chain(rng, 110)
+    d = float(qdistance(jnp.asarray(a), jnp.asarray(60), jnp.asarray(b), jnp.asarray(110)))
+    assert 0.0 <= d <= 1.0
+
+
+def test_length_mismatch_penalised():
+    """Very different lengths cap the attainable Q-score (N_align ratio)."""
+    rng = np.random.default_rng(6)
+    a = _chain(rng, 40)
+    b = np.zeros_like(a)
+    b[:120] = np.cumsum(rng.normal(size=(120, 3)), axis=0) * 3.8
+    q = float(qscore(jnp.asarray(a), jnp.asarray(40), jnp.asarray(b), jnp.asarray(120)))
+    assert q <= 40.0 / 120.0 + 1e-5
+
+
+def test_qdistance_matrix_shape_and_diag():
+    rng = np.random.default_rng(7)
+    chains = np.stack([_chain(rng, n) for n in (50, 70, 90)])
+    lens = jnp.asarray([50, 70, 90])
+    m = qdistance_matrix(jnp.asarray(chains), lens, jnp.asarray(chains), lens)
+    m = np.asarray(m)
+    assert m.shape == (3, 3)
+    assert (np.diag(m) < 0.01).all()
+    np.testing.assert_allclose(m, m.T, atol=1e-4)
+
+
+def test_resample_endpoints():
+    rng = np.random.default_rng(8)
+    c = _chain(rng, 100)
+    r = np.asarray(resample_chain(jnp.asarray(c), jnp.asarray(100), 16))
+    np.testing.assert_allclose(r[0], c[0], atol=1e-5)
+    np.testing.assert_allclose(r[-1], c[99], atol=1e-4)

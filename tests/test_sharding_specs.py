@@ -1,0 +1,92 @@
+"""Sharding spec trees must exactly match the parameter trees for every
+assigned LM architecture x strategy (catches spec/param drift — a real
+bug class: the gelu-MLP configs have no w3 leaf)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.distributed import sharding as shard_rules
+from repro.models import transformer as T
+
+LM_ARCHS = [
+    "stablelm-1.6b",
+    "mistral-large-123b",
+    "starcoder2-15b",
+    "phi3.5-moe-42b-a6.6b",
+    "deepseek-moe-16b",
+]
+
+KEY_STRUCT = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _mesh():
+    return jax.make_mesh(
+        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+
+
+def _tree_struct_match(specs, shapes):
+    """Same tree structure AND every spec rank matches the leaf rank."""
+    jax.tree.map(
+        lambda sp, sh: None, specs, shapes, is_leaf=lambda x: isinstance(x, P)
+    )  # raises on structure mismatch
+    flat_sp = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_sh = jax.tree.leaves(shapes)
+    for sp, sh in zip(flat_sp, flat_sh):
+        assert len(sp) <= len(sh.shape), f"spec {sp} too long for shape {sh.shape}"
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_tp_and_2d_specs_match_params(arch):
+    cfg = configs.get(arch).make_full()
+    shapes = jax.eval_shape(lambda k: T.init_params(k, cfg), KEY_STRUCT)
+    mesh = _mesh()
+    for fn in (shard_rules.transformer_param_specs, shard_rules.transformer_param_specs_2d):
+        specs = fn(cfg, mesh)
+        _tree_struct_match(specs, shapes)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_dp_ep_and_zero_specs_match_params(arch):
+    cfg = configs.get(arch).make_full()
+    shapes = jax.eval_shape(lambda k: T.init_params(k, cfg), KEY_STRUCT)
+    mesh = _mesh()
+    dp = shard_rules.transformer_param_specs_dp(cfg, shapes, mesh)
+    _tree_struct_match(dp, shapes)
+    ep = shard_rules.transformer_param_specs_ep(cfg, shapes, mesh)
+    _tree_struct_match(ep, shapes)
+    zero = shard_rules.opt_specs_with_zero(ep, shapes, mesh)
+    _tree_struct_match(zero, shapes)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_strategy_assignment(arch):
+    cfg = configs.get(arch).make_full()
+    mesh = _mesh()
+    strategy = shard_rules.lm_strategy(cfg, mesh)
+    if cfg.is_moe:
+        assert strategy == "ep"
+    elif 2 * cfg.param_count() <= 6e9:
+        assert strategy == "dp"
+    else:
+        assert strategy == "tp"
+
+
+def test_zero_shard_spec_picks_divisible_dim():
+    assert shard_rules.zero_shard_spec((24, 2048, 5632), 16) == P(None, None, "model")
+    assert shard_rules.zero_shard_spec((7, 13), 16) == P(None, None)
+    assert shard_rules.zero_shard_spec((32,), 16) == P("model")
+
+
+def test_sharded_embedding_lookup_single_device():
+    """Mod-sharded shard_map lookup == plain take (n=1 shard)."""
+    mesh = _mesh()
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 64, size=(16, 3)).astype(np.int32))
+    got = shard_rules.sharded_embedding_lookup(w, ids, mesh, axis="model")
+    want = jnp.take(w, ids, axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
