@@ -1,0 +1,160 @@
+"""End-to-end query latency + filtering-stage HBM traffic (ISSUE 1).
+
+Compares, for range (r=0.3, P90-calibrated scale 0.7) and 30NN queries
+at the paper's 1 % stop condition:
+
+  * fused    — the `repro.kernels.lmi_filter` Pallas path
+               (`use_kernel=True`): candidate rows stream HBM -> VMEM
+               once, distances/top-k never round-trip through HBM;
+  * unfused  — the jnp oracle path (`use_kernel=False`): materializes
+               the (Q, C, d) gather and its elementwise temporaries;
+  * brute    — linear scan over the whole embedding matrix.
+
+Wall-clock caveat: on CPU the fused variant runs under the Pallas
+*interpreter* (the kernel body is emulated op by op), so its wall time
+is not the hardware story — the modeled HBM bytes are the
+hardware-independent comparison, and the JSON records both plus the
+backend so later PRs can track a real-TPU trajectory.
+
+HBM model (documented per term in `hbm_model`): op-granular — every
+jnp op in the unfused path materializes its result in HBM (gather,
+broadcast-diff, square, reduce), which is what the fused kernel
+structurally removes; the fused path touches each candidate row exactly
+once. Byte counts use the benchmark's float32 arrays.
+
+Writes BENCH_query_latency.json next to the working directory.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import filtering, lmi
+
+REPS = 3
+K = 30
+RADIUS = 0.3
+RADIUS_SCALE = 0.7  # fig5 P90 calibration for Euclidean
+STOP = 0.01
+
+
+def _timed(fn):
+    out = fn()  # compile + warmup
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fn()
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / REPS
+
+
+def hbm_model(Q: int, C: int, d: int, M: int, k: int, variant: str, mode: str) -> dict:
+    """Modeled HBM bytes for the *filtering stage* (search excluded —
+    identical across variants). float32/int32 = 4 bytes."""
+    f = 4
+    QCd, QC, Qd = Q * C * d * f, Q * C * f, Q * d * f
+    kpad = ((k + 7) // 8) * 8
+    if variant == "fused":
+        items = {
+            "candidate_row_reads": QCd,  # each row DMA'd HBM->VMEM once
+            "rows_valid_reads": 2 * QC,  # (Q, C) int32 rows + mask
+            "query_reads": Qd,
+            "out_writes": Q * kpad * 2 * f if mode == "knn" else QC,
+        }
+    elif variant == "unfused":
+        items = {
+            "gather_src_reads": QCd,  # embedding rows read
+            "gather_writes": QCd,  # (Q, C, d) intermediate
+            "diff_reads": QCd,  # broadcast-subtract input
+            "diff_writes": QCd,  # (Q, C, d) temp
+            "square_reads": QCd,
+            "square_writes": QCd,  # (Q, C, d) temp
+            "reduce_reads": QCd,
+            "dist_writes": QC,
+            "rows_valid_reads": 2 * QC,
+            "predicate_reads": QC,  # top-k / range mask pass
+            "out_writes": Q * k * 2 * f if mode == "knn" else QC,
+        }
+    elif variant == "brute":
+        items = {
+            "db_reads": M * d * f,
+            "query_reads": Qd,
+            "panel_writes": Q * M * f,
+            "predicate_reads": Q * M * f,
+            "out_writes": Q * k * 2 * f if mode == "knn" else Q * M * f,
+        }
+    else:
+        raise ValueError(variant)
+    items["total"] = sum(items.values())
+    return items
+
+
+def main() -> None:
+    index, _ = common.built_index()
+    emb = common.embeddings()
+    qids = common.query_ids()
+    q = jnp.asarray(np.asarray(emb)[qids], jnp.float32)
+    n_q, d = q.shape
+    m = index.n_objects
+    _stop_count, cap = lmi.query_plan_params(index, STOP)
+
+    results: dict = {
+        "config": {
+            "db_size": m, "n_queries": n_q, "dim": d, "candidate_cap": cap,
+            "stop_condition": STOP, "k": K, "radius": RADIUS,
+            "radius_scale": RADIUS_SCALE, "backend": jax.default_backend(),
+            "fused_runs_interpreted": jax.default_backend() != "tpu",
+            "reps": REPS,
+        },
+    }
+
+    runners = {
+        "range": {
+            "fused": lambda: filtering.range_query(
+                index, q, RADIUS, STOP, radius_scale=RADIUS_SCALE, use_kernel=True).mask,
+            "unfused": lambda: filtering.range_query(
+                index, q, RADIUS, STOP, radius_scale=RADIUS_SCALE, use_kernel=False).mask,
+            "brute": lambda: filtering.brute_force_range(
+                q, index.sorted_embeddings, RADIUS * RADIUS_SCALE),
+        },
+        "knn": {
+            "fused": lambda: filtering.knn_query(
+                index, q, K, STOP, use_kernel=True)[1],
+            "unfused": lambda: filtering.knn_query(
+                index, q, K, STOP, use_kernel=False)[1],
+            "brute": lambda: filtering.brute_force_knn(
+                q, index.sorted_embeddings, K)[1],
+        },
+    }
+
+    print("mode,variant,us_per_query,modeled_hbm_bytes_filter")
+    for mode, variants in runners.items():
+        results[mode] = {}
+        for variant, fn in variants.items():
+            sec = _timed(fn)
+            us_q = sec / n_q * 1e6
+            model = hbm_model(n_q, cap, d, m, K, variant, mode)
+            results[mode][variant] = {
+                "us_per_query": us_q,
+                "hbm_bytes_filter": model["total"],
+                "hbm_bytes_items": model,
+            }
+            print(f"{mode},{variant},{us_q:.1f},{model['total']}")
+        ratio = (results[mode]["unfused"]["hbm_bytes_filter"]
+                 / results[mode]["fused"]["hbm_bytes_filter"])
+        results[mode]["hbm_bytes_ratio_unfused_over_fused"] = ratio
+        print(f"# {mode}: unfused/fused modeled HBM bytes = {ratio:.1f}x")
+
+    out = "BENCH_query_latency.json"
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

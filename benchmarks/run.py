@@ -19,6 +19,7 @@ from benchmarks import (
     ablation_cutoff,
     fig7_answer_size,
     model_comparison,
+    query_latency,
     roofline_table,
     table1_build,
     table2_range,
@@ -37,6 +38,7 @@ SECTIONS = {
     "model_comparison": model_comparison.main,
     "ablation_cutoff": ablation_cutoff.main,
     "roofline": roofline_table.main,
+    "query_latency": query_latency.main,
 }
 
 

@@ -46,12 +46,18 @@ def main():
 
     print("\n== distributed serve (bucket-sharded over a host mesh) ==")
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((1, n_dev), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1, n_dev), ("data", "model"))
     sharded = shard_index(index, n_shards=n_dev)
     sids, sd = sharded_knn(sharded, queries[:16], k=30, mesh=mesh, stop_condition=0.01)
-    ref_ids, _ = filtering.knn_query(index, queries[:16], k=30, stop_condition=0.01)
-    print(f"sharded result matches single-device: {bool((np.asarray(sids) == np.asarray(ref_ids)).all())}")
+    ref_ids, ref_d = filtering.knn_query(index, queries[:16], k=30, stop_condition=0.01)
+    # near-equal distances may swap rank between the two distance
+    # decompositions (float32 rounding) — compare modulo such ties
+    agree = (np.asarray(sids) == np.asarray(ref_ids)) | (
+        np.abs(np.asarray(sd) - np.asarray(ref_d)) < 1e-4
+    )
+    print(f"sharded result matches single-device (modulo fp ties): {bool(agree.all())}")
 
     print("\n== freshness: dynamic insert ==")
     new = generate_dataset(99, ProteinGenConfig(n_proteins=32, n_families=4))

@@ -1,0 +1,30 @@
+"""jax version compatibility shims.
+
+The repo targets current jax but must run on the container's pinned
+version too. Differences handled here:
+
+  * ``shard_map``: top-level `jax.shard_map(check_vma=...)` vs the older
+    `jax.experimental.shard_map.shard_map(check_rep=...)`;
+  * ``make_mesh``: the ``axis_types``/`jax.sharding.AxisType` kwarg does
+    not exist on older jax;
+  * Mosaic compiler params: see `repro.kernels.common.tpu_compiler_params`.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(fn, mesh, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+def make_mesh(shape, axes):
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

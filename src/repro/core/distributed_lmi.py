@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
 from repro.core import lmi as lmi_lib
 
 Array = jax.Array
@@ -53,6 +54,9 @@ class ShardedLMI:
     shard_ids: Array  # (S, rows_cap) int32 — original object ids
     shard_embeddings: Array  # (S, rows_cap, d) f32 / bf16 / int8 store
     shard_scales: Optional[Array] = None  # (S, rows_cap) int8 dequant scales
+    # --- build-time stats (static, so query planning never syncs)
+    n_objects: int = dataclasses.field(default=0, metadata=dict(static=True))
+    max_bucket_size: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     @property
     def n_leaves(self) -> int:
@@ -118,6 +122,8 @@ def shard_index(index: lmi_lib.LMI, n_shards: int, store_dtype: str = "float32")
         shard_ids=jnp.asarray(sh_ids),
         shard_embeddings=store,
         shard_scales=scales,
+        n_objects=index.n_objects,
+        max_bucket_size=index.max_bucket_size or int(sizes.max()),
     )
 
 
@@ -195,6 +201,8 @@ def sharded_knn(
     metric: str = "euclidean",
     n_objects: Optional[int] = None,
     bucket_topk: Optional[int] = None,
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
 ):
     """Distributed kNN: queries sharded over ``query_axes``, DB buckets over
     ``shard_axis``. Exact vs. the single-device result.
@@ -202,14 +210,28 @@ def sharded_knn(
     ``local_cap`` bounds each shard's candidate block; the default
     (stop_count + max bucket) is always exact; pass ~4x the expected
     per-shard share for the bandwidth-optimal variant (§Perf log).
-    ``n_objects`` must be passed when tracing (sizes are then abstract).
+    ``n_objects`` must be passed when tracing pre-metadata pytrees (the
+    default comes from static build stats — no device sync).
+
+    ``use_kernel=True`` runs the per-shard filtering stage through the
+    fused `repro.kernels.lmi_filter` Pallas kernel (float32 stores only:
+    the shard-of-rows gather stays local, candidates go HBM -> VMEM
+    without a (Q, cap, d) intermediate); quantized stores fall back to
+    the jnp path, which dequantizes in the gather.
     """
     if n_objects is None:
-        n_objects = int(jnp.sum(sharded.global_sizes))
+        n_objects = sharded.n_objects or int(jnp.sum(sharded.global_sizes))
     stop_count = max(1, math.ceil(stop_condition * n_objects))
     if local_cap is None:
-        local_cap = stop_count + int(jnp.max(sharded.global_sizes))
+        max_bucket = sharded.max_bucket_size or int(jnp.max(sharded.global_sizes))
+        local_cap = stop_count + max_bucket
     local_cap = int(local_cap)
+    if interpret is None:
+        from repro.kernels.common import should_interpret
+
+        interpret = should_interpret()
+    fused = use_kernel and sharded.shard_scales is None and \
+        sharded.shard_embeddings.dtype == jnp.float32
 
     def local_fn(queries_l, sh_off, sh_ids, sh_emb, sh_scales, l1, l2, gsizes):
         # shard_map passes block-local arrays with the shard dim stripped
@@ -218,22 +240,25 @@ def sharded_knn(
             sharded.model_type, l1, l2, gsizes, sh_off, queries_l, stop_count, local_cap,
             bucket_topk=bucket_topk,
         )
-        cand = sh_emb[rows]  # (Q, cap, d) — f32/bf16/int8 store
-        if sh_scales is not None:
-            cand = cand.astype(jnp.float32) * sh_scales[0][rows][..., None]
-        # MXU decomposition (batched matvec) instead of broadcast-subtract
-        qc = jnp.einsum("qcd,qd->qc", cand, queries_l, preferred_element_type=jnp.float32)
-        cn = jnp.sum(cand.astype(jnp.float32) ** 2, axis=-1)
-        qn = jnp.sum(queries_l * queries_l, axis=-1)[:, None]
-        d2 = jnp.maximum(cn + qn - 2.0 * qc, 0.0)
-        if metric == "euclidean":
-            dist = jnp.sqrt(d2)
+        kk = min(k, local_cap)
+        if fused:
+            from repro.kernels.lmi_filter import ops as lf_ops
+
+            local_d, top_slot = lf_ops.lmi_filter_topk(
+                queries_l, rows, valid, sh_emb, kk, metric=metric, interpret=interpret
+            )
+            idx = jnp.maximum(top_slot, 0)
         else:
-            dist = d2
-        dist = jnp.where(valid, dist, _BIG)
-        neg, idx = jax.lax.top_k(-dist, min(k, local_cap))
+            from repro.core.distances import batched_candidate_distances
+
+            cand = sh_emb[rows]  # (Q, cap, d) — f32/bf16/int8 store
+            if sh_scales is not None:
+                cand = cand.astype(jnp.float32) * sh_scales[0][rows][..., None]
+            dist = batched_candidate_distances(queries_l, cand.astype(jnp.float32), metric)
+            dist = jnp.where(valid, dist, _BIG)
+            neg, idx = jax.lax.top_k(-dist, kk)
+            local_d = -neg
         local_ids = jnp.take_along_axis(sh_ids[rows], idx, axis=1)
-        local_d = -neg
         # global merge: gather every shard's top-k, re-rank
         all_d = jax.lax.all_gather(local_d, shard_axis)  # (S, Q, k)
         all_ids = jax.lax.all_gather(local_ids, shard_axis)
@@ -252,12 +277,11 @@ def sharded_knn(
     scale_spec = None if sharded.shard_scales is None else P(shard_axis, None)
     rep = P()
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_fn,
-        mesh=mesh,
-        in_specs=(qspec, shard_spec_off, shard_spec_ids, shard_spec_emb, scale_spec, rep, rep, rep),
-        out_specs=(qspec, qspec),
-        check_vma=False,
+        mesh,
+        (qspec, shard_spec_off, shard_spec_ids, shard_spec_emb, scale_spec, rep, rep, rep),
+        (qspec, qspec),
     )
     return fn(
         jnp.asarray(queries, jnp.float32),

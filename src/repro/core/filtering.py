@@ -11,9 +11,23 @@ applies the query predicate:
   * kNN(k):    top-k smallest distances (optionally also range-limited,
     which is the paper's Table 3 "30NN within radius 0.5" setup).
 
-The gather + distance is the query-time hot spot; with
-``use_kernel=True`` the distance matrix is computed by the Pallas
-`pairwise_l2` kernel (MXU-tiled); the default jnp path is the oracle.
+The gather + distance (+ top-k) is the query-time hot spot. Both query
+types share one jitted plan (`_query_impl`) that runs search and
+filtering in a single compiled program, with two filtering backends:
+
+  * ``use_kernel=True``: the fused `repro.kernels.lmi_filter` Pallas
+    kernel — candidate rows are gathered HBM -> VMEM tile by tile, the
+    distance tile lives in VMEM, and kNN keeps a streaming top-k
+    accumulator, so the (Q, C, d) intermediate is never materialized
+    and distances never round-trip through HBM (interpret mode is
+    dispatched via `repro.kernels.common.should_interpret`);
+  * ``use_kernel=False`` (default): the jnp oracle
+    (`repro.kernels.lmi_filter.ref`), which materializes the gather —
+    numerically straightforward, and the fastest choice on CPU.
+
+The query path performs no per-call host sync: the candidate capacity
+comes from `LMI.max_bucket_size` build metadata (`lmi.query_plan_params`)
+and the radius rides along as a device scalar.
 """
 from __future__ import annotations
 
@@ -24,7 +38,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lmi as lmi_lib
-from repro.core.distances import _EPS
+from repro.core.distances import batched_candidate_distances
+from repro.kernels.common import should_interpret
+from repro.kernels.lmi_filter import ops as lf_ops, ref as lf_ref
 
 Array = jax.Array
 
@@ -37,37 +53,40 @@ class FilterResult(NamedTuple):
     mask: Array  # (Q, C) bool — passes the predicate
 
 
-def _candidate_distances(
-    queries: Array, cand_emb: Array, valid: Array, metric: str = "euclidean"
-) -> Array:
-    """(Q, C) distances; invalid slots get +BIG."""
-    q = queries[:, None, :]  # (Q, 1, d)
-    if metric == "euclidean":
-        d = jnp.sqrt(jnp.maximum(jnp.sum((cand_emb - q) ** 2, axis=-1), 0.0))
-    elif metric == "sq_euclidean":
-        d = jnp.sum((cand_emb - q) ** 2, axis=-1)
-    elif metric == "cosine":
-        num = jnp.sum(cand_emb * q, axis=-1)
-        den = jnp.linalg.norm(cand_emb, axis=-1) * jnp.linalg.norm(q, axis=-1)
-        d = 1.0 - num / jnp.maximum(den, _EPS)
+@functools.partial(
+    jax.jit,
+    static_argnames=("stop_count", "cap", "metric", "mode", "k", "use_kernel", "interpret"),
+)
+def _query_impl(
+    index, queries, radius, *, stop_count, cap, metric, mode, k, use_kernel, interpret
+):
+    """One compiled plan for the whole query: search -> filter -> predicate.
+
+    ``radius`` is a device scalar (embedding-space units; +BIG disables
+    the range limit), so changing it never retraces.
+    """
+    cand_ids, rows, valid, _nb, _nc = lmi_lib._search_core(index, queries, stop_count, cap)
+    emb = index.sorted_embeddings
+    if mode == "range":
+        if use_kernel:
+            d = lf_ops.lmi_filter_range(queries, rows, valid, emb, metric=metric,
+                                        interpret=interpret)
+        else:
+            d = lf_ref.lmi_filter_ref(queries, rows, valid, emb, metric=metric)
+        mask = d <= radius
+        return jnp.where(mask, cand_ids, -1), d, mask
+    # ---- kNN: top-k then range-limit (equivalent to limit-then-top-k,
+    # since any candidate within the radius that is dropped from the
+    # top-k is dominated by k closer candidates, all within the radius).
+    if use_kernel:
+        top_d, top_slot = lf_ops.lmi_filter_topk(queries, rows, valid, emb, k,
+                                                 metric=metric, interpret=interpret)
     else:
-        raise ValueError(f"unknown metric {metric!r}")
-    return jnp.where(valid, d, _BIG)
-
-
-@functools.partial(jax.jit, static_argnums=(2, 5))
-def _filter_impl(index, queries, metric, rows, valid, use_kernel):
-    cand_emb = index.sorted_embeddings[rows]  # (Q, C, d)
-    if use_kernel and metric in ("euclidean", "sq_euclidean"):
-        from repro.kernels.pairwise_l2 import ops as pw_ops
-
-        d = jax.vmap(lambda qq, ee: pw_ops.pairwise_l2(qq[None, :], ee)[0])(queries, cand_emb)
-        if metric == "euclidean":
-            d = jnp.sqrt(jnp.maximum(d, 0.0))
-        d = jnp.where(valid, d, _BIG)
-    else:
-        d = _candidate_distances(queries, cand_emb, valid, metric)
-    return d
+        top_d, top_slot = lf_ref.lmi_filter_topk_ref(queries, rows, valid, emb, k,
+                                                     metric=metric)
+    top_ids = jnp.take_along_axis(cand_ids, jnp.maximum(top_slot, 0), axis=1)
+    found = (top_d < _BIG) & (top_d <= radius)
+    return jnp.where(found, top_ids, -1), jnp.where(found, top_d, jnp.inf), found
 
 
 def range_query(
@@ -78,6 +97,8 @@ def range_query(
     metric: str = "euclidean",
     radius_scale: float = 1.0,
     use_kernel: bool = False,
+    interpret: Optional[bool] = None,
+    candidate_cap: Optional[int] = None,
 ) -> FilterResult:
     """End-to-end LMI range query (paper Table 2).
 
@@ -86,10 +107,15 @@ def range_query(
     Euclidean: Q-range 0.5 -> cutoff 0.75).
     """
     q = jnp.asarray(queries, jnp.float32)
-    cand_ids, rows, valid = lmi_lib.search_rows(index, q, stop_condition)
-    d = _filter_impl(index, q, metric, rows, valid, use_kernel)
-    mask = d <= radius * radius_scale
-    return FilterResult(ids=jnp.where(mask, cand_ids, -1), distances=d, mask=mask)
+    stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
+    if interpret is None:
+        interpret = should_interpret()
+    ids, d, mask = _query_impl(
+        index, q, jnp.float32(radius * radius_scale),
+        stop_count=stop_count, cap=cap, metric=metric, mode="range", k=0,
+        use_kernel=use_kernel, interpret=interpret,
+    )
+    return FilterResult(ids=ids, distances=d, mask=mask)
 
 
 def knn_query(
@@ -101,6 +127,8 @@ def knn_query(
     max_radius: Optional[float] = None,
     radius_scale: float = 1.0,
     use_kernel: bool = False,
+    interpret: Optional[bool] = None,
+    candidate_cap: Optional[int] = None,
 ) -> tuple[Array, Array]:
     """kNN over the candidate set (paper Table 3: 30NN with max radius).
 
@@ -108,23 +136,44 @@ def knn_query(
     candidates hold id -1 / distance +inf.
     """
     q = jnp.asarray(queries, jnp.float32)
-    cand_ids, rows, valid = lmi_lib.search_rows(index, q, stop_condition)
-    d = _filter_impl(index, q, metric, rows, valid, use_kernel)
-    if max_radius is not None:
-        ok = d <= max_radius * radius_scale
-        d = jnp.where(ok, d, _BIG)
-    neg_top, idx = jax.lax.top_k(-d, k)  # (Q, k)
-    top_d = -neg_top
-    top_ids = jnp.take_along_axis(cand_ids, idx, axis=1)
-    found = top_d < _BIG
-    return jnp.where(found, top_ids, -1), jnp.where(found, top_d, jnp.inf)
+    stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
+    if interpret is None:
+        interpret = should_interpret()
+    radius = _BIG if max_radius is None else jnp.float32(max_radius * radius_scale)
+    ids, d, _found = _query_impl(
+        index, q, radius,
+        stop_count=stop_count, cap=cap, metric=metric, mode="knn", k=int(k),
+        use_kernel=use_kernel, interpret=interpret,
+    )
+    return ids, d
+
+
+# ------------------------------------------------- unfused comparison baseline
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def unfused_candidate_distances(queries, rows, valid, embeddings, metric: str = "euclidean"):
+    """The pre-fusion filtering stage in its MXU-friendly form.
+
+    Materializes the (Q, C, d) candidate gather in HBM, then computes
+    distances with one blocked norm-decomposition call
+    (`distances.batched_candidate_distances` — this replaced a per-query
+    vmap over `pairwise_l2` that padded each 1-row query to 128 MXU
+    rows). Note the *benchmark's* "unfused" variant is the default
+    ``use_kernel=False`` query path, i.e. the broadcast-subtract oracle
+    in `kernels.lmi_filter.ref`; this helper is the decomposition
+    counterpart, shared with the sharded jnp fallback.
+    """
+    cand = jnp.asarray(embeddings, jnp.float32)[rows]  # (Q, C, d) materialized
+    d = batched_candidate_distances(queries, cand, metric)
+    return jnp.where(valid, d, _BIG)
 
 
 # ------------------------------------------------------------ brute force
 
 
-@functools.partial(jax.jit, static_argnums=(3,))
-def brute_force_distances(queries: Array, db: Array, _unused=None, metric: str = "euclidean"):
+@functools.partial(jax.jit, static_argnames=("metric",))
+def brute_force_distances(queries: Array, db: Array, metric: str = "euclidean"):
     """Exact (Q, M) distance panel over the embedding space — the linear
     scan baseline the paper compares against (PDB engine row of Table 3,
     but in embedding space)."""

@@ -236,12 +236,13 @@ def fit_distributed(
         inertia = jax.lax.psum(jnp.sum(jnp.min(d2, axis=-1)), axes)
         return c, inertia
 
-    fn = jax.shard_map(
+    from repro.compat import shard_map as _shard_map
+
+    fn = _shard_map(
         body,
-        mesh=mesh,
-        in_specs=(P(dk, None), P()),
-        out_specs=(P(), P()),
-        check_vma=False,
+        mesh,
+        (P(dk, None), P()),
+        (P(), P()),
     )
     c, inertia = fn(jnp.asarray(x, jnp.float32), key)
     return KMeansState(centroids=c, inertia=inertia, n_iter=jnp.asarray(max_iter))

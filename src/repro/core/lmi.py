@@ -22,7 +22,15 @@ search result (the queue pops leaves in joint-probability order), but it
 is branch-free, fully batched over queries, and shards over both queries
 and leaves. Candidate extraction returns a fixed-size (Q, C) id matrix +
 validity mask, so downstream filtering is one fused gather + distance +
-top-k — no ragged shapes anywhere.
+top-k — no ragged shapes anywhere. The fused stage is implemented by the
+`repro.kernels.lmi_filter` Pallas kernel (gather into VMEM + norm
+decomposition + streaming top-k; see repro.core.filtering), so the
+(Q, C, d) candidate intermediate is never materialized in HBM.
+
+The query path is host-sync-free: bucket statistics needed to size the
+fixed candidate capacity (``max_bucket_size``) are computed at build
+time and carried as static metadata on the LMI pytree, so `search` /
+`filtering.knn_query` never call back to the host after warmup.
 
 Buckets are stored CSR-style over a bucket-sorted copy of the embedding
 matrix, which makes the distributed version (repro.core.distributed_lmi)
@@ -72,6 +80,8 @@ class LMI:
     bucket_offsets: Array  # (n_leaves + 1,) int32
     sorted_ids: Array  # (M,) int32 — original object id per CSR row
     sorted_embeddings: Array  # (M, d) float32 — embeddings in CSR order
+    # --- build-time bucket stats (static, so query planning never syncs)
+    max_bucket_size: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     @property
     def n_leaves(self) -> int:
@@ -217,6 +227,7 @@ def build(
         bucket_offsets=jnp.asarray(offsets, jnp.int32),
         sorted_ids=jnp.asarray(perm, jnp.int32),
         sorted_embeddings=x[jnp.asarray(perm)],
+        max_bucket_size=int(sizes.max()),
     )
 
 
@@ -256,8 +267,28 @@ class SearchResult:
         self.n_candidates = n_candidates  # (Q,) int32 true candidate count
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def _search_impl(index: LMI, queries: Array, stop_count: int, cap: int):
+def query_plan_params(
+    index: LMI, stop_condition: float, candidate_cap: Optional[int] = None
+) -> tuple[int, int]:
+    """(stop_count, candidate_cap) for a query — host ints, zero device sync.
+
+    The capacity bound stop_count + max_bucket_size is exact (the ranked
+    bucket stream is cut when the candidates *before* a bucket reach
+    stop_count, so at most one bucket overshoots). ``max_bucket_size``
+    is build-time metadata; indexes predating it (or hand-built pytrees)
+    fall back to one device reduction.
+    """
+    stop_count = max(1, math.ceil(stop_condition * index.n_objects))
+    if candidate_cap is None:
+        max_bucket = index.max_bucket_size or int(jnp.max(index.bucket_sizes()))
+        candidate_cap = stop_count + max_bucket
+    return stop_count, int(candidate_cap)
+
+
+def _search_core(index: LMI, queries: Array, stop_count: int, cap: int):
+    """Traceable search body — shared by every query entry point (the
+    single-device `search`/`search_rows`, the fused `filtering` queries,
+    and the sharded variant's ranking logic mirrors it)."""
     logp = leaf_log_probs(index, queries)  # (Q, L)
     order = jnp.argsort(-logp, axis=-1)  # (Q, L) leaves best-first
     sizes = index.bucket_sizes()  # (L,)
@@ -288,6 +319,9 @@ def _search_impl(index: LMI, queries: Array, stop_count: int, cap: int):
     return cand_ids, rows, valid, n_buckets, n_cands
 
 
+_search_impl = functools.partial(jax.jit, static_argnums=(2, 3))(_search_core)
+
+
 def search(
     index: LMI,
     queries: Array,
@@ -300,13 +334,11 @@ def search(
     Buckets are consumed in joint-probability order until the candidate
     count reaches ``stop_condition * M``; the last bucket may overshoot,
     so the fixed candidate capacity is stop + max bucket size (exact).
+    Host-sync-free after warmup: the cap comes from build-time metadata.
     """
-    stop_count = max(1, math.ceil(stop_condition * index.n_objects))
-    if candidate_cap is None:
-        max_bucket = int(jnp.max(index.bucket_sizes()))
-        candidate_cap = stop_count + max_bucket
+    stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
     cand_ids, _rows, valid, n_buckets, n_cands = _search_impl(
-        index, jnp.asarray(queries, jnp.float32), stop_count, int(candidate_cap)
+        index, jnp.asarray(queries, jnp.float32), stop_count, cap
     )
     return SearchResult(cand_ids, valid, n_buckets, n_cands)
 
@@ -316,12 +348,9 @@ def search_rows(
 ):
     """Like `search` but returns CSR row indices (for fused filtering that
     gathers from `sorted_embeddings` without the extra id indirection)."""
-    stop_count = max(1, math.ceil(stop_condition * index.n_objects))
-    if candidate_cap is None:
-        max_bucket = int(jnp.max(index.bucket_sizes()))
-        candidate_cap = stop_count + max_bucket
+    stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
     cand_ids, rows, valid, n_buckets, n_cands = _search_impl(
-        index, jnp.asarray(queries, jnp.float32), stop_count, int(candidate_cap)
+        index, jnp.asarray(queries, jnp.float32), stop_count, cap
     )
     return cand_ids, rows, valid
 
@@ -360,4 +389,5 @@ def insert(index: LMI, new_embeddings: Array, new_ids: Optional[Array] = None) -
         bucket_offsets=jnp.asarray(new_offsets, jnp.int32),
         sorted_ids=jnp.asarray(ids_all[perm], jnp.int32),
         sorted_embeddings=jnp.asarray(emb_all[perm]),
+        max_bucket_size=int(sizes.max()),
     )

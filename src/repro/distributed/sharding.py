@@ -322,10 +322,11 @@ def sharded_embedding_lookup(
 
     daxes = data_axes(mesh)
     dkey = daxes if len(daxes) > 1 else daxes[0]
-    return jax.shard_map(
+    from repro.compat import shard_map as _shard_map
+
+    return _shard_map(
         local_fn,
-        mesh=mesh,
-        in_specs=(P(axis, None), P(dkey, None)),
-        out_specs=P(dkey, None, None),
-        check_vma=False,
+        mesh,
+        (P(axis, None), P(dkey, None)),
+        P(dkey, None, None),
     )(weight, ids)

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the compute hot-spots, each with a jnp oracle.
 
   pairwise_l2     — tiled all-pairs squared-L2 (filtering / retrieval)
+  lmi_filter      — fused LMI candidate filtering: HBM row gather +
+                    distance + streaming top-k (the query hot path)
   kmeans_assign   — fused distance+argmin (LMI build Lloyd iterations)
   flash_attention — blockwise online-softmax attention (LM prefill)
   embedding_bag   — gather + segment-sum (recsys lookup)  [pure-JAX ref +

@@ -19,6 +19,20 @@ def should_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def tpu_compiler_params(**kwargs):
+    """Mosaic compiler params across jax versions.
+
+    jax renamed ``TPUCompilerParams`` to ``CompilerParams``; resolve
+    whichever this jax provides so kernels do not pin a version.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 

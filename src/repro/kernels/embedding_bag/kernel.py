@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import tpu_compiler_params
+
 
 def _embag_kernel(ids_ref, w_ref, tab_ref, o_ref, acc_scr, *, bv, bag_len):
     v_idx = pl.program_id(1)
@@ -75,7 +77,7 @@ def embedding_bag_pallas(table, ids, weights, *, bb: int = 128, bv: int = 512, i
         ],
         out_specs=pl.BlockSpec((bb, D), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
         scratch_shapes=[pltpu.VMEM((bb, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

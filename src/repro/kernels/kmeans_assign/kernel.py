@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import tpu_compiler_params
+
 
 def _kmeans_assign_kernel(x_ref, c_ref, labels_ref, mind_ref):
     x = x_ref[...]  # (bn, d)
@@ -62,7 +64,7 @@ def kmeans_assign_pallas(x, centroids, *, bn: int = 512, interpret: bool = True)
             pl.BlockSpec((bn,), lambda i: (i,), memory_space=pltpu.VMEM),
             pl.BlockSpec((bn,), lambda i: (i,), memory_space=pltpu.VMEM),
         ),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -1,0 +1,4 @@
+from repro.kernels.lmi_filter import ops, ref
+from repro.kernels.lmi_filter.ops import lmi_filter_range, lmi_filter_topk
+
+__all__ = ["ops", "ref", "lmi_filter_range", "lmi_filter_topk"]

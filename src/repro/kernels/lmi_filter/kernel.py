@@ -1,0 +1,220 @@
+"""Pallas TPU kernel: fused LMI candidate filtering (gather + distance + top-k).
+
+Stage (iii) of the paper's query pipeline. The LMI search emits, per
+query, a fixed-capacity list of CSR row indices into the bucket-sorted
+embedding matrix. The pre-fusion implementation gathered those rows into
+a `(Q, C, d)` HBM intermediate and ran a broadcast-subtract distance over
+it — three full passes of candidate traffic plus two `(Q, C, d)` temps.
+
+This kernel fuses the whole stage. Per `(query-block, candidate-tile)`
+grid step it
+
+  1. DMAs the tile's candidate rows from the HBM-resident embedding
+     matrix straight into a `(bq, bc, d)` VMEM scratch (the gather),
+  2. computes squared-L2 via the norm decomposition
+     ``|c|^2 + |q|^2 - 2 c.q`` — the `c.q` term is one batched
+     `(bc, d) x (d,)` contraction per query row, MXU-eligible — or the
+     cosine distance from the same dot/norm pieces,
+  3. either writes the `(bq, bc)` distance tile to the `(Q, C)` output
+     (range mode) or folds it into a streaming per-query top-k
+     accumulator held in VMEM (knn mode), emitted once after the last
+     candidate tile.
+
+The `(Q, C, d)` intermediate never exists, and in knn mode the distances
+never round-trip through HBM: HBM traffic is one read of each candidate
+row plus the `(Q, k)` result.
+
+Candidate rows are per-query arbitrary, so the gather is one row-sized
+DMA per slot; all `bq * bc` copies of a tile are started before the
+first wait so the DMA engine can coalesce/overlap them. The candidate
+grid axis is sequential ("arbitrary") in knn mode because of the
+accumulator; query blocks stay parallel.
+
+Caveat (TPU): the row indices ride in VMEM and are read as scalars to
+form DMA addresses; on very old Mosaic versions scalar reads from VMEM
+may need to be routed via SMEM instead. Validated in interpret mode like
+every kernel in this package.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import tpu_compiler_params
+
+_BIG = 3.4e38
+_EPS = 1e-12
+
+METRICS = ("euclidean", "sq_euclidean", "cosine")
+
+
+def _gather_tile(rows_ref, emb_ref, cand_scr, sem):
+    """DMA rows[r, c] of the HBM embedding matrix into cand_scr[r, c]."""
+    bq, bc = rows_ref.shape
+
+    def start(t, _):
+        r, c = t // bc, t % bc
+        pltpu.make_async_copy(emb_ref.at[rows_ref[r, c]], cand_scr.at[r, c], sem).start()
+        return 0
+
+    def wait(t, _):
+        r, c = t // bc, t % bc
+        pltpu.make_async_copy(emb_ref.at[rows_ref[r, c]], cand_scr.at[r, c], sem).wait()
+        return 0
+
+    jax.lax.fori_loop(0, bq * bc, start, 0)
+    jax.lax.fori_loop(0, bq * bc, wait, 0)
+
+
+def _tile_distances(q, cand, valid, metric: str):
+    """(bq, bc) distances of each query to its own candidate rows.
+
+    q (bq, d) f32, cand (bq, bc, d) f32, valid (bq, bc) int32.
+    Invalid slots get +_BIG.
+    """
+    qc = jax.lax.dot_general(
+        cand, q, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # (bq, bc)
+    cn = jnp.sum(cand * cand, axis=-1)  # (bq, bc)
+    qn = jnp.sum(q * q, axis=-1)[:, None]  # (bq, 1)
+    if metric in ("euclidean", "sq_euclidean"):
+        d = jnp.maximum(cn + qn - 2.0 * qc, 0.0)
+        if metric == "euclidean":
+            d = jnp.sqrt(d)
+    elif metric == "cosine":
+        den = jnp.sqrt(jnp.maximum(cn * qn, _EPS * _EPS))
+        d = 1.0 - qc / den
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return jnp.where(valid != 0, d, _BIG)
+
+
+def _range_kernel(rows_ref, valid_ref, q_ref, emb_ref, out_ref, cand_scr, sem, *, metric):
+    _gather_tile(rows_ref, emb_ref, cand_scr, sem)
+    out_ref[...] = _tile_distances(q_ref[...], cand_scr[...], valid_ref[...], metric)
+
+
+def _topk_kernel(
+    rows_ref, valid_ref, q_ref, emb_ref, outd_ref, outi_ref,
+    cand_scr, topd_scr, topi_scr, sem, *, metric, k, bc,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        topd_scr[...] = jnp.full_like(topd_scr, _BIG)
+        topi_scr[...] = jnp.full_like(topi_scr, -1)
+
+    _gather_tile(rows_ref, emb_ref, cand_scr, sem)
+    d = _tile_distances(q_ref[...], cand_scr[...], valid_ref[...], metric)  # (bq, bc)
+
+    bq, kpad = topd_scr.shape
+    n = kpad + bc
+    # merge the running top-k with this tile: k rounds of extract-the-min
+    gslot = j * bc + jax.lax.broadcasted_iota(jnp.int32, (bq, bc), 1)
+    comb_d = jnp.concatenate([topd_scr[...], d], axis=1)  # (bq, n)
+    comb_i = jnp.concatenate([topi_scr[...], gslot], axis=1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bq, n), 1)
+
+    def extract(t, cd):
+        m = jnp.min(cd, axis=1, keepdims=True)  # (bq, 1)
+        # first index attaining the min (manual argmin: min over masked iota)
+        am = jnp.min(jnp.where(cd == m, lane, n), axis=1, keepdims=True)
+        sel = lane == am  # exactly one lane per row
+        idx = jnp.sum(jnp.where(sel, comb_i, 0), axis=1, keepdims=True)
+        # row exhausted (only _BIG left): the argmin lane is arbitrary and
+        # on tiles j > 0 its comb_i can hold an already-extracted slot —
+        # pin the contract value (-1) instead
+        idx = jnp.where(m >= _BIG, -1, idx)
+        topd_scr[:, pl.ds(t, 1)] = m
+        topi_scr[:, pl.ds(t, 1)] = idx
+        return jnp.where(sel, _BIG, cd)
+
+    jax.lax.fori_loop(0, k, extract, comb_d)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        outd_ref[...] = topd_scr[...]
+        outi_ref[...] = topi_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "bq", "bc", "interpret"))
+def lmi_filter_range_pallas(
+    queries, rows, valid, embeddings, *, metric: str, bq: int, bc: int, interpret: bool
+):
+    """queries (Q, d), rows/valid (Q, C), embeddings (M, d) -> (Q, C) f32.
+
+    Q % bq == 0, C % bc == 0 (ops.py pads). ``embeddings`` stays in
+    HBM/ANY and is gathered row-wise per tile.
+    """
+    q_, d = queries.shape
+    c_ = rows.shape[1]
+    grid = (q_ // bq, c_ // bc)
+    return pl.pallas_call(
+        functools.partial(_range_kernel, metric=metric),
+        out_shape=jax.ShapeDtypeStruct((q_, c_), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
+        scratch_shapes=[
+            pltpu.VMEM((bq, bc, d), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(rows, valid, queries, embeddings)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "kpad", "bq", "bc", "interpret"))
+def lmi_filter_topk_pallas(
+    queries, rows, valid, embeddings, *, metric: str, k: int, kpad: int, bq: int, bc: int,
+    interpret: bool,
+):
+    """Streaming top-k variant: -> (dist (Q, kpad) f32, slot (Q, kpad) i32).
+
+    ``slot`` indexes the candidate axis (0..C); slots k..kpad and queries
+    with fewer than k valid candidates hold +_BIG / -1. Distances are
+    ascending per row.
+    """
+    q_, d = queries.shape
+    c_ = rows.shape[1]
+    grid = (q_ // bq, c_ // bc)
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, metric=metric, k=k, bc=bc),
+        out_shape=(
+            jax.ShapeDtypeStruct((q_, kpad), jnp.float32),
+            jax.ShapeDtypeStruct((q_, kpad), jnp.int32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=(
+            pl.BlockSpec((bq, kpad), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bq, kpad), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq, bc, d), jnp.float32),
+            pltpu.VMEM((bq, kpad), jnp.float32),
+            pltpu.VMEM((bq, kpad), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(rows, valid, queries, embeddings)

@@ -1,0 +1,84 @@
+"""Jitted public wrappers for the lmi_filter kernel (pad + dispatch).
+
+Padding policy: queries/rows/valid are padded on the query and candidate
+axes (padded slots are invalid, so they come back as +_BIG and are
+sliced off). The embedding matrix is *never* padded or copied — it is
+the HBM-resident database and the kernel gathers rows from it in place;
+the feature dim therefore runs at its natural (possibly unaligned)
+width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, round_up, should_interpret
+from repro.kernels.lmi_filter.kernel import (
+    lmi_filter_range_pallas,
+    lmi_filter_topk_pallas,
+)
+
+_VMEM_BUDGET = 4 * 1024 * 1024  # candidate scratch budget per tile, bytes
+
+_BQ = 8  # query rows per block (f32 sublane quantum)
+
+
+def _pick_bc(d: int) -> int:
+    """Largest candidate-tile width whose (bq, bc, d) scratch fits."""
+    for bc in (512, 256, 128):
+        if _BQ * bc * d * 4 <= _VMEM_BUDGET:
+            return bc
+    return 128
+
+
+def _pad_inputs(queries, rows, valid, bc: int):
+    q = pad_to(jnp.asarray(queries, jnp.float32), 0, _BQ)
+    r = pad_to(jnp.asarray(rows, jnp.int32), 0, _BQ)
+    r = pad_to(r, 1, bc)
+    v = pad_to(jnp.asarray(valid, jnp.int32), 0, _BQ)
+    v = pad_to(v, 1, bc)  # padding is invalid (0)
+    return q, r, v
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def lmi_filter_range(queries, rows, valid, embeddings, metric: str = "euclidean",
+                     interpret: bool | None = None):
+    """Fused gather + distance over the candidate lists: -> (Q, C) f32.
+
+    queries (Q, d); rows/valid (Q, C) into embeddings (M, d). Invalid
+    slots get +3.4e38.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    n_q, c = rows.shape
+    bc = _pick_bc(queries.shape[1])
+    qp, rp, vp = _pad_inputs(queries, rows, valid, bc)
+    out = lmi_filter_range_pallas(
+        qp, rp, vp, jnp.asarray(embeddings, jnp.float32),
+        metric=metric, bq=_BQ, bc=bc, interpret=interpret,
+    )
+    return out[:n_q, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "interpret"))
+def lmi_filter_topk(queries, rows, valid, embeddings, k: int, metric: str = "euclidean",
+                    interpret: bool | None = None):
+    """Fused gather + distance + streaming top-k: -> (dist, slot) (Q, k).
+
+    ``slot`` indexes the candidate axis of ``rows``; exhausted slots
+    (fewer than k valid candidates) hold dist=+3.4e38, slot=-1.
+    Distances are ascending per row.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    n_q, c = rows.shape
+    bc = _pick_bc(queries.shape[1])
+    qp, rp, vp = _pad_inputs(queries, rows, valid, bc)
+    kpad = round_up(k, 8)
+    dist, slot = lmi_filter_topk_pallas(
+        qp, rp, vp, jnp.asarray(embeddings, jnp.float32),
+        metric=metric, k=k, kpad=kpad, bq=_BQ, bc=bc, interpret=interpret,
+    )
+    return dist[:n_q, :k], slot[:n_q, :k]

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import tpu_compiler_params
+
 
 def _pairwise_l2_kernel(x_ref, y_ref, out_ref):
     x = x_ref[...]  # (bn, d)
@@ -56,7 +58,7 @@ def pairwise_l2_pallas(x, y, *, bn: int = 256, bm: int = 256, interpret: bool = 
             pl.BlockSpec((bm, d), lambda i, j: (j, 0), memory_space=pltpu.VMEM),
         ],
         out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j), memory_space=pltpu.VMEM),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -18,23 +18,20 @@ from __future__ import annotations
 import jax
 
 
+from repro.compat import make_mesh as make_mesh_compat
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Small mesh over whatever devices exist (tests, examples)."""
     n = len(jax.devices())
     dp = max(1, n // model_parallel)
-    return jax.make_mesh(
-        (dp, model_parallel),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh_compat((dp, model_parallel), ("data", "model"))
 
 
 HW = dict(

@@ -47,10 +47,9 @@ def main():
     if args.sharded:
         from repro.core.distributed_lmi import shard_index, sharded_knn
 
-        mesh = jax.make_mesh(
-            (1, args.sharded), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        from repro.compat import make_mesh
+
+        mesh = make_mesh((1, args.sharded), ("data", "model"))
         sharded = shard_index(index, args.sharded)
         fn = lambda q: sharded_knn(sharded, q, k=args.k, mesh=mesh, stop_condition=args.stop)
     else:

@@ -213,10 +213,12 @@ def sharded_minibatch_loss(
         cnt = jax.lax.psum(cnt, data_axes)
         return loss_sum / jnp.maximum(cnt, 1.0)
 
-    fn = jax.shard_map(
+    from repro.compat import shard_map as _shard_map
+
+    fn = _shard_map(
         body,
-        mesh=mesh,
-        in_specs=(
+        mesh,
+        (
             P(dk, None),  # nodes: one subgraph per data group, replicated over model
             P((*data_axes, edge_axis)),  # edges split across the model axis too
             P((*data_axes, edge_axis)),
@@ -226,7 +228,6 @@ def sharded_minibatch_loss(
             jax.tree.map(lambda _: P(), params),  # params replicated
         ),
         out_specs=P(),
-        check_vma=False,
     )
     loss = fn(g.node_feat, g.edge_src, g.edge_dst, g.edge_mask, g.labels, g.label_mask, params)
     return loss, {"ce": loss}

@@ -185,17 +185,18 @@ def moe_ffn_ep(
         z = jax.lax.pmean(z, ep.expert_axis)
         return out.reshape(xb.shape), aux, z
 
-    fn = jax.shard_map(
+    from repro.compat import shard_map as _shard_map
+
+    fn = _shard_map(
         body,
-        mesh=ep.mesh,
-        in_specs=(
+        ep.mesh,
+        (
             ep.x_spec,
             P(None, None),
             P(ep.expert_axis, None, None),
             P(ep.expert_axis, None, None),
             P(ep.expert_axis, None, None),
         ),
-        out_specs=(ep.x_spec, P(), P()),
-        check_vma=False,
+        (ep.x_spec, P(), P()),
     )
     return fn(x, router_w, w1, w3, w2)

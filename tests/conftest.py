@@ -3,6 +3,89 @@ import pytest
 
 import jax
 
+try:  # pragma: no cover - only exercised where hypothesis is installed
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # The container image has no `hypothesis`; without it the whole suite
+    # failed at collection. Install a tiny deterministic stand-in that runs
+    # each @given test on a fixed pseudo-random sample of the strategy
+    # space (seeded per test name, so failures reproduce).
+    import random
+    import sys
+    import types
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def draw(self, rng):
+            return self._sample(rng)
+
+    def _integers(min_value=None, max_value=None):
+        lo = 0 if min_value is None else min_value
+        hi = (lo + 1000) if max_value is None else max_value
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _given(**strategies):
+        def deco(fn):
+            import functools
+            import inspect
+
+            sig = inspect.signature(fn)
+            fixture_params = [
+                p for name, p in sig.parameters.items() if name not in strategies
+            ]
+
+            @functools.wraps(fn)
+            def wrapper(*f_args, **f_kwargs):
+                # @settings may be applied on top of this wrapper
+                n = getattr(wrapper, "_stub_max_examples", 10)
+                rng = random.Random(fn.__name__)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*f_args, **drawn, **f_kwargs)
+
+            # pytest must only see the non-strategy params (fixtures);
+            # otherwise it tries to resolve drawn args as fixtures
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature(fixture_params)
+            return wrapper
+
+        return deco
+
+    def _settings(max_examples=10, **_kw):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+
+        return deco
+
+    _mod = types.ModuleType("hypothesis")
+    _mod.given = _given
+    _mod.settings = _settings
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.sampled_from = _sampled_from
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _mod.strategies = _st
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _st
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")
+
 
 @pytest.fixture(scope="session")
 def rng():

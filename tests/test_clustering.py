@@ -150,8 +150,9 @@ def test_distributed_kmeans_matches_single(key):
     """shard_map Lloyd on a 1-device mesh == plain fit (same seeds)."""
     rng = np.random.default_rng(10)
     x, labels, _ = _blobs(rng, n=512, k=4)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     st = kmeans.fit_distributed(key, jnp.asarray(x), 4, mesh, data_axes=("data",), max_iter=30)
     pred = kmeans.predict(kmeans.KMeansState(st.centroids, st.inertia, st.n_iter), jnp.asarray(x))
     assert _cluster_accuracy(pred, labels, 4) > 0.97

@@ -87,8 +87,9 @@ def test_sharded_knn_exact_8_fake_devices():
 def test_bucket_topk_matches_exact_with_ample_margin(small_lmi, protein_embeddings):
     """§Perf 3a: top-k leaf ranking equals the full sort when K covers the
     stop condition with margin."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     sharded = shard_index(small_lmi, n_shards=1)
     q = protein_embeddings[:8]
     ids_ref, d_ref = sharded_knn(sharded, q, k=7, mesh=mesh, stop_condition=0.05)
@@ -101,8 +102,9 @@ def test_bucket_topk_matches_exact_with_ample_margin(small_lmi, protein_embeddin
 def test_quantized_store_preserves_ranking(small_lmi, protein_embeddings, store_dtype):
     """Quantized candidate stores (2x/4x memory): recall@k vs the exact
     f32 store stays high — the billion-scale memory lever."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     q = protein_embeddings[:16]
     ids_ref, _ = sharded_knn(shard_index(small_lmi, 1), q, k=10, mesh=mesh, stop_condition=0.1)
     ids_q, _ = sharded_knn(

@@ -26,16 +26,18 @@ def setup():
 def test_sharded_minibatch_matches_reference(setup):
     cfg, params, g = setup
     ref_loss, _ = gnn.loss_fn(cfg, params, g)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     loss, _ = gnn.sharded_minibatch_loss(cfg, params, g, mesh, ("data",))
     np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
 
 
 def test_sharded_minibatch_grads_match(setup):
     cfg, params, g = setup
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     g_ref = jax.grad(lambda p: gnn.loss_fn(cfg, p, g)[0])(params)
     g_sh = jax.grad(lambda p: gnn.sharded_minibatch_loss(cfg, p, g, mesh, ("data",))[0])(params)
     for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_sh)):

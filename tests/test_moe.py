@@ -62,8 +62,9 @@ def test_ep_matches_dense_single_shard():
     rng = np.random.default_rng(3)
     x, rw, w1, w3, w2 = _setup(rng)
     dense = moe_ffn(x, rw, w1, w3, w2, top_k=2, capacity_factor=8.0)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     ep = EPConfig(mesh=mesh, x_spec=P(None, None, None), expert_axis="model",
                   capacity_factor=8.0)
     out, aux, z = moe_ffn_ep(x[None], rw, w1, w3, w2, top_k=2, ep=ep)
@@ -74,8 +75,9 @@ def test_ep_matches_dense_single_shard():
 def test_ep_differentiable():
     rng = np.random.default_rng(4)
     x, rw, w1, w3, w2 = _setup(rng, T=32)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     ep = EPConfig(mesh=mesh, x_spec=P(None, None, None), expert_axis="model",
                   capacity_factor=8.0)
 

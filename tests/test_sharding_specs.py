@@ -23,9 +23,9 @@ KEY_STRUCT = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
 
 def _mesh():
-    return jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    from repro.compat import make_mesh
+
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _tree_struct_match(specs, shapes):
