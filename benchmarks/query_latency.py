@@ -1,4 +1,4 @@
-"""End-to-end query latency + filtering-stage HBM traffic (ISSUE 1).
+"""End-to-end query latency + filtering-stage HBM traffic (ISSUE 1 + 2).
 
 Compares, for range (r=0.3, P90-calibrated scale 0.7) and 30NN queries
 at the paper's 1 % stop condition:
@@ -10,6 +10,15 @@ at the paper's 1 % stop condition:
                the (Q, C, d) gather and its elementwise temporaries;
   * brute    — linear scan over the whole embedding matrix.
 
+plus (ISSUE 2) a CandidateStore dtype sweep of the fused kNN path —
+f32 / bf16 / int8 stores with in-kernel dequant: µs/query, modeled
+filtering-stage HBM bytes (candidate reads scale with the store
+itemsize; int8 adds a 4-byte/slot scale-tile read), resident store
+bytes, recall@30 vs the f32 store, and the bucket-run gather stats
+(mean runs per query ~ DMA count with run-length gather vs. mean
+candidate rows ~ per-row DMA count). The int8 sweep asserts the
+acceptance bound recall@30 >= 0.95.
+
 Wall-clock caveat: on CPU the fused variant runs under the Pallas
 *interpreter* (the kernel body is emulated op by op), so its wall time
 is not the hardware story — the modeled HBM bytes are the
@@ -20,7 +29,7 @@ HBM model (documented per term in `hbm_model`): op-granular — every
 jnp op in the unfused path materializes its result in HBM (gather,
 broadcast-diff, square, reduce), which is what the fused kernel
 structurally removes; the fused path touches each candidate row exactly
-once. Byte counts use the benchmark's float32 arrays.
+once, at the store's precision.
 
 Writes BENCH_query_latency.json next to the working directory.
 """
@@ -35,12 +44,14 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core import filtering, lmi
+from repro.core import store as store_lib
 
 REPS = 3
 K = 30
 RADIUS = 0.3
 RADIUS_SCALE = 0.7  # fig5 P90 calibration for Euclidean
 STOP = 0.01
+INT8_MIN_RECALL = 0.95  # ISSUE 2 acceptance bound
 
 
 def _timed(fn):
@@ -53,19 +64,25 @@ def _timed(fn):
     return (time.perf_counter() - t0) / REPS
 
 
-def hbm_model(Q: int, C: int, d: int, M: int, k: int, variant: str, mode: str) -> dict:
+def hbm_model(Q: int, C: int, d: int, M: int, k: int, variant: str, mode: str,
+              store_itemsize: int = 4, has_scales: bool = False) -> dict:
     """Modeled HBM bytes for the *filtering stage* (search excluded —
-    identical across variants). float32/int32 = 4 bytes."""
+    identical across variants). float32/int32 = 4 bytes; the fused
+    path's candidate reads scale with the CandidateStore itemsize."""
     f = 4
     QCd, QC, Qd = Q * C * d * f, Q * C * f, Q * d * f
     kpad = ((k + 7) // 8) * 8
     if variant == "fused":
         items = {
-            "candidate_row_reads": QCd,  # each row DMA'd HBM->VMEM once
+            # each row DMA'd HBM->VMEM once, at store precision
+            "candidate_row_reads": Q * C * d * store_itemsize,
             "rows_valid_reads": 2 * QC,  # (Q, C) int32 rows + mask
+            "segment_metadata_reads": 2 * (Q * (C // 8) * f),  # run-gather seg rows + flags
             "query_reads": Qd,
             "out_writes": Q * kpad * 2 * f if mode == "knn" else QC,
         }
+        if has_scales:
+            items["scale_tile_reads"] = QC  # (Q, C) f32 int8 dequant scales
     elif variant == "unfused":
         items = {
             "gather_src_reads": QCd,  # embedding rows read
@@ -149,6 +166,49 @@ def main() -> None:
                  / results[mode]["fused"]["hbm_bytes_filter"])
         results[mode]["hbm_bytes_ratio_unfused_over_fused"] = ratio
         print(f"# {mode}: unfused/fused modeled HBM bytes = {ratio:.1f}x")
+
+    # ---------------------------------------- CandidateStore dtype sweep
+    res = lmi.search(index, q, stop_condition=STOP)
+    runs_per_q = float(np.mean(np.sum(np.asarray(res.runs.lengths) > 0, axis=1)))
+    rows_per_q = float(np.mean(np.asarray(res.n_candidates)))
+    results["gather_metadata"] = {
+        "mean_bucket_runs_per_query": runs_per_q,  # ~ DMA count, run-length gather
+        "mean_candidate_rows_per_query": rows_per_q,  # ~ DMA count, per-row gather
+        "dma_reduction_run_vs_row": rows_per_q / max(runs_per_q, 1.0),
+    }
+    print(f"# gather runs/query={runs_per_q:.1f} rows/query={rows_per_q:.1f} "
+          f"(run-length DMA reduction {rows_per_q / max(runs_per_q, 1.0):.1f}x)")
+
+    ids_f32 = np.asarray(filtering.knn_query(index, q, K, STOP, use_kernel=True)[0])
+    results["store_sweep"] = {}
+    print("store_dtype,us_per_query,modeled_hbm_bytes_filter,store_bytes,recall_at_k_vs_f32")
+    for dtype in store_lib.STORE_DTYPES:
+        st = store_lib.from_lmi(index, dtype)
+        fn = lambda: filtering.knn_query(index, q, K, STOP, use_kernel=True, store=st)[1]
+        sec = _timed(fn)
+        us_q = sec / n_q * 1e6
+        model = hbm_model(
+            n_q, cap, d, m, K, "fused", "knn",
+            store_itemsize=st.data.dtype.itemsize, has_scales=st.scales is not None,
+        )
+        ids_st = np.asarray(filtering.knn_query(index, q, K, STOP, use_kernel=True, store=st)[0])
+        recall = float(np.mean([
+            len((set(ids_f32[i]) - {-1}) & (set(ids_st[i]) - {-1}))
+            / max((ids_f32[i] >= 0).sum(), 1)
+            for i in range(n_q)
+        ]))
+        results["store_sweep"][dtype] = {
+            "us_per_query": us_q,
+            "hbm_bytes_filter": model["total"],
+            "hbm_bytes_items": model,
+            "store_bytes": st.nbytes(include_metadata=False),
+            "recall_at_k_vs_f32": recall,
+        }
+        print(f"{dtype},{us_q:.1f},{model['total']},{st.nbytes(include_metadata=False)},{recall:.4f}")
+    int8_recall = results["store_sweep"]["int8"]["recall_at_k_vs_f32"]
+    assert int8_recall >= INT8_MIN_RECALL, (
+        f"int8 store recall@{K} {int8_recall:.3f} < acceptance bound {INT8_MIN_RECALL}"
+    )
 
     out = "BENCH_query_latency.json"
     with open(out, "w") as fh:

@@ -47,7 +47,10 @@ _DEF_RE = re.compile(
     r"([a-zA-Z][\w\-]*)\("
 )
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+# fusions say `calls=%comp`; plain call ops (newer XLA emits scan bodies
+# this way) say `to_apply=%comp` — follow both, or loop bodies that wrap
+# their computation in a call are silently counted zero times
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")

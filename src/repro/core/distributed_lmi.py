@@ -3,15 +3,26 @@
 Sharding design (DESIGN.md §3):
 
   * the *model* axis owns the database: leaf bucket ``b`` lives on shard
-    ``b % n_shards``; the CSR store is split into per-shard padded blocks;
+    ``b % n_shards``; the candidate store is split into per-shard padded
+    blocks — a `repro.core.store.CandidateStore` whose leaves carry a
+    leading shard axis (f32/bf16/int8 data + scales + ids + local CSR
+    offsets);
   * the *data* (and *pod*) axes own the queries: each query block is
     serviced by the 16 model-axis devices that jointly hold one DB copy;
   * node-model parameters and the (tiny) global bucket-size vector are
     replicated, so every device deterministically computes the *same*
-    global probability ranking and stop-condition cut — a shard then
-    extracts only the candidates of buckets it owns, scores them locally,
-    and a global top-k merge (`all_gather` of per-shard top-k, k << C)
-    produces exactly the single-device answer.
+    global probability ranking and stop-condition cut
+    (`lmi.rank_visited_buckets` — literally the same function the
+    single-device path runs) — a shard then extracts only the candidates
+    of buckets it owns (`lmi.extract_rows` over its local offsets),
+    scores them locally, and a global top-k merge (`all_gather` of
+    per-shard top-k, k << C) produces exactly the single-device answer.
+
+One query engine (ISSUE 2): per-shard filtering is a call to
+`filtering.filter_topk` on the block-local CandidateStore — the very
+entry point `filtering.knn_query` uses — so the fused Pallas kernel,
+in-kernel dequantization of quantized stores, and the run-length gather
+all apply per shard with no sharded-only gather/dequant code path.
 
 Collective volume per query batch: O(devices * k * d_result) — independent
 of database size, which is what makes the index scalable to 1000+ nodes.
@@ -22,17 +33,17 @@ of database size, which is what makes the index scalable to 1000+ nodes.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
 from repro.core import lmi as lmi_lib
+from repro.core import store as store_lib
 
 Array = jax.Array
 
@@ -42,7 +53,7 @@ _BIG = jnp.float32(3.4e38)
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ShardedLMI:
-    """Per-shard padded CSR stores, stacked over the leading shard dim."""
+    """Replicated node models + a CandidateStore stacked over the shard dim."""
 
     arities: tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
     model_type: str = dataclasses.field(metadata=dict(static=True))
@@ -50,10 +61,7 @@ class ShardedLMI:
     l1_params: dict[str, Array]  # replicated
     l2_params: dict[str, Array]  # replicated
     global_sizes: Array  # (n_leaves,) int32, replicated
-    shard_offsets: Array  # (S, n_leaves + 1) int32 — local CSR offsets
-    shard_ids: Array  # (S, rows_cap) int32 — original object ids
-    shard_embeddings: Array  # (S, rows_cap, d) f32 / bf16 / int8 store
-    shard_scales: Optional[Array] = None  # (S, rows_cap) int8 dequant scales
+    store: store_lib.CandidateStore  # leaves (S, ...): per-shard padded CSR blocks
     # --- build-time stats (static, so query planning never syncs)
     n_objects: int = dataclasses.field(default=0, metadata=dict(static=True))
     max_bucket_size: int = dataclasses.field(default=0, metadata=dict(static=True))
@@ -62,15 +70,32 @@ class ShardedLMI:
     def n_leaves(self) -> int:
         return self.arities[0] * self.arities[1]
 
+    # ------------------------------------------------- legacy array views
+    @property
+    def shard_offsets(self) -> Array:  # (S, n_leaves + 1) local CSR offsets
+        return self.store.offsets
+
+    @property
+    def shard_ids(self) -> Array:  # (S, rows_cap) original object ids
+        return self.store.ids
+
+    @property
+    def shard_embeddings(self) -> Array:  # (S, rows_cap, d) store-dtype rows
+        return self.store.data
+
+    @property
+    def shard_scales(self) -> Optional[Array]:  # (S, rows_cap) int8 scales
+        return self.store.scales
+
 
 def shard_index(index: lmi_lib.LMI, n_shards: int, store_dtype: str = "float32") -> ShardedLMI:
     """Split a built LMI into ``n_shards`` bucket-owned blocks (host-side).
 
     ``store_dtype``: candidate-store precision. "float32" (exact),
     "bfloat16" (2x smaller; <1e-2 relative distance error) or "int8"
-    (4x smaller; per-row absmax scales kept in the last embedding column
-    slot — the billion-scale memory lever; recall impact measured in
-    tests/test_distributed_lmi.py).
+    (4x smaller; per-row absmax scales — the billion-scale memory lever;
+    recall impact measured in tests/test_distributed_lmi.py). The
+    quantization contract lives in `repro.core.store.quantize`.
     """
     offsets = np.asarray(index.bucket_offsets, np.int64)
     sizes = offsets[1:] - offsets[:-1]
@@ -97,20 +122,6 @@ def shard_index(index: lmi_lib.LMI, n_shards: int, store_dtype: str = "float32")
             sh_emb[s, cursor : cursor + n] = emb[lo:hi]
             cursor += n
 
-    if store_dtype == "float32":
-        store = jnp.asarray(sh_emb)
-        scales = None
-    elif store_dtype == "bfloat16":
-        store = jnp.asarray(sh_emb, jnp.bfloat16)
-        scales = None
-    elif store_dtype == "int8":
-        absmax = np.maximum(np.abs(sh_emb).max(axis=-1, keepdims=True), 1e-12)
-        q = np.clip(np.round(sh_emb / absmax * 127.0), -127, 127).astype(np.int8)
-        store = jnp.asarray(q)
-        scales = jnp.asarray((absmax[..., 0] / 127.0).astype(np.float32))
-    else:
-        raise ValueError(f"unknown store_dtype {store_dtype!r}")
-
     return ShardedLMI(
         arities=index.arities,
         model_type=index.model_type,
@@ -118,10 +129,7 @@ def shard_index(index: lmi_lib.LMI, n_shards: int, store_dtype: str = "float32")
         l1_params=index.l1_params,
         l2_params=index.l2_params,
         global_sizes=jnp.asarray(sizes, jnp.int32),
-        shard_offsets=jnp.asarray(sh_off, jnp.int32),
-        shard_ids=jnp.asarray(sh_ids),
-        shard_embeddings=store,
-        shard_scales=scales,
+        store=store_lib.make_store(sh_emb, sh_ids, sh_off, store_dtype),
         n_objects=index.n_objects,
         max_bucket_size=index.max_bucket_size or int(sizes.max()),
     )
@@ -140,44 +148,18 @@ def _local_candidates(
 ):
     """Candidate CSR rows owned by this shard, in global probability order.
 
-    Identical ranking logic to `lmi._search_impl`, but the slot->row gather
-    walks the shard-local cumulative sizes, so each shard materialises only
-    its own share of the candidate set.
-
-    ``bucket_topk``: rank only the top-K leaves by probability instead of
-    full-sorting all of them (§Perf iteration 3a: the (Q, 16384) argsort
-    dominated the search's compute AND memory terms; K = 4x the expected
-    bucket count needed for the stop condition loses <0.1% of candidates
-    on balanced indexes). None = exact full sort.
+    The ranking and stop cut are `lmi.rank_visited_buckets` on the
+    replicated *global* sizes — identical on every shard — and the
+    slot->row walk is `lmi.extract_rows` over the shard-local offsets,
+    so each shard materializes only its own share of the candidate set.
     """
     index_stub = _ProbStub(model_type, l1_params, l2_params)
     logp = lmi_lib.leaf_log_probs(index_stub, queries)  # (Q, L)
-    if bucket_topk is not None and bucket_topk < logp.shape[-1]:
-        _, order = jax.lax.top_k(logp, bucket_topk)  # (Q, K) best-first
-    else:
-        order = jnp.argsort(-logp, axis=-1)  # (Q, L)
-    gsz = global_sizes[order]  # (Q, L|K) global sizes, best-first
-    gcsum = jnp.cumsum(gsz, axis=-1)
-    visited = (gcsum - gsz) < stop_count  # same cut on every shard
-
-    local_sizes = local_offsets[1:] - local_offsets[:-1]
-    lsz = jnp.where(visited, local_sizes[order], 0)  # only visited buckets
-    lcsum = jnp.cumsum(lsz, axis=-1)
-    n_local = lcsum[:, -1]
-
-    slots = jnp.arange(cap)
-
-    def per_query(lcsum_q, order_q):
-        rank = jnp.searchsorted(lcsum_q, slots, side="right")
-        rank_c = jnp.minimum(rank, lcsum_q.shape[0] - 1)
-        leaf_id = order_q[rank_c]
-        within = slots - jnp.where(rank > 0, lcsum_q[jnp.maximum(rank_c - 1, 0)], 0)
-        within = jnp.where(rank > 0, within, slots)
-        return local_offsets[leaf_id] + within
-
-    rows = jax.vmap(per_query)(lcsum, order)  # (Q, cap)
-    valid = slots[None, :] < n_local[:, None]
-    return jnp.where(valid, rows, 0), valid
+    order, visited, _sz = lmi_lib.rank_visited_buckets(
+        logp, global_sizes, stop_count, bucket_topk
+    )
+    rows, valid, _n = lmi_lib.extract_rows(order, visited, local_offsets, cap)
+    return rows, valid
 
 
 class _ProbStub:
@@ -199,6 +181,8 @@ def sharded_knn(
     shard_axis: str = "model",
     local_cap: Optional[int] = None,
     metric: str = "euclidean",
+    max_radius: Optional[float] = None,
+    radius_scale: float = 1.0,
     n_objects: Optional[int] = None,
     bucket_topk: Optional[int] = None,
     use_kernel: bool = False,
@@ -213,11 +197,15 @@ def sharded_knn(
     ``n_objects`` must be passed when tracing pre-metadata pytrees (the
     default comes from static build stats — no device sync).
 
-    ``use_kernel=True`` runs the per-shard filtering stage through the
-    fused `repro.kernels.lmi_filter` Pallas kernel (float32 stores only:
-    the shard-of-rows gather stays local, candidates go HBM -> VMEM
-    without a (Q, cap, d) intermediate); quantized stores fall back to
-    the jnp path, which dequantizes in the gather.
+    ``max_radius`` / ``radius_scale`` mirror `filtering.knn_query`
+    (paper Table 3: 30NN within a radius): merged answers farther than
+    ``max_radius * radius_scale`` come back id -1 / distance +inf.
+
+    ``use_kernel=True`` runs the per-shard filtering through the fused
+    `repro.kernels.lmi_filter` Pallas kernel for *every* store dtype —
+    quantized stores are dequantized in VMEM after the gather, exactly as
+    on the single-device path (it is the same `filtering.filter_topk`
+    call).
     """
     if n_objects is None:
         n_objects = sharded.n_objects or int(jnp.sum(sharded.global_sizes))
@@ -230,35 +218,32 @@ def sharded_knn(
         from repro.kernels.common import should_interpret
 
         interpret = should_interpret()
-    fused = use_kernel and sharded.shard_scales is None and \
-        sharded.shard_embeddings.dtype == jnp.float32
+    from repro.core import filtering
 
-    def local_fn(queries_l, sh_off, sh_ids, sh_emb, sh_scales, l1, l2, gsizes):
-        # shard_map passes block-local arrays with the shard dim stripped
-        sh_off, sh_ids, sh_emb = sh_off[0], sh_ids[0], sh_emb[0]
+    store_dtype = sharded.store.dtype
+    has_scales = sharded.store.scales is not None
+    radius = _BIG if max_radius is None else jnp.float32(max_radius * radius_scale)
+
+    def local_fn(queries_l, radius_l, data, scales, ids, offsets, l1, l2, gsizes):
+        # shard_map passes block-local arrays with a size-1 shard dim
+        local_store = store_lib.CandidateStore(
+            dtype=store_dtype,
+            data=data[0],
+            ids=ids[0],
+            offsets=offsets[0],
+            scales=scales[0] if has_scales else None,
+        )
         rows, valid = _local_candidates(
-            sharded.model_type, l1, l2, gsizes, sh_off, queries_l, stop_count, local_cap,
-            bucket_topk=bucket_topk,
+            sharded.model_type, l1, l2, gsizes, local_store.offsets, queries_l,
+            stop_count, local_cap, bucket_topk=bucket_topk,
         )
         kk = min(k, local_cap)
-        if fused:
-            from repro.kernels.lmi_filter import ops as lf_ops
-
-            local_d, top_slot = lf_ops.lmi_filter_topk(
-                queries_l, rows, valid, sh_emb, kk, metric=metric, interpret=interpret
-            )
-            idx = jnp.maximum(top_slot, 0)
-        else:
-            from repro.core.distances import batched_candidate_distances
-
-            cand = sh_emb[rows]  # (Q, cap, d) — f32/bf16/int8 store
-            if sh_scales is not None:
-                cand = cand.astype(jnp.float32) * sh_scales[0][rows][..., None]
-            dist = batched_candidate_distances(queries_l, cand.astype(jnp.float32), metric)
-            dist = jnp.where(valid, dist, _BIG)
-            neg, idx = jax.lax.top_k(-dist, kk)
-            local_d = -neg
-        local_ids = jnp.take_along_axis(sh_ids[rows], idx, axis=1)
+        local_d, top_slot = filtering.filter_topk(
+            local_store, queries_l, rows, valid, kk, metric=metric,
+            use_kernel=use_kernel, interpret=interpret,
+        )
+        idx = jnp.maximum(top_slot, 0)
+        local_ids = jnp.take_along_axis(local_store.ids[rows], idx, axis=1)
         # global merge: gather every shard's top-k, re-rank
         all_d = jax.lax.all_gather(local_d, shard_axis)  # (S, Q, k)
         all_ids = jax.lax.all_gather(local_ids, shard_axis)
@@ -267,28 +252,29 @@ def sharded_knn(
         negm, midx = jax.lax.top_k(-all_d, k)
         merged_ids = jnp.take_along_axis(all_ids, midx, axis=1)
         merged_d = -negm
-        found = merged_d < _BIG
+        found = (merged_d < _BIG) & (merged_d <= radius_l)
         return jnp.where(found, merged_ids, -1), jnp.where(found, merged_d, jnp.inf)
 
     qspec = P(query_axes if len(query_axes) > 1 else query_axes[0], None)
     shard_spec_off = P(shard_axis, None)
     shard_spec_ids = P(shard_axis, None)
     shard_spec_emb = P(shard_axis, None, None)
-    scale_spec = None if sharded.shard_scales is None else P(shard_axis, None)
+    scale_spec = None if not has_scales else P(shard_axis, None)
     rep = P()
 
     fn = _shard_map(
         local_fn,
         mesh,
-        (qspec, shard_spec_off, shard_spec_ids, shard_spec_emb, scale_spec, rep, rep, rep),
+        (qspec, rep, shard_spec_emb, scale_spec, shard_spec_ids, shard_spec_off, rep, rep, rep),
         (qspec, qspec),
     )
     return fn(
         jnp.asarray(queries, jnp.float32),
-        sharded.shard_offsets,
-        sharded.shard_ids,
-        sharded.shard_embeddings,
-        sharded.shard_scales,
+        radius,
+        sharded.store.data,
+        sharded.store.scales,
+        sharded.store.ids,
+        sharded.store.offsets,
         sharded.l1_params,
         sharded.l2_params,
         sharded.global_sizes,

@@ -11,23 +11,34 @@ applies the query predicate:
   * kNN(k):    top-k smallest distances (optionally also range-limited,
     which is the paper's Table 3 "30NN within radius 0.5" setup).
 
-The gather + distance (+ top-k) is the query-time hot spot. Both query
-types share one jitted plan (`_query_impl`) that runs search and
-filtering in a single compiled program, with two filtering backends:
+One query engine (ISSUE 2)
+--------------------------
+All filtering — single-device and bucket-sharded — goes through ONE pair
+of entry points, `filter_range` / `filter_topk`, operating on a
+`repro.core.store.CandidateStore` (the bucket-sorted embedding matrix in
+f32/bf16/int8 + per-row dequant scales + CSR metadata). The sharded path
+(`repro.core.distributed_lmi.sharded_knn`) is just a CandidateStore
+sharded over rows calling the same entry points per shard; there is no
+separate gather/dequant implementation anywhere else.
+
+Each entry point has two backends:
 
   * ``use_kernel=True``: the fused `repro.kernels.lmi_filter` Pallas
-    kernel — candidate rows are gathered HBM -> VMEM tile by tile, the
-    distance tile lives in VMEM, and kNN keeps a streaming top-k
-    accumulator, so the (Q, C, d) intermediate is never materialized
-    and distances never round-trip through HBM (interpret mode is
-    dispatched via `repro.kernels.common.should_interpret`);
+    kernel — candidate rows are gathered HBM -> VMEM run-by-run (one DMA
+    per bucket-run segment; the run structure described by
+    `lmi.BucketRuns` is rediscovered from the rows themselves),
+    dequantized in VMEM, the distance tile lives in VMEM, and kNN keeps
+    a streaming top-k accumulator, so the (Q, C, d) intermediate is
+    never materialized and distances never round-trip through HBM
+    (interpret mode is dispatched via `kernels.common.should_interpret`);
   * ``use_kernel=False`` (default): the jnp oracle
     (`repro.kernels.lmi_filter.ref`), which materializes the gather —
     numerically straightforward, and the fastest choice on CPU.
 
 The query path performs no per-call host sync: the candidate capacity
 comes from `LMI.max_bucket_size` build metadata (`lmi.query_plan_params`)
-and the radius rides along as a device scalar.
+and the radius rides along as a device scalar. ``bucket_topk`` swaps the
+full (Q, L) leaf argsort for a top-K ranking (`lmi.rank_visited_buckets`).
 """
 from __future__ import annotations
 
@@ -38,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lmi as lmi_lib
+from repro.core import store as store_lib
 from repro.core.distances import batched_candidate_distances
 from repro.kernels.common import should_interpret
 from repro.kernels.lmi_filter import ops as lf_ops, ref as lf_ref
@@ -53,40 +65,77 @@ class FilterResult(NamedTuple):
     mask: Array  # (Q, C) bool — passes the predicate
 
 
+# --------------------------------------------- the one filtering entry point
+
+
+def filter_range(store, queries, rows, valid, *, metric: str = "euclidean",
+                 use_kernel: bool = False, interpret: Optional[bool] = None):
+    """(Q, C) f32 distances of each query to its candidate rows of
+    ``store`` — THE shared filtering primitive (single-device + sharded).
+    Invalid slots get +3.4e38."""
+    if interpret is None:
+        interpret = should_interpret()
+    if use_kernel:
+        return lf_ops.lmi_filter_range(queries, rows, valid, store.data, metric=metric,
+                                       interpret=interpret, scales=store.scales)
+    return lf_ref.lmi_filter_ref(queries, rows, valid, store.data, metric=metric,
+                                 scales=store.scales)
+
+
+def filter_topk(store, queries, rows, valid, k: int, *, metric: str = "euclidean",
+                use_kernel: bool = False, interpret: Optional[bool] = None):
+    """Top-k smallest candidate distances over ``store``: -> (dist (Q, k)
+    ascending, slot (Q, k) into the candidate axis). The sharded path
+    calls this per shard on its block-local store."""
+    if interpret is None:
+        interpret = should_interpret()
+    if use_kernel:
+        return lf_ops.lmi_filter_topk(queries, rows, valid, store.data, k, metric=metric,
+                                      interpret=interpret, scales=store.scales)
+    return lf_ref.lmi_filter_topk_ref(queries, rows, valid, store.data, k, metric=metric,
+                                      scales=store.scales)
+
+
+# ------------------------------------------------------- jitted query plans
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("stop_count", "cap", "metric", "mode", "k", "use_kernel", "interpret"),
+    static_argnames=(
+        "stop_count", "cap", "metric", "mode", "k", "use_kernel", "interpret", "bucket_topk",
+    ),
 )
 def _query_impl(
-    index, queries, radius, *, stop_count, cap, metric, mode, k, use_kernel, interpret
+    index, store, queries, radius, *, stop_count, cap, metric, mode, k,
+    use_kernel, interpret, bucket_topk,
 ):
     """One compiled plan for the whole query: search -> filter -> predicate.
 
     ``radius`` is a device scalar (embedding-space units; +BIG disables
-    the range limit), so changing it never retraces.
+    the range limit), so changing it never retraces. ``store`` shares the
+    index's CSR layout, so the search's row indices address it directly.
     """
-    cand_ids, rows, valid, _nb, _nc = lmi_lib._search_core(index, queries, stop_count, cap)
-    emb = index.sorted_embeddings
+    cand_ids, rows, valid, _nb, _nc, _runs = lmi_lib._search_core(
+        index, queries, stop_count, cap, bucket_topk
+    )
     if mode == "range":
-        if use_kernel:
-            d = lf_ops.lmi_filter_range(queries, rows, valid, emb, metric=metric,
-                                        interpret=interpret)
-        else:
-            d = lf_ref.lmi_filter_ref(queries, rows, valid, emb, metric=metric)
+        d = filter_range(store, queries, rows, valid, metric=metric,
+                         use_kernel=use_kernel, interpret=interpret)
         mask = d <= radius
         return jnp.where(mask, cand_ids, -1), d, mask
     # ---- kNN: top-k then range-limit (equivalent to limit-then-top-k,
     # since any candidate within the radius that is dropped from the
     # top-k is dominated by k closer candidates, all within the radius).
-    if use_kernel:
-        top_d, top_slot = lf_ops.lmi_filter_topk(queries, rows, valid, emb, k,
-                                                 metric=metric, interpret=interpret)
-    else:
-        top_d, top_slot = lf_ref.lmi_filter_topk_ref(queries, rows, valid, emb, k,
-                                                     metric=metric)
+    top_d, top_slot = filter_topk(store, queries, rows, valid, k, metric=metric,
+                                  use_kernel=use_kernel, interpret=interpret)
     top_ids = jnp.take_along_axis(cand_ids, jnp.maximum(top_slot, 0), axis=1)
     found = (top_d < _BIG) & (top_d <= radius)
     return jnp.where(found, top_ids, -1), jnp.where(found, top_d, jnp.inf), found
+
+
+def _store_for(index, store):
+    """Default store: the f32 view of the index's CSR arrays (zero-copy)."""
+    return store_lib.from_lmi(index) if store is None else store
 
 
 def range_query(
@@ -99,21 +148,24 @@ def range_query(
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
     candidate_cap: Optional[int] = None,
+    store: Optional[store_lib.CandidateStore] = None,
+    bucket_topk: Optional[int] = None,
 ) -> FilterResult:
     """End-to-end LMI range query (paper Table 2).
 
     ``radius`` is in ground-truth (Q-distance) units; ``radius_scale``
     re-scales it into embedding space (paper footnote 3 uses 1.5 for
-    Euclidean: Q-range 0.5 -> cutoff 0.75).
+    Euclidean: Q-range 0.5 -> cutoff 0.75). ``store`` selects the
+    candidate-store precision (default: f32 view of the index).
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
     if interpret is None:
         interpret = should_interpret()
     ids, d, mask = _query_impl(
-        index, q, jnp.float32(radius * radius_scale),
+        index, _store_for(index, store), q, jnp.float32(radius * radius_scale),
         stop_count=stop_count, cap=cap, metric=metric, mode="range", k=0,
-        use_kernel=use_kernel, interpret=interpret,
+        use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
     )
     return FilterResult(ids=ids, distances=d, mask=mask)
 
@@ -129,11 +181,15 @@ def knn_query(
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
     candidate_cap: Optional[int] = None,
+    store: Optional[store_lib.CandidateStore] = None,
+    bucket_topk: Optional[int] = None,
 ) -> tuple[Array, Array]:
     """kNN over the candidate set (paper Table 3: 30NN with max radius).
 
     Returns (ids (Q, k), distances (Q, k)); slots beyond the available
-    candidates hold id -1 / distance +inf.
+    candidates hold id -1 / distance +inf. ``store`` selects the
+    candidate-store precision; ``bucket_topk`` the approximate leaf
+    ranking.
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
@@ -141,9 +197,9 @@ def knn_query(
         interpret = should_interpret()
     radius = _BIG if max_radius is None else jnp.float32(max_radius * radius_scale)
     ids, d, _found = _query_impl(
-        index, q, radius,
+        index, _store_for(index, store), q, radius,
         stop_count=stop_count, cap=cap, metric=metric, mode="knn", k=int(k),
-        use_kernel=use_kernel, interpret=interpret,
+        use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
     )
     return ids, d
 
@@ -162,7 +218,7 @@ def unfused_candidate_distances(queries, rows, valid, embeddings, metric: str = 
     rows). Note the *benchmark's* "unfused" variant is the default
     ``use_kernel=False`` query path, i.e. the broadcast-subtract oracle
     in `kernels.lmi_filter.ref`; this helper is the decomposition
-    counterpart, shared with the sharded jnp fallback.
+    counterpart, kept as the unfused baseline.
     """
     cand = jnp.asarray(embeddings, jnp.float32)[rows]  # (Q, C, d) materialized
     d = batched_candidate_distances(queries, cand, metric)

@@ -45,7 +45,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Optional, Sequence
+from typing import Any, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -258,13 +258,34 @@ def leaf_log_probs(index: LMI, queries: Array) -> Array:
 class SearchResult:
     """Fixed-shape candidate sets for a batch of queries."""
 
-    __slots__ = ("candidate_ids", "valid", "n_buckets", "n_candidates")
+    __slots__ = ("candidate_ids", "valid", "n_buckets", "n_candidates", "runs")
 
-    def __init__(self, candidate_ids, valid, n_buckets, n_candidates):
+    def __init__(self, candidate_ids, valid, n_buckets, n_candidates, runs=None):
         self.candidate_ids = candidate_ids  # (Q, C) int32, CSR row -> original id
         self.valid = valid  # (Q, C) bool
         self.n_buckets = n_buckets  # (Q,) int32 buckets visited
         self.n_candidates = n_candidates  # (Q,) int32 true candidate count
+        self.runs = runs  # BucketRuns — gather metadata (see below)
+
+
+class BucketRuns(NamedTuple):
+    """Per-query bucket-run gather metadata.
+
+    The candidate list of query q is the concatenation of contiguous CSR
+    runs, one per visited leaf in probability order: run r covers rows
+    ``starts[q, r] : starts[q, r] + lengths[q, r]`` (length 0 once the
+    stop condition cut the ranked stream). This is the structure that
+    makes run-length gathers (one DMA per bucket instead of one per row)
+    possible; the fused kernel rediscovers it directly from the emitted
+    ``rows`` as fixed-width segment metadata
+    (`kernels.lmi_filter.ops._segment_metadata` — cheaper than shipping
+    the variable-length run list), while this explicit form feeds query
+    planning and the benchmark's DMA-count model
+    (benchmarks/query_latency.py `gather_metadata`).
+    """
+
+    starts: Array  # (Q, R) int32 — CSR row where the ranked bucket's run begins
+    lengths: Array  # (Q, R) int32 — run length; 0 for non-visited ranks
 
 
 def query_plan_params(
@@ -285,22 +306,48 @@ def query_plan_params(
     return stop_count, int(candidate_cap)
 
 
-def _search_core(index: LMI, queries: Array, stop_count: int, cap: int):
-    """Traceable search body — shared by every query entry point (the
-    single-device `search`/`search_rows`, the fused `filtering` queries,
-    and the sharded variant's ranking logic mirrors it)."""
-    logp = leaf_log_probs(index, queries)  # (Q, L)
-    order = jnp.argsort(-logp, axis=-1)  # (Q, L) leaves best-first
-    sizes = index.bucket_sizes()  # (L,)
-    sz = sizes[order]  # (Q, L) bucket sizes best-first
-    csum = jnp.cumsum(sz, axis=-1)  # (Q, L)
-    # Bucket r is visited iff the candidates gathered before it are < stop.
-    before = csum - sz
-    visited = before < stop_count  # (Q, L)
-    n_buckets = jnp.sum(visited, axis=-1).astype(jnp.int32)
-    n_cands = jnp.sum(sz * visited, axis=-1).astype(jnp.int32)
+def rank_visited_buckets(
+    logp: Array, sizes: Array, stop_count: int, bucket_topk: Optional[int] = None
+):
+    """Rank leaves by probability and cut the stream at the stop condition.
 
-    # Slot j of the candidate list: find which ranked bucket it falls in.
+    Returns (order (Q, R), visited (Q, R), sz (Q, R)) where R is the
+    number of ranked leaves. Shared by the single-device and sharded
+    paths — both compute the *same global* ranking and cut, the sharded
+    path then walks shard-local offsets over it.
+
+    ``bucket_topk``: rank only the top-K leaves by probability instead of
+    full-sorting all of them (§Perf iteration 3a: the (Q, L) argsort
+    dominated the search's compute AND memory terms once filtering was
+    fused; K = 4x the expected bucket count needed for the stop condition
+    loses <0.1% of candidates on balanced indexes). None = exact full
+    sort.
+    """
+    if bucket_topk is not None and bucket_topk < logp.shape[-1]:
+        _, order = jax.lax.top_k(logp, bucket_topk)  # (Q, K) best-first
+    else:
+        order = jnp.argsort(-logp, axis=-1)  # (Q, L) best-first
+    sz = sizes[order]  # (Q, R) bucket sizes best-first
+    csum = jnp.cumsum(sz, axis=-1)
+    # Bucket r is visited iff the candidates gathered before it are < stop.
+    visited = (csum - sz) < stop_count  # (Q, R) — a prefix of the ranking
+    return order, visited, sz
+
+
+def extract_rows(order: Array, visited: Array, offsets: Array, cap: int):
+    """Map candidate slots to CSR rows: (rows (Q, cap), valid (Q, cap),
+    n_cands (Q,)).
+
+    ``offsets`` may be the global CSR offsets or a shard-local variant —
+    slot j walks the cumulative sizes of the visited buckets *under that
+    CSR*, so each shard materializes only its own share of the candidate
+    set while agreeing on the global ranking.
+    """
+    sizes = offsets[1:] - offsets[:-1]
+    sz = jnp.where(visited, sizes[order], 0)  # only visited buckets count
+    csum = jnp.cumsum(sz, axis=-1)
+    n_cands = csum[:, -1].astype(jnp.int32)
+
     slots = jnp.arange(cap)
 
     def per_query(csum_q, order_q):
@@ -309,17 +356,36 @@ def _search_core(index: LMI, queries: Array, stop_count: int, cap: int):
         leaf_id = order_q[rank_c]
         within = slots - jnp.where(rank > 0, csum_q[jnp.maximum(rank_c - 1, 0)], 0)
         within = jnp.where(rank > 0, within, slots)
-        row = index.bucket_offsets[leaf_id] + within
-        return row
+        return offsets[leaf_id] + within
 
     rows = jax.vmap(per_query)(csum, order)  # (Q, cap) CSR rows
     valid = slots[None, :] < n_cands[:, None]
-    rows = jnp.where(valid, rows, 0)
+    return jnp.where(valid, rows, 0), valid, n_cands
+
+
+def _search_core(
+    index: LMI, queries: Array, stop_count: int, cap: int,
+    bucket_topk: Optional[int] = None,
+):
+    """Traceable search body — shared by every query entry point (the
+    single-device `search`/`search_rows`, the fused `filtering` queries;
+    the sharded variant composes the same `rank_visited_buckets` +
+    `extract_rows` pieces over shard-local offsets)."""
+    logp = leaf_log_probs(index, queries)  # (Q, L)
+    order, visited, sz = rank_visited_buckets(
+        logp, index.bucket_sizes(), stop_count, bucket_topk
+    )
+    n_buckets = jnp.sum(visited, axis=-1).astype(jnp.int32)
+    rows, valid, n_cands = extract_rows(order, visited, index.bucket_offsets, cap)
+    runs = BucketRuns(
+        starts=index.bucket_offsets[order].astype(jnp.int32),
+        lengths=jnp.where(visited, sz, 0).astype(jnp.int32),
+    )
     cand_ids = index.sorted_ids[rows]
-    return cand_ids, rows, valid, n_buckets, n_cands
+    return cand_ids, rows, valid, n_buckets, n_cands, runs
 
 
-_search_impl = functools.partial(jax.jit, static_argnums=(2, 3))(_search_core)
+_search_impl = functools.partial(jax.jit, static_argnums=(2, 3, 4))(_search_core)
 
 
 def search(
@@ -327,6 +393,7 @@ def search(
     queries: Array,
     stop_condition: float = 0.01,
     candidate_cap: Optional[int] = None,
+    bucket_topk: Optional[int] = None,
 ) -> SearchResult:
     """Batched LMI search.
 
@@ -335,22 +402,25 @@ def search(
     count reaches ``stop_condition * M``; the last bucket may overshoot,
     so the fixed candidate capacity is stop + max bucket size (exact).
     Host-sync-free after warmup: the cap comes from build-time metadata.
+    ``bucket_topk`` trades the full (Q, L) leaf argsort for a top-K
+    ranking (see `rank_visited_buckets`); None = exact.
     """
     stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
-    cand_ids, _rows, valid, n_buckets, n_cands = _search_impl(
-        index, jnp.asarray(queries, jnp.float32), stop_count, cap
+    cand_ids, _rows, valid, n_buckets, n_cands, runs = _search_impl(
+        index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk
     )
-    return SearchResult(cand_ids, valid, n_buckets, n_cands)
+    return SearchResult(cand_ids, valid, n_buckets, n_cands, runs)
 
 
 def search_rows(
-    index: LMI, queries: Array, stop_condition: float = 0.01, candidate_cap: Optional[int] = None
+    index: LMI, queries: Array, stop_condition: float = 0.01,
+    candidate_cap: Optional[int] = None, bucket_topk: Optional[int] = None,
 ):
     """Like `search` but returns CSR row indices (for fused filtering that
-    gathers from `sorted_embeddings` without the extra id indirection)."""
+    gathers from the candidate store without the extra id indirection)."""
     stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
-    cand_ids, rows, valid, n_buckets, n_cands = _search_impl(
-        index, jnp.asarray(queries, jnp.float32), stop_count, cap
+    cand_ids, rows, valid, n_buckets, n_cands, runs = _search_impl(
+        index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk
     )
     return cand_ids, rows, valid
 

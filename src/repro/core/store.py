@@ -1,0 +1,157 @@
+"""CandidateStore — the one candidate-store abstraction of the query engine.
+
+Stage (iii) of the paper's pipeline filters LMI candidates by a cheap
+vector distance. Everything that stage needs to touch lives here, in one
+pytree shared by the single-device (`repro.core.filtering`) and
+bucket-sharded (`repro.core.distributed_lmi`) paths:
+
+  * ``data``     — the bucket-sorted embedding matrix, stored in
+    ``float32`` (exact), ``bfloat16`` (2x smaller) or ``int8`` (4x
+    smaller, per-row absmax scales) — the memory lever that decides how
+    many database rows fit per chip (cf. Tian et al. 2022, "A Learned
+    Index for Exact Similarity Search in Metric Spaces": compact
+    per-partition stores are what make memory-bound filtering scale);
+  * ``scales``   — per-row dequantization scales (int8 only);
+  * ``ids``      — CSR row -> original object id;
+  * ``offsets``  — CSR bucket offsets (bucket ``b`` owns rows
+    ``offsets[b]:offsets[b+1]``), which is what makes each query's
+    candidate list a set of *contiguous bucket runs* of rows — the
+    structure the fused kernel's run-length gather exploits.
+
+Every leaf tolerates leading batch dims, so a sharded index is simply a
+CandidateStore whose leaves carry a leading shard axis and are split by
+``shard_map`` — the sharded query path reuses the exact same filtering
+entry points as the single-device one (see ``filtering.filter_topk``).
+
+Quantization contract (int8): symmetric per-row absmax — row ``r`` is
+stored as ``round(x / s_r)`` with ``s_r = max|x_r| / 127``; dequant is
+``q * s_r``, applied *after* the gather (in VMEM inside the fused
+kernel, or on the gathered (Q, C, d) block in the jnp oracle), so the
+HBM-resident store stays 1 byte/dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+STORE_DTYPES = ("float32", "bfloat16", "int8")
+
+_JNP_DTYPE = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "int8": jnp.int8,
+}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CandidateStore:
+    """Pytree candidate store; ``dtype`` is static so jitted query plans
+    specialize per precision (and never branch on device data)."""
+
+    dtype: str = dataclasses.field(metadata=dict(static=True))
+    data: Array  # (..., R, d) store-dtype embedding rows, bucket-sorted
+    ids: Array  # (..., R) int32 original object ids
+    offsets: Array  # (..., L + 1) int32 CSR bucket offsets
+    scales: Optional[Array] = None  # (..., R) float32 dequant scales (int8)
+
+    @property
+    def n_rows(self) -> int:
+        return self.data.shape[-2]
+
+    @property
+    def dim(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def n_buckets(self) -> int:
+        return self.offsets.shape[-1] - 1
+
+    def nbytes(self, include_metadata: bool = True) -> int:
+        """HBM bytes of the store (the benchmark's memory model)."""
+        n = self.data.size * self.data.dtype.itemsize
+        if self.scales is not None:
+            n += self.scales.size * self.scales.dtype.itemsize
+        if include_metadata:
+            n += self.ids.size * self.ids.dtype.itemsize
+            n += self.offsets.size * self.offsets.dtype.itemsize
+        return n
+
+    def shard_slice(self, index) -> "CandidateStore":
+        """The store of one leading-axis shard (e.g. inside shard_map,
+        where block-local leaves keep a size-1 shard dim)."""
+        return CandidateStore(
+            dtype=self.dtype,
+            data=self.data[index],
+            ids=self.ids[index],
+            offsets=self.offsets[index],
+            scales=None if self.scales is None else self.scales[index],
+        )
+
+
+def quantize(embeddings: Array, dtype: str) -> tuple[Array, Optional[Array]]:
+    """(data, scales) of ``embeddings`` in the requested store precision.
+
+    Works on any (..., R, d) batch; pure jnp so it can run device-side
+    (index build) or under vmap (per-shard stores).
+    """
+    if dtype not in STORE_DTYPES:
+        raise ValueError(f"store dtype must be one of {STORE_DTYPES}, got {dtype!r}")
+    x = jnp.asarray(embeddings, jnp.float32)
+    if dtype == "float32":
+        return x, None
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16), None
+    absmax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-12)  # (..., R)
+    scales = (absmax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scales[..., None]), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def make_store(embeddings: Array, ids: Array, offsets: Array, dtype: str = "float32") -> CandidateStore:
+    data, scales = quantize(embeddings, dtype)
+    return CandidateStore(
+        dtype=dtype,
+        data=data,
+        ids=jnp.asarray(ids, jnp.int32),
+        offsets=jnp.asarray(offsets, jnp.int32),
+        scales=scales,
+    )
+
+
+def from_lmi(index, dtype: str = "float32") -> CandidateStore:
+    """The store view of a built `repro.core.lmi.LMI` (f32 is zero-copy:
+    the leaves alias the index's CSR arrays)."""
+    return make_store(index.sorted_embeddings, index.sorted_ids, index.bucket_offsets, dtype)
+
+
+def gather_dequant(data: Array, scales: Optional[Array], rows: Array) -> Array:
+    """Gather + dequantize candidate rows to float32: (..., C) -> (..., C, d).
+
+    THE quantization contract in jnp form — the oracle
+    (`kernels.lmi_filter.ref`) and `dequantize_rows` both call this, so
+    a contract change (e.g. per-bucket scales) lands in one place.
+    Materializes the gathered block on purpose.
+    """
+    cand = jnp.asarray(data)[rows].astype(jnp.float32)
+    if scales is not None:
+        cand = cand * scales[rows][..., None]
+    return cand
+
+
+def dequantize_rows(store: CandidateStore, rows: Array) -> Array:
+    """`gather_dequant` over a CandidateStore."""
+    return gather_dequant(store.data, store.scales, rows)
+
+
+def dequantize(store: CandidateStore) -> Array:
+    """The full store back in float32 (tests / round-trip checks)."""
+    x = store.data.astype(jnp.float32)
+    if store.scales is not None:
+        x = x * store.scales[..., None]
+    return x

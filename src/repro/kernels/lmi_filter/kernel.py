@@ -1,21 +1,26 @@
-"""Pallas TPU kernel: fused LMI candidate filtering (gather + distance + top-k).
+"""Pallas TPU kernel: fused LMI candidate filtering (gather + dequant +
+distance + top-k) over a CandidateStore of any precision.
 
 Stage (iii) of the paper's query pipeline. The LMI search emits, per
 query, a fixed-capacity list of CSR row indices into the bucket-sorted
-embedding matrix. The pre-fusion implementation gathered those rows into
+embedding store. The pre-fusion implementation gathered those rows into
 a `(Q, C, d)` HBM intermediate and ran a broadcast-subtract distance over
 it — three full passes of candidate traffic plus two `(Q, C, d)` temps.
 
 This kernel fuses the whole stage. Per `(query-block, candidate-tile)`
 grid step it
 
-  1. DMAs the tile's candidate rows from the HBM-resident embedding
-     matrix straight into a `(bq, bc, d)` VMEM scratch (the gather),
-  2. computes squared-L2 via the norm decomposition
+  1. DMAs the tile's candidate rows from the HBM-resident store straight
+     into a `(bq, bc, d)` VMEM scratch *in the store's dtype* (f32, bf16
+     or int8 — the DMA moves 4x fewer bytes on an int8 store),
+  2. dequantizes in VMEM: widen to f32 and, for int8 stores, multiply by
+     the per-row scales (gathered jnp-side into a `(bq, bc)` tile input —
+     16 bytes/row of extra traffic vs. `4d` for the row itself),
+  3. computes squared-L2 via the norm decomposition
      ``|c|^2 + |q|^2 - 2 c.q`` — the `c.q` term is one batched
      `(bc, d) x (d,)` contraction per query row, MXU-eligible — or the
      cosine distance from the same dot/norm pieces,
-  3. either writes the `(bq, bc)` distance tile to the `(Q, C)` output
+  4. either writes the `(bq, bc)` distance tile to the `(Q, C)` output
      (range mode) or folds it into a streaming per-query top-k
      accumulator held in VMEM (knn mode), emitted once after the last
      candidate tile.
@@ -24,11 +29,18 @@ The `(Q, C, d)` intermediate never exists, and in knn mode the distances
 never round-trip through HBM: HBM traffic is one read of each candidate
 row plus the `(Q, k)` result.
 
-Candidate rows are per-query arbitrary, so the gather is one row-sized
-DMA per slot; all `bq * bc` copies of a tile are started before the
-first wait so the DMA engine can coalesce/overlap them. The candidate
-grid axis is sequential ("arbitrary") in knn mode because of the
-accumulator; query blocks stay parallel.
+Bucket-run gather: a query's candidate list is a concatenation of
+*contiguous CSR runs* (one per visited bucket — `lmi.BucketRuns`).
+`ops.py` rediscovers that run structure from the rows/valid arrays as
+per-segment gather metadata (`seg_rows`/`seg_contig`, one entry per
+SEG-slot group):
+segments that lie inside a run are fetched with ONE run-length DMA of
+SEG rows; only segments that straddle a run boundary (or contain invalid
+slots) fall back to per-row DMAs. With the paper's bucket sizes (mean >>
+SEG) this cuts the DMA count by ~SEG-fold. All copies of a tile are
+started before the first wait so the DMA engine can coalesce/overlap
+them. The candidate grid axis is sequential ("arbitrary") in knn mode
+because of the accumulator; query blocks stay parallel.
 
 Caveat (TPU): the row indices ride in VMEM and are read as scalars to
 form DMA addresses; on very old Mosaic versions scalar reads from VMEM
@@ -51,23 +63,69 @@ _EPS = 1e-12
 
 METRICS = ("euclidean", "sq_euclidean", "cosine")
 
+SEG = 8  # gather segment width (f32 sublane quantum); see ops._segment_metadata
 
-def _gather_tile(rows_ref, emb_ref, cand_scr, sem):
-    """DMA rows[r, c] of the HBM embedding matrix into cand_scr[r, c]."""
+
+def _gather_tile(rows_ref, segr_ref, segc_ref, emb_ref, cand_scr, sem):
+    """DMA the tile's candidate rows of the HBM store into cand_scr.
+
+    Row-run aware: segment s of query-row r covers candidate slots
+    [s*SEG, (s+1)*SEG); when ``segc_ref[r, s]`` is set those slots are
+    CSR-contiguous (inside one bucket run) and one SEG-row copy from
+    ``segr_ref[r, s]`` replaces SEG single-row copies.
+    """
     bq, bc = rows_ref.shape
+    nseg = bc // SEG
+
+    def seg_copy(r, s):
+        return pltpu.make_async_copy(
+            emb_ref.at[pl.ds(segr_ref[r, s], SEG)],
+            cand_scr.at[r, pl.ds(s * SEG, SEG)],
+            sem,
+        )
+
+    def row_copy(r, c):
+        return pltpu.make_async_copy(emb_ref.at[rows_ref[r, c]], cand_scr.at[r, c], sem)
 
     def start(t, _):
-        r, c = t // bc, t % bc
-        pltpu.make_async_copy(emb_ref.at[rows_ref[r, c]], cand_scr.at[r, c], sem).start()
+        r, s = t // nseg, t % nseg
+
+        @pl.when(segc_ref[r, s] != 0)
+        def _run():
+            seg_copy(r, s).start()
+
+        @pl.when(segc_ref[r, s] == 0)
+        def _rows():
+            for i in range(SEG):
+                row_copy(r, s * SEG + i).start()
+
         return 0
 
     def wait(t, _):
-        r, c = t // bc, t % bc
-        pltpu.make_async_copy(emb_ref.at[rows_ref[r, c]], cand_scr.at[r, c], sem).wait()
+        r, s = t // nseg, t % nseg
+
+        @pl.when(segc_ref[r, s] != 0)
+        def _run():
+            seg_copy(r, s).wait()
+
+        @pl.when(segc_ref[r, s] == 0)
+        def _rows():
+            for i in range(SEG):
+                row_copy(r, s * SEG + i).wait()
+
         return 0
 
-    jax.lax.fori_loop(0, bq * bc, start, 0)
-    jax.lax.fori_loop(0, bq * bc, wait, 0)
+    jax.lax.fori_loop(0, bq * nseg, start, 0)
+    jax.lax.fori_loop(0, bq * nseg, wait, 0)
+
+
+def _dequant(cand, scale_ref):
+    """Widen the gathered tile to f32 in VMEM; int8 stores multiply by the
+    per-row scale tile. (bq, bc, d) store-dtype -> (bq, bc, d) f32."""
+    c = cand.astype(jnp.float32)
+    if scale_ref is not None:
+        c = c * scale_ref[...][..., None]
+    return c
 
 
 def _tile_distances(q, cand, valid, metric: str):
@@ -93,15 +151,27 @@ def _tile_distances(q, cand, valid, metric: str):
     return jnp.where(valid != 0, d, _BIG)
 
 
-def _range_kernel(rows_ref, valid_ref, q_ref, emb_ref, out_ref, cand_scr, sem, *, metric):
-    _gather_tile(rows_ref, emb_ref, cand_scr, sem)
-    out_ref[...] = _tile_distances(q_ref[...], cand_scr[...], valid_ref[...], metric)
+def _range_kernel(*refs, metric, quant):
+    if quant:
+        (rows_ref, valid_ref, segr_ref, segc_ref, q_ref, scale_ref, emb_ref,
+         out_ref, cand_scr, sem) = refs
+    else:
+        (rows_ref, valid_ref, segr_ref, segc_ref, q_ref, emb_ref,
+         out_ref, cand_scr, sem) = refs
+        scale_ref = None
+    _gather_tile(rows_ref, segr_ref, segc_ref, emb_ref, cand_scr, sem)
+    cand = _dequant(cand_scr[...], scale_ref)
+    out_ref[...] = _tile_distances(q_ref[...], cand, valid_ref[...], metric)
 
 
-def _topk_kernel(
-    rows_ref, valid_ref, q_ref, emb_ref, outd_ref, outi_ref,
-    cand_scr, topd_scr, topi_scr, sem, *, metric, k, bc,
-):
+def _topk_kernel(*refs, metric, quant, k, bc):
+    if quant:
+        (rows_ref, valid_ref, segr_ref, segc_ref, q_ref, scale_ref, emb_ref,
+         outd_ref, outi_ref, cand_scr, topd_scr, topi_scr, sem) = refs
+    else:
+        (rows_ref, valid_ref, segr_ref, segc_ref, q_ref, emb_ref,
+         outd_ref, outi_ref, cand_scr, topd_scr, topi_scr, sem) = refs
+        scale_ref = None
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -109,8 +179,9 @@ def _topk_kernel(
         topd_scr[...] = jnp.full_like(topd_scr, _BIG)
         topi_scr[...] = jnp.full_like(topi_scr, -1)
 
-    _gather_tile(rows_ref, emb_ref, cand_scr, sem)
-    d = _tile_distances(q_ref[...], cand_scr[...], valid_ref[...], metric)  # (bq, bc)
+    _gather_tile(rows_ref, segr_ref, segc_ref, emb_ref, cand_scr, sem)
+    cand = _dequant(cand_scr[...], scale_ref)
+    d = _tile_distances(q_ref[...], cand, valid_ref[...], metric)  # (bq, bc)
 
     bq, kpad = topd_scr.shape
     n = kpad + bc
@@ -142,44 +213,61 @@ def _topk_kernel(
         outi_ref[...] = topi_scr[...]
 
 
+def _filter_specs(bq: int, bc: int, d: int, quant: bool):
+    """in_specs shared by both kernels: rows, valid, seg metadata, query
+    block, (int8) per-row scale tile, and the HBM-resident store."""
+    specs = [
+        pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
+        pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
+        pl.BlockSpec((bq, bc // SEG), lambda i, j: (i, j), memory_space=pltpu.VMEM),
+        pl.BlockSpec((bq, bc // SEG), lambda i, j: (i, j), memory_space=pltpu.VMEM),
+        pl.BlockSpec((bq, d), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
+    ]
+    if quant:
+        specs.append(pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM))
+    specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+    return specs
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "bq", "bc", "interpret"))
 def lmi_filter_range_pallas(
-    queries, rows, valid, embeddings, *, metric: str, bq: int, bc: int, interpret: bool
+    queries, rows, valid, seg_rows, seg_contig, embeddings, scales,
+    *, metric: str, bq: int, bc: int, interpret: bool,
 ):
-    """queries (Q, d), rows/valid (Q, C), embeddings (M, d) -> (Q, C) f32.
+    """queries (Q, d), rows/valid (Q, C), seg_* (Q, C // SEG), embeddings
+    (M, d) store-dtype [+ scales (Q, C) f32 for int8] -> (Q, C) f32.
 
-    Q % bq == 0, C % bc == 0 (ops.py pads). ``embeddings`` stays in
-    HBM/ANY and is gathered row-wise per tile.
+    Q % bq == 0, C % bc == 0, bc % SEG == 0 (ops.py pads). ``embeddings``
+    stays in HBM/ANY and is gathered run-wise/row-wise per tile.
     """
     q_, d = queries.shape
     c_ = rows.shape[1]
     grid = (q_ // bq, c_ // bc)
+    quant = scales is not None
+    args = (rows, valid, seg_rows, seg_contig, queries)
+    args += (scales,) if quant else ()
+    args += (embeddings,)
     return pl.pallas_call(
-        functools.partial(_range_kernel, metric=metric),
+        functools.partial(_range_kernel, metric=metric, quant=quant),
         out_shape=jax.ShapeDtypeStruct((q_, c_), jnp.float32),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
-            pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
-            pl.BlockSpec((bq, d), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=_filter_specs(bq, bc, d, quant),
         out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
         scratch_shapes=[
-            pltpu.VMEM((bq, bc, d), jnp.float32),
+            pltpu.VMEM((bq, bc, d), embeddings.dtype),
             pltpu.SemaphoreType.DMA,
         ],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
-    )(rows, valid, queries, embeddings)
+    )(*args)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "k", "kpad", "bq", "bc", "interpret"))
 def lmi_filter_topk_pallas(
-    queries, rows, valid, embeddings, *, metric: str, k: int, kpad: int, bq: int, bc: int,
-    interpret: bool,
+    queries, rows, valid, seg_rows, seg_contig, embeddings, scales,
+    *, metric: str, k: int, kpad: int, bq: int, bc: int, interpret: bool,
 ):
     """Streaming top-k variant: -> (dist (Q, kpad) f32, slot (Q, kpad) i32).
 
@@ -190,25 +278,24 @@ def lmi_filter_topk_pallas(
     q_, d = queries.shape
     c_ = rows.shape[1]
     grid = (q_ // bq, c_ // bc)
+    quant = scales is not None
+    args = (rows, valid, seg_rows, seg_contig, queries)
+    args += (scales,) if quant else ()
+    args += (embeddings,)
     return pl.pallas_call(
-        functools.partial(_topk_kernel, metric=metric, k=k, bc=bc),
+        functools.partial(_topk_kernel, metric=metric, quant=quant, k=k, bc=bc),
         out_shape=(
             jax.ShapeDtypeStruct((q_, kpad), jnp.float32),
             jax.ShapeDtypeStruct((q_, kpad), jnp.int32),
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
-            pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
-            pl.BlockSpec((bq, d), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=_filter_specs(bq, bc, d, quant),
         out_specs=(
             pl.BlockSpec((bq, kpad), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
             pl.BlockSpec((bq, kpad), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
         ),
         scratch_shapes=[
-            pltpu.VMEM((bq, bc, d), jnp.float32),
+            pltpu.VMEM((bq, bc, d), embeddings.dtype),
             pltpu.VMEM((bq, kpad), jnp.float32),
             pltpu.VMEM((bq, kpad), jnp.int32),
             pltpu.SemaphoreType.DMA,
@@ -217,4 +304,4 @@ def lmi_filter_topk_pallas(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(rows, valid, queries, embeddings)
+    )(*args)

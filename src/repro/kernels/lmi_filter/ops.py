@@ -2,10 +2,22 @@
 
 Padding policy: queries/rows/valid are padded on the query and candidate
 axes (padded slots are invalid, so they come back as +_BIG and are
-sliced off). The embedding matrix is *never* padded or copied — it is
-the HBM-resident database and the kernel gathers rows from it in place;
-the feature dim therefore runs at its natural (possibly unaligned)
-width.
+sliced off). The embedding store is *never* padded, copied or widened —
+it is the HBM-resident database in its CandidateStore precision
+(f32/bf16/int8) and the kernel gathers rows from it in place, so the
+DMA bytes scale with the store dtype; the feature dim runs at its
+natural (possibly unaligned) width.
+
+Gather metadata: candidate lists produced by the LMI are concatenations
+of contiguous bucket runs (see `lmi._search_core`'s BucketRuns). Rather
+than shipping the variable-length run list into the kernel, the run
+structure is folded into fixed-width *segment* metadata — for every
+group of SEG candidate slots, the starting CSR row and a flag saying the
+whole group is one contiguous valid stretch — which the kernel turns
+into one SEG-row DMA instead of SEG row DMAs (`kernel._gather_tile`).
+Derived with two jnp compares, works for any rows source (single-device
+CSR rows or shard-local rows), and degrades gracefully: rows with no run
+structure just take the per-row path everywhere.
 """
 from __future__ import annotations
 
@@ -16,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.kernels.common import pad_to, round_up, should_interpret
 from repro.kernels.lmi_filter.kernel import (
+    SEG,
     lmi_filter_range_pallas,
     lmi_filter_topk_pallas,
 )
@@ -24,39 +37,72 @@ _VMEM_BUDGET = 4 * 1024 * 1024  # candidate scratch budget per tile, bytes
 
 _BQ = 8  # query rows per block (f32 sublane quantum)
 
+_STORE_DTYPES = (jnp.float32, jnp.bfloat16, jnp.int8)
 
-def _pick_bc(d: int) -> int:
-    """Largest candidate-tile width whose (bq, bc, d) scratch fits."""
+
+def _pick_bc(d: int, itemsize: int) -> int:
+    """Largest candidate-tile width whose VMEM working set fits: the
+    (bq, bc, d) store-dtype gather scratch PLUS the f32 dequantized copy
+    the kernel widens it into (quantized stores shrink the DMA, not the
+    compute tile)."""
     for bc in (512, 256, 128):
-        if _BQ * bc * d * 4 <= _VMEM_BUDGET:
+        if _BQ * bc * d * (itemsize + 4) <= _VMEM_BUDGET:
             return bc
     return 128
 
 
-def _pad_inputs(queries, rows, valid, bc: int):
+def _as_store_dtype(embeddings):
+    emb = jnp.asarray(embeddings)
+    if emb.dtype not in [jnp.dtype(t) for t in _STORE_DTYPES]:
+        emb = emb.astype(jnp.float32)
+    return emb
+
+
+def _segment_metadata(rows, valid):
+    """(seg_rows, seg_contig), each (Q, C // SEG) int32.
+
+    A segment is gatherable with one run-length DMA iff its SEG slots are
+    consecutive CSR rows (they lie inside one bucket run) and all valid
+    (padding never over-reads the store).
+    """
+    q, c = rows.shape
+    r = rows.reshape(q, c // SEG, SEG)
+    v = valid.reshape(q, c // SEG, SEG)
+    contig = jnp.all(r == r[..., :1] + jnp.arange(SEG, dtype=rows.dtype), axis=-1)
+    contig &= jnp.all(v != 0, axis=-1)
+    return r[..., 0], contig.astype(jnp.int32)
+
+
+def _pad_inputs(queries, rows, valid, bc: int, scales):
     q = pad_to(jnp.asarray(queries, jnp.float32), 0, _BQ)
     r = pad_to(jnp.asarray(rows, jnp.int32), 0, _BQ)
     r = pad_to(r, 1, bc)
     v = pad_to(jnp.asarray(valid, jnp.int32), 0, _BQ)
     v = pad_to(v, 1, bc)  # padding is invalid (0)
-    return q, r, v
+    seg_rows, seg_contig = _segment_metadata(r, v)
+    # per-slot dequant scales ride as a (Q, C) tile input: 4 bytes/slot of
+    # extra traffic vs. the d bytes/slot the int8 store saves
+    sc = None if scales is None else jnp.where(v != 0, jnp.asarray(scales, jnp.float32)[r], 0.0)
+    return q, r, v, seg_rows, seg_contig, sc
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "interpret"))
 def lmi_filter_range(queries, rows, valid, embeddings, metric: str = "euclidean",
-                     interpret: bool | None = None):
-    """Fused gather + distance over the candidate lists: -> (Q, C) f32.
+                     interpret: bool | None = None, scales=None):
+    """Fused gather + dequant + distance over the candidate lists:
+    -> (Q, C) f32.
 
-    queries (Q, d); rows/valid (Q, C) into embeddings (M, d). Invalid
-    slots get +3.4e38.
+    queries (Q, d); rows/valid (Q, C) into embeddings (M, d) in any
+    store dtype (+ optional (M,) int8 scales). Invalid slots get +3.4e38.
     """
     if interpret is None:
         interpret = should_interpret()
     n_q, c = rows.shape
-    bc = _pick_bc(queries.shape[1])
-    qp, rp, vp = _pad_inputs(queries, rows, valid, bc)
+    emb = _as_store_dtype(embeddings)
+    bc = _pick_bc(queries.shape[1], emb.dtype.itemsize)
+    qp, rp, vp, segr, segc, scp = _pad_inputs(queries, rows, valid, bc, scales)
     out = lmi_filter_range_pallas(
-        qp, rp, vp, jnp.asarray(embeddings, jnp.float32),
+        qp, rp, vp, segr, segc, emb, scp,
         metric=metric, bq=_BQ, bc=bc, interpret=interpret,
     )
     return out[:n_q, :c]
@@ -64,8 +110,9 @@ def lmi_filter_range(queries, rows, valid, embeddings, metric: str = "euclidean"
 
 @functools.partial(jax.jit, static_argnames=("k", "metric", "interpret"))
 def lmi_filter_topk(queries, rows, valid, embeddings, k: int, metric: str = "euclidean",
-                    interpret: bool | None = None):
-    """Fused gather + distance + streaming top-k: -> (dist, slot) (Q, k).
+                    interpret: bool | None = None, scales=None):
+    """Fused gather + dequant + distance + streaming top-k:
+    -> (dist, slot) (Q, k).
 
     ``slot`` indexes the candidate axis of ``rows``; exhausted slots
     (fewer than k valid candidates) hold dist=+3.4e38, slot=-1.
@@ -74,11 +121,12 @@ def lmi_filter_topk(queries, rows, valid, embeddings, k: int, metric: str = "euc
     if interpret is None:
         interpret = should_interpret()
     n_q, c = rows.shape
-    bc = _pick_bc(queries.shape[1])
-    qp, rp, vp = _pad_inputs(queries, rows, valid, bc)
+    emb = _as_store_dtype(embeddings)
+    bc = _pick_bc(queries.shape[1], emb.dtype.itemsize)
+    qp, rp, vp, segr, segc, scp = _pad_inputs(queries, rows, valid, bc, scales)
     kpad = round_up(k, 8)
     dist, slot = lmi_filter_topk_pallas(
-        qp, rp, vp, jnp.asarray(embeddings, jnp.float32),
+        qp, rp, vp, segr, segc, emb, scp,
         metric=metric, k=k, kpad=kpad, bq=_BQ, bc=bc, interpret=interpret,
     )
     return dist[:n_q, :k], slot[:n_q, :k]

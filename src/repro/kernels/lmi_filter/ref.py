@@ -4,6 +4,12 @@ Materializes the (Q, C, d) candidate gather on purpose — it is the
 numerically straightforward reference the fused kernel is checked
 against, and doubles as the "unfused" comparison baseline in the
 query-latency benchmark.
+
+Accepts every CandidateStore precision: ``embeddings`` may be f32, bf16
+or int8; ``scales`` carries the per-row int8 dequant scales. Dequant
+happens on the gathered block (the kernel's in-VMEM dequant, spelled in
+HBM-resident jnp), so both implementations see bit-identical candidate
+values and parity tests are tight.
 """
 from __future__ import annotations
 
@@ -14,14 +20,16 @@ _BIG = jnp.float32(3.4e38)
 _EPS = 1e-12
 
 
-def lmi_filter_ref(queries, rows, valid, embeddings, metric: str = "euclidean"):
+def lmi_filter_ref(queries, rows, valid, embeddings, metric: str = "euclidean", scales=None):
     """(Q, C) candidate distances; invalid slots get +_BIG.
 
-    queries (Q, d), rows (Q, C) int32 indices into embeddings (M, d),
-    valid (Q, C) bool.
+    queries (Q, d), rows (Q, C) int32 indices into embeddings (M, d)
+    [f32/bf16/int8 + optional (M,) scales], valid (Q, C) bool.
     """
+    from repro.core.store import gather_dequant
+
     q = jnp.asarray(queries, jnp.float32)
-    cand = jnp.asarray(embeddings, jnp.float32)[rows]  # (Q, C, d)
+    cand = gather_dequant(embeddings, scales, rows)  # (Q, C, d)
     qb = q[:, None, :]
     if metric == "euclidean":
         d = jnp.sqrt(jnp.maximum(jnp.sum((cand - qb) ** 2, axis=-1), 0.0))
@@ -36,12 +44,13 @@ def lmi_filter_ref(queries, rows, valid, embeddings, metric: str = "euclidean"):
     return jnp.where(valid, d, _BIG)
 
 
-def lmi_filter_topk_ref(queries, rows, valid, embeddings, k: int, metric: str = "euclidean"):
+def lmi_filter_topk_ref(queries, rows, valid, embeddings, k: int, metric: str = "euclidean",
+                        scales=None):
     """Top-k smallest candidate distances: -> (dist (Q, k), slot (Q, k)).
 
     ``slot`` indexes the candidate axis; exhausted slots hold +_BIG / the
     index top_k happened to produce (callers mask on distance).
     """
-    d = lmi_filter_ref(queries, rows, valid, embeddings, metric=metric)
+    d = lmi_filter_ref(queries, rows, valid, embeddings, metric=metric, scales=scales)
     neg, slot = jax.lax.top_k(-d, k)
     return -neg, slot.astype(jnp.int32)

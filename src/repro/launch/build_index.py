@@ -31,6 +31,9 @@ def main():
     ap.add_argument("--cutoff", type=float, default=50.0)
     ap.add_argument("--arity", type=int, nargs=2, default=(32, 64))
     ap.add_argument("--model", choices=("kmeans", "gmm", "kmeans+logreg"), default="kmeans")
+    ap.add_argument("--store-dtype", choices=("float32", "bfloat16", "int8"), default="float32",
+                    help="serving-time candidate-store precision recorded in meta.json "
+                         "(the store is re-materialized from the f32 CSR arrays at load)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", type=str, required=True)
     args = ap.parse_args()
@@ -55,6 +58,14 @@ def main():
           f"buckets: mean={sizes.mean():.1f} max={sizes.max()} empty={(sizes == 0).sum()}")
     print(f"index structure: {index.memory_bytes() / 2**20:.1f} MB "
           f"(+data: {index.memory_bytes(include_data=True) / 2**20:.1f} MB)")
+    if args.store_dtype != "float32":
+        from repro.core import store as store_lib
+
+        st = store_lib.from_lmi(index, args.store_dtype)
+        f32_bytes = index.sorted_embeddings.size * 4
+        print(f"candidate store ({args.store_dtype}): "
+              f"{st.nbytes(include_metadata=False) / 2**20:.1f} MB "
+              f"({f32_bytes / max(st.nbytes(include_metadata=False), 1):.1f}x smaller than f32)")
 
     os.makedirs(args.out, exist_ok=True)
     state = {
@@ -71,6 +82,7 @@ def main():
                 arities=list(args.arity), model_type=args.model,
                 n_sections=args.sections, cutoff=args.cutoff,
                 n_objects=int(emb.shape[0]), seed=args.seed,
+                store_dtype=args.store_dtype,
                 build_seconds=t_build, embed_seconds=t_embed,
             ),
             f, indent=1,
@@ -93,6 +105,7 @@ def load_index(directory: str) -> lmi.LMI:
         "sorted_embeddings": jnp.zeros((n, dim), jnp.float32),
     }
     state = ckpt.restore(directory, template)
+    offsets = np.asarray(state["bucket_offsets"])
     return lmi.LMI(
         arities=(a0, a1),
         model_type=meta["model_type"],
@@ -101,6 +114,8 @@ def load_index(directory: str) -> lmi.LMI:
         bucket_offsets=state["bucket_offsets"],
         sorted_ids=state["sorted_ids"],
         sorted_embeddings=state["sorted_embeddings"],
+        # recompute at load (one host pass) so serving stays host-sync-free
+        max_bucket_size=int((offsets[1:] - offsets[:-1]).max()),
     )
 
 

@@ -521,6 +521,7 @@ def _mind_cell(cfg: R.MINDConfig, shape: configs.ShapeSpec, mesh: Mesh):
 def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
     from repro.core import kmeans as km
     from repro.core.distributed_lmi import ShardedLMI, sharded_knn
+    from repro.core.store import CandidateStore
 
     cfg = spec.make_full()
     dkey = _data_key(mesh)
@@ -565,14 +566,17 @@ def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
         l1_params={"centroids": _struct((a0, dim), jnp.float32, mesh, P())},
         l2_params={"centroids": _struct((a0, a1, dim), jnp.float32, mesh, P())},
         global_sizes=_struct((n_leaves,), jnp.int32, mesh, P()),
-        shard_offsets=_struct((n_shards, n_leaves + 1), jnp.int32, mesh, P("model", None)),
-        shard_ids=_struct((n_shards, rows_cap), jnp.int32, mesh, P("model", None)),
         # §Perf 3c: candidate store in bf16 — the gather of candidate rows
         # is the search's dominant HBM traffic; distances accumulate in
         # f32 (einsum preferred_element_type). Embeddings live in [0, 1]:
         # bf16's ~3 significant digits move distances < 1e-2 relative,
         # no measurable recall change at stop >= 1%.
-        shard_embeddings=_struct((n_shards, rows_cap, dim), jnp.bfloat16, mesh, P("model", None, None)),
+        store=CandidateStore(
+            dtype="bfloat16",
+            data=_struct((n_shards, rows_cap, dim), jnp.bfloat16, mesh, P("model", None, None)),
+            ids=_struct((n_shards, rows_cap), jnp.int32, mesh, P("model", None)),
+            offsets=_struct((n_shards, n_leaves + 1), jnp.int32, mesh, P("model", None)),
+        ),
     )
     q_in = _struct((nq, dim), jnp.float32, mesh, P(dkey, None))
 
@@ -584,9 +588,7 @@ def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
             l1_params={"centroids": l1c},
             l2_params={"centroids": l2c},
             global_sizes=gsz,
-            shard_offsets=off,
-            shard_ids=ids,
-            shard_embeddings=emb,
+            store=CandidateStore(dtype="bfloat16", data=emb, ids=ids, offsets=off),
         )
         # §Perf: rank only 4x the expected bucket need instead of
         # full-sorting all 16384 leaf probabilities per query

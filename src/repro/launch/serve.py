@@ -2,16 +2,21 @@
 LMI index (the paper's online stage).
 
   python -m repro.launch.serve --index /tmp/lmi_index --n-queries 64 \
-      --k 30 --stop 0.01
+      --k 30 --stop 0.01 --store-dtype int8
 
 Loads the index (repro.launch.build_index format), generates (or embeds)
 query structures, and answers kNN / range queries in batches, reporting
 latency percentiles. `--sharded N` runs the bucket-sharded search path
-on an N-way host mesh (requires XLA_FLAGS device-count override).
+on an N-way host mesh (requires XLA_FLAGS device-count override); both
+paths honor `--metric`, `--radius` and `--store-dtype` — the candidate
+store is materialized at the requested precision at startup
+(`repro.core.store`), defaulting to the dtype recorded at build time.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -19,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import filtering, lmi
+from repro.core import store as store_lib
 from repro.launch.build_index import load_index
 
 
@@ -31,12 +37,22 @@ def main():
     ap.add_argument("--stop", type=float, default=0.01)
     ap.add_argument("--radius", type=float, default=None)
     ap.add_argument("--metric", choices=("euclidean", "cosine"), default="euclidean")
+    ap.add_argument("--store-dtype", choices=store_lib.STORE_DTYPES, default=None,
+                    help="candidate-store precision (default: the build's meta.json "
+                         "store_dtype, else float32)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="filter through the fused Pallas kernel")
     ap.add_argument("--sharded", type=int, default=0)
     ap.add_argument("--seed", type=int, default=1)
     args = ap.parse_args()
 
     index = load_index(args.index)
-    print(f"index: {index.n_objects} objects, {index.n_leaves} buckets, dim {index.dim}")
+    store_dtype = args.store_dtype
+    if store_dtype is None:
+        with open(os.path.join(args.index, "meta.json")) as f:
+            store_dtype = json.load(f).get("store_dtype", "float32")
+    print(f"index: {index.n_objects} objects, {index.n_leaves} buckets, dim {index.dim}, "
+          f"store dtype {store_dtype}")
 
     # queries: perturbed database objects (realistic near-duplicate load)
     rng = np.random.default_rng(args.seed)
@@ -50,12 +66,18 @@ def main():
         from repro.compat import make_mesh
 
         mesh = make_mesh((1, args.sharded), ("data", "model"))
-        sharded = shard_index(index, args.sharded)
-        fn = lambda q: sharded_knn(sharded, q, k=args.k, mesh=mesh, stop_condition=args.stop)
+        sharded = shard_index(index, args.sharded, store_dtype=store_dtype)
+        print(f"sharded store: {sharded.store.nbytes() / 2**20:.1f} MB over {args.sharded} shards")
+        fn = lambda q: sharded_knn(
+            sharded, q, k=args.k, mesh=mesh, stop_condition=args.stop,
+            metric=args.metric, max_radius=args.radius, use_kernel=args.use_kernel,
+        )
     else:
+        store = store_lib.from_lmi(index, store_dtype)
+        print(f"candidate store: {store.nbytes() / 2**20:.1f} MB")
         fn = lambda q: filtering.knn_query(
             index, q, k=args.k, stop_condition=args.stop, metric=args.metric,
-            max_radius=args.radius,
+            max_radius=args.radius, store=store, use_kernel=args.use_kernel,
         )
 
     lat = []
