@@ -72,10 +72,17 @@ def ground_truth():
 
 @functools.lru_cache(maxsize=4)
 def built_index(n_sections: int = 10, a0: int = 32, a1: int = 64, model_type: str = "kmeans"):
+    return built_index_arities((a0, a1), n_sections=n_sections, model_type=model_type)
+
+
+@functools.lru_cache(maxsize=8)
+def built_index_arities(arities: tuple = (32, 64), n_sections: int = 10,
+                        model_type: str = "kmeans"):
+    """Arbitrary-depth variant of `built_index` (level-stack LMI)."""
     emb = embeddings(n_sections)
     key = jax.random.PRNGKey(SEED)
     t0 = time.time()
-    index = lmi.build(key, emb, arities=(a0, a1), model_type=model_type)
+    index = lmi.build(key, emb, arities=tuple(arities), model_type=model_type)
     return index, time.time() - t0
 
 
@@ -98,6 +105,16 @@ def recall_of_candidates(res, gt: np.ndarray, radius: float):
         recalls.append(len(true & cand) / len(true))
     r = np.asarray(recalls)
     return float(r.mean()), float(np.median(r)), len(r)
+
+
+def recall_at_k(ref_ids: np.ndarray, got_ids: np.ndarray) -> float:
+    """Mean per-query overlap of answer-id sets (-1 == not found), denominated
+    by the reference answer count — recall@k of ``got`` vs ``ref``."""
+    return float(np.mean([
+        len((set(ref_ids[i]) - {-1}) & (set(got_ids[i]) - {-1}))
+        / max((ref_ids[i] >= 0).sum(), 1)
+        for i in range(ref_ids.shape[0])
+    ]))
 
 
 def prf_after_filter(ids: np.ndarray, mask: np.ndarray, gt_row: np.ndarray, radius: float):

@@ -1,0 +1,222 @@
+"""Depth x beam sweep: leaf-ranking cost vs recall for the level-stack LMI
+(ISSUE 3 acceptance benchmark).
+
+The pre-level-stack search ranked **all** leaves through a dense
+(Q, n_leaves) log-prob panel — at depth 3 / arity 64 that is 262,144
+scored leaves *per query*. The beam-pruned traversal
+(`lmi.beam_leaf_ranking`) keeps only the top-B prefixes per level, so
+ranking work drops from O(Q * L) to O(Q * B * arity) per level. This
+sweep quantifies the trade on real indexes:
+
+  * modeled leaf-ranking FLOPs and HBM bytes (`rank_cost_model`,
+    documented per term below) for exact enumeration vs a range of beam
+    widths, at the *measured* batch and at the production serving batch
+    (SERVING_QUERIES = 512, the dryrun `search_512q*` shape — the batch
+    HBM terms that amortize params dominate there);
+  * measured recall@K of the beam answer vs the exact-enumeration
+    answer on the same index (the acceptance metric: within 0.02);
+  * wall-clock µs/query for context (CPU; the model is the
+    hardware-independent comparison).
+
+HBM model terms
+---------------
+exact:   ``param_reads``  — every node model's params stream once per
+                            batch (sum_i N_i * a_i * d floats);
+         ``logp_writes``  — the per-level joint panels (Q, L_i);
+         ``rank_reads`` / ``order_writes`` — the (Q, L) argsort pass.
+beam:    dense levels (frontier <= beam: nothing pruned yet) cost the
+         same as exact's; pruned levels charge ``topk_reads`` (Q, F),
+         ``param_reads`` of min(Q*B, N_i) node models — gathers
+         deduplicate across the batch, the achievable bound for a
+         node-sorted segmented evaluation — plus (Q, B*a) score
+         writes and the final (much smaller) sort.
+
+Writes BENCH_depth_beam.json; CI validates it like the store-dtype
+sweep, and the acceptance entry asserts the ISSUE 3 bound: at the
+>= 262,144-leaf config the serving beam cuts modeled ranking FLOPs and
+HBM >= 10x while keeping recall@30 within 0.02 of exact.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import filtering
+
+REPS = 2
+K = 30
+STOP = 0.01
+SERVING_QUERIES = 512  # the dryrun / production serving batch shape
+BEAMS = (16, 64, 128)
+# acceptance operating point (ISSUE 3): >= 262,144 leaves, serving beam 128
+ACCEPT_ARITIES = (64, 64, 64)
+ACCEPT_BEAM = 128
+MIN_REDUCTION = 10.0
+MAX_RECALL_DROP = 0.02
+
+SWEEP_ARITIES = ((32, 64), ACCEPT_ARITIES)
+
+
+def rank_cost_model(arities, beam, n_queries: int, dim: int) -> dict:
+    """Modeled leaf-ranking FLOPs + HBM bytes for one query batch (terms
+    documented in the module docstring). ``beam=None`` = exact."""
+    f = 4
+    q, d = n_queries, dim
+    flops = 0.0
+    hbm = {"param_reads": 0, "logp_writes": 0, "topk_reads": 0,
+           "rank_reads": 0, "order_writes": 0}
+    # level 0 is always dense
+    frontier = arities[0]
+    flops += 2.0 * q * d * arities[0]
+    hbm["param_reads"] += arities[0] * d * f
+    hbm["logp_writes"] += q * arities[0] * f
+    pruned = False
+    for i, a in enumerate(arities[1:], start=1):
+        n_nodes = math.prod(arities[:i])
+        if beam is None or (not pruned and frontier <= beam):
+            # dense expansion: every node model of the level, once per batch
+            flops += 2.0 * q * d * n_nodes * a
+            hbm["param_reads"] += n_nodes * a * d * f
+            hbm["logp_writes"] += q * n_nodes * a * f
+            frontier = n_nodes * a
+        else:
+            if frontier > beam:
+                hbm["topk_reads"] += q * frontier * f  # prune pass input
+                frontier = beam
+                pruned = True
+            flops += 2.0 * q * d * frontier * a
+            # gathers deduplicate across the batch (node-sorted segmented
+            # evaluation bound): at most every model of the level once
+            hbm["param_reads"] += min(q * frontier, n_nodes) * a * d * f
+            hbm["logp_writes"] += q * frontier * a * f
+            frontier = frontier * a
+    # final best-first ordering over the surviving frontier
+    hbm["rank_reads"] += q * frontier * f
+    hbm["order_writes"] += q * frontier * f
+    total = sum(hbm.values())
+    return {"flops": flops, "hbm_bytes": total, "hbm_items": hbm,
+            "ranked_leaves": frontier}
+
+
+def _timed(fn):
+    out = fn()  # compile + warmup
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fn()
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / REPS
+
+
+def main() -> None:
+    emb = common.embeddings()
+    qids = common.query_ids()
+    # the dense exact panel at depth 3 is (Q, 262144): cap the measured
+    # batch so the sweep stays CI-feasible; the cost model additionally
+    # reports the 512-query serving shape
+    q = jnp.asarray(np.asarray(emb)[qids][:64], jnp.float32)
+    n_q, d = q.shape
+
+    results: dict = {
+        "config": {
+            "db_size": emb.shape[0], "n_queries": n_q, "dim": d,
+            "serving_queries": SERVING_QUERIES, "k": K, "stop_condition": STOP,
+            "backend": jax.default_backend(), "reps": REPS,
+        },
+        "sweeps": {},
+    }
+
+    print("arities,beam,us_per_query,rank_flops/q,rank_hbm_bytes/q(serving),recall_vs_exact")
+    for arities in SWEEP_ARITIES:
+        tag = "x".join(map(str, arities))
+        index, t_build = common.built_index_arities(arities)
+        sweep: dict = {
+            "arities": list(arities),
+            "n_leaves": index.n_leaves,
+            "build_seconds": t_build,
+            "max_bucket_size": index.max_bucket_size,
+            "points": {},
+        }
+        ids_exact = None
+        for beam in (None, *BEAMS):
+            fn = lambda: filtering.knn_query(
+                index, q, K, STOP, beam_width=beam)[1]
+            sec = _timed(fn)
+            ids = np.asarray(filtering.knn_query(index, q, K, STOP, beam_width=beam)[0])
+            if ids_exact is None:
+                ids_exact = ids
+            model = rank_cost_model(arities, beam, n_q, d)
+            model_serving = rank_cost_model(arities, beam, SERVING_QUERIES, d)
+            point = {
+                "us_per_query": sec / n_q * 1e6,
+                "rank_flops_per_query": model["flops"] / n_q,
+                "rank_hbm_bytes_per_query": model["hbm_bytes"] / n_q,
+                "rank_hbm_bytes_per_query_serving": model_serving["hbm_bytes"] / SERVING_QUERIES,
+                "rank_hbm_items_serving": model_serving["hbm_items"],
+                "ranked_leaves": model["ranked_leaves"],
+                "recall_at_k_vs_exact": common.recall_at_k(ids_exact, ids),
+                "mean_answers": float(np.mean((ids >= 0).sum(axis=1))),
+            }
+            sweep["points"]["exact" if beam is None else f"beam_{beam}"] = point
+            print(f"{tag},{beam},{point['us_per_query']:.1f},"
+                  f"{point['rank_flops_per_query']:.3e},"
+                  f"{point['rank_hbm_bytes_per_query_serving']:.3e},"
+                  f"{point['recall_at_k_vs_exact']:.4f}")
+        results["sweeps"][tag] = sweep
+
+    # ---------------------------------------------- ISSUE 3 acceptance bound
+    tag = "x".join(map(str, ACCEPT_ARITIES))
+    pts = results["sweeps"][tag]["points"]
+    exact, beam_pt = pts["exact"], pts[f"beam_{ACCEPT_BEAM}"]
+    flops_red = exact["rank_flops_per_query"] / beam_pt["rank_flops_per_query"]
+    hbm_red = (exact["rank_hbm_bytes_per_query_serving"]
+               / beam_pt["rank_hbm_bytes_per_query_serving"])
+    recall = beam_pt["recall_at_k_vs_exact"]
+    results["acceptance"] = {
+        "arities": list(ACCEPT_ARITIES),
+        "n_leaves": results["sweeps"][tag]["n_leaves"],
+        "beam": ACCEPT_BEAM,
+        "rank_flops_reduction": flops_red,
+        "rank_hbm_reduction_serving": hbm_red,
+        "recall_at_k_vs_exact": recall,
+    }
+    print(f"# acceptance @ {tag} beam={ACCEPT_BEAM}: "
+          f"flops x{flops_red:.1f}, hbm x{hbm_red:.1f} (serving batch), "
+          f"recall {recall:.4f}")
+    assert results["sweeps"][tag]["n_leaves"] >= 262_144
+    assert flops_red >= MIN_REDUCTION, f"flops reduction {flops_red:.1f} < {MIN_REDUCTION}"
+    assert hbm_red >= MIN_REDUCTION, f"HBM reduction {hbm_red:.1f} < {MIN_REDUCTION}"
+    assert recall >= 1.0 - MAX_RECALL_DROP, (
+        f"beam recall@{K} {recall:.3f} drops more than {MAX_RECALL_DROP} vs exact"
+    )
+
+    # ------------------------- depth-3 shards end-to-end (same beam answer)
+    from repro.compat import make_mesh
+    from repro.core.distributed_lmi import shard_index, sharded_knn
+
+    index3, _ = common.built_index_arities(ACCEPT_ARITIES)
+    sharded = shard_index(index3, n_shards=1)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    qs = q[:8]
+    ids_1, _d = filtering.knn_query(index3, qs, K, STOP, beam_width=ACCEPT_BEAM)
+    ids_s, _d = sharded_knn(sharded, qs, k=K, mesh=mesh, stop_condition=STOP,
+                            beam_width=ACCEPT_BEAM)
+    shard_ok = bool((np.asarray(ids_s) == np.asarray(ids_1)).all())
+    results["acceptance"]["sharded_beam_matches_single_device"] = shard_ok
+    print(f"# depth-3 sharded beam == single-device: {shard_ok}")
+    assert shard_ok
+
+    out = "BENCH_depth_beam.json"
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -192,11 +192,7 @@ def main() -> None:
             store_itemsize=st.data.dtype.itemsize, has_scales=st.scales is not None,
         )
         ids_st = np.asarray(filtering.knn_query(index, q, K, STOP, use_kernel=True, store=st)[0])
-        recall = float(np.mean([
-            len((set(ids_f32[i]) - {-1}) & (set(ids_st[i]) - {-1}))
-            / max((ids_f32[i] >= 0).sum(), 1)
-            for i in range(n_q)
-        ]))
+        recall = common.recall_at_k(ids_f32, ids_st)
         results["store_sweep"][dtype] = {
             "us_per_query": us_q,
             "hbm_bytes_filter": model["total"],

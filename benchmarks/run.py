@@ -12,6 +12,7 @@ import sys
 import time
 
 from benchmarks import (
+    depth_beam,
     fig2_recall,
     fig3_buckets,
     fig5_filtering,
@@ -39,6 +40,7 @@ SECTIONS = {
     "ablation_cutoff": ablation_cutoff.main,
     "roofline": roofline_table.main,
     "query_latency": query_latency.main,
+    "depth_beam": depth_beam.main,
 }
 
 

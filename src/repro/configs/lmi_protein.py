@@ -4,10 +4,19 @@ Best published configuration (Sec. 5): 10x10 embedding (45 dims),
 2-level K-Means LMI with arities 256-64, 1% stop condition, Euclidean
 filtering. Registered as an arch so the launcher/dry-run treats the
 paper's serving path (bucket-sharded kNN search) like any other model.
+
+The level-stack refactor (ISSUE 3) generalized ``arities`` to any depth
+and added ``beam_width`` (beam-pruned leaf ranking; None = exact
+enumeration — the paper's setup). The extra ``search_512q_d3_beam``
+dry-run shape proves the depth-3 / beam serving path compiles on the
+production meshes: at (64, 64, 64) = 262,144 leaves, exact enumeration
+would rank a dense (Q, 262144) panel per query block — the beam keeps
+ranking work at O(Q * beam * arity) per level.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.configs.base import ArchSpec, ShapeSpec
 from repro.core.embedding import EmbeddingConfig
@@ -17,7 +26,7 @@ from repro.core.embedding import EmbeddingConfig
 class LMIProteinConfig:
     name: str
     embedding: EmbeddingConfig
-    arities: tuple[int, int]
+    arities: tuple[int, ...]
     model_type: str
     stop_condition: float
     filter_metric: str
@@ -27,6 +36,10 @@ class LMIProteinConfig:
     # candidate-store precision (repro.core.store): f32 exact, bf16 2x
     # smaller, int8 4x smaller + per-row scales — the serving memory knob
     store_dtype: str = "float32"
+    # beam-pruned leaf ranking (repro.core.lmi.beam_leaf_ranking): None =
+    # exact enumeration; an int prunes the level frontier to that width —
+    # the serving compute knob for deep (>= 3-level) stacks
+    beam_width: Optional[int] = None
 
 
 def make_full() -> LMIProteinConfig:
@@ -65,6 +78,13 @@ def make_smoke() -> LMIProteinConfig:
 SHAPES = (
     ShapeSpec("build_518k", "build", dict(n_objects=518_576)),
     ShapeSpec("search_512q", "search", dict(n_queries=512, n_objects=518_576)),
+    # depth-3 level stack + beam-pruned ranking (262,144 leaves; dense
+    # enumeration at this depth is the O(Q*L) wall the beam removes)
+    ShapeSpec(
+        "search_512q_d3_beam",
+        "search",
+        dict(n_queries=512, n_objects=518_576, arities=(64, 64, 64), beam_width=64),
+    ),
 )
 
 SPEC = ArchSpec(

@@ -9,14 +9,18 @@ Sharding design (DESIGN.md §3):
     offsets);
   * the *data* (and *pod*) axes own the queries: each query block is
     serviced by the 16 model-axis devices that jointly hold one DB copy;
-  * node-model parameters and the (tiny) global bucket-size vector are
-    replicated, so every device deterministically computes the *same*
-    global probability ranking and stop-condition cut
-    (`lmi.rank_visited_buckets` — literally the same function the
-    single-device path runs) — a shard then extracts only the candidates
-    of buckets it owns (`lmi.extract_rows` over its local offsets),
-    scores them locally, and a global top-k merge (`all_gather` of
-    per-shard top-k, k << C) produces exactly the single-device answer.
+  * node-model parameters (the whole ``levels`` stack, any depth) and
+    the (tiny) global bucket-size vector are replicated, so every device
+    deterministically computes the *same* global probability ranking and
+    stop-condition cut — either exact enumeration
+    (`lmi.rank_visited_buckets`) or the beam-pruned level traversal
+    (`lmi.beam_rank_visited_buckets`); both are literally the functions
+    the single-device path runs, and both depend only on replicated
+    inputs, so the shard-local beam is identical everywhere — a shard
+    then extracts only the candidates of buckets it owns
+    (`lmi.extract_rows` over its local offsets), scores them locally,
+    and a global top-k merge (`all_gather` of per-shard top-k, k << C)
+    produces exactly the single-device answer.
 
 One query engine (ISSUE 2): per-shard filtering is a call to
 `filtering.filter_topk` on the block-local CandidateStore — the very
@@ -28,7 +32,8 @@ Collective volume per query batch: O(devices * k * d_result) — independent
 of database size, which is what makes the index scalable to 1000+ nodes.
 
 `sharded_knn` is exact w.r.t. the single-device `filtering.knn_query`
-(tested in tests/test_distributed_lmi.py on a host with 8 fake devices).
+(tested in tests/test_distributed_lmi.py on a host with 8 fake devices),
+including with ``beam_width`` set (same beam on every shard).
 """
 from __future__ import annotations
 
@@ -53,13 +58,13 @@ _BIG = jnp.float32(3.4e38)
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ShardedLMI:
-    """Replicated node models + a CandidateStore stacked over the shard dim."""
+    """Replicated level-stack node models + a CandidateStore stacked over
+    the shard dim."""
 
     arities: tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
     model_type: str = dataclasses.field(metadata=dict(static=True))
     n_shards: int = dataclasses.field(metadata=dict(static=True))
-    l1_params: dict[str, Array]  # replicated
-    l2_params: dict[str, Array]  # replicated
+    levels: tuple[dict, ...]  # replicated level stack (see lmi.LMI.levels)
     global_sizes: Array  # (n_leaves,) int32, replicated
     store: store_lib.CandidateStore  # leaves (S, ...): per-shard padded CSR blocks
     # --- build-time stats (static, so query planning never syncs)
@@ -67,8 +72,23 @@ class ShardedLMI:
     max_bucket_size: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     @property
+    def depth(self) -> int:
+        return len(self.arities)
+
+    @property
     def n_leaves(self) -> int:
-        return self.arities[0] * self.arities[1]
+        return math.prod(self.arities)
+
+    # ------------------------------------------------- legacy 2-level views
+    @property
+    def l1_params(self) -> dict:
+        """Deprecated: the pre-level-stack name for ``levels[0]``."""
+        return self.levels[0]
+
+    @property
+    def l2_params(self) -> dict:
+        """Deprecated: the pre-level-stack name for ``levels[1]``."""
+        return self.levels[1]
 
     # ------------------------------------------------- legacy array views
     @property
@@ -91,11 +111,13 @@ class ShardedLMI:
 def shard_index(index: lmi_lib.LMI, n_shards: int, store_dtype: str = "float32") -> ShardedLMI:
     """Split a built LMI into ``n_shards`` bucket-owned blocks (host-side).
 
-    ``store_dtype``: candidate-store precision. "float32" (exact),
-    "bfloat16" (2x smaller; <1e-2 relative distance error) or "int8"
-    (4x smaller; per-row absmax scales — the billion-scale memory lever;
-    recall impact measured in tests/test_distributed_lmi.py). The
-    quantization contract lives in `repro.core.store.quantize`.
+    Depth-agnostic: leaf ownership is ``leaf_id % n_shards`` over the
+    mixed-radix leaf ids, whatever the level count. ``store_dtype``:
+    candidate-store precision. "float32" (exact), "bfloat16" (2x
+    smaller; <1e-2 relative distance error) or "int8" (4x smaller;
+    per-row absmax scales — the billion-scale memory lever; recall
+    impact measured in tests/test_distributed_lmi.py). The quantization
+    contract lives in `repro.core.store.quantize`.
     """
     offsets = np.asarray(index.bucket_offsets, np.int64)
     sizes = offsets[1:] - offsets[:-1]
@@ -111,25 +133,25 @@ def shard_index(index: lmi_lib.LMI, n_shards: int, store_dtype: str = "float32")
     sh_off = np.zeros((n_shards, n_leaves + 1), np.int64)
     sh_ids = np.zeros((n_shards, rows_cap), np.int32)
     sh_emb = np.zeros((n_shards, rows_cap, d), np.float32)
+    row_leaf = np.repeat(np.arange(n_leaves), sizes)  # leaf of each CSR row
     for s in range(n_shards):
         local_sizes = np.where(owner == s, sizes, 0)
         np.cumsum(local_sizes, out=sh_off[s, 1:])
-        cursor = 0
-        for b in np.nonzero(owner == s)[0]:
-            lo, hi = offsets[b], offsets[b + 1]
-            n = hi - lo
-            sh_ids[s, cursor : cursor + n] = ids[lo:hi]
-            sh_emb[s, cursor : cursor + n] = emb[lo:hi]
-            cursor += n
+        # gather this shard's buckets (rows stay in leaf order under the mask)
+        mine = owner[row_leaf] == s
+        n = int(mine.sum())
+        sh_ids[s, :n] = ids[mine]
+        sh_emb[s, :n] = emb[mine]
 
     return ShardedLMI(
         arities=index.arities,
         model_type=index.model_type,
         n_shards=n_shards,
-        l1_params=index.l1_params,
-        l2_params=index.l2_params,
+        levels=index.levels,
         global_sizes=jnp.asarray(sizes, jnp.int32),
-        store=store_lib.make_store(sh_emb, sh_ids, sh_off, store_dtype),
+        store=store_lib.make_store(
+            sh_emb, sh_ids, sh_off, store_dtype, revision=index.index_revision
+        ),
         n_objects=index.n_objects,
         max_bucket_size=index.max_bucket_size or int(sizes.max()),
     )
@@ -137,38 +159,45 @@ def shard_index(index: lmi_lib.LMI, n_shards: int, store_dtype: str = "float32")
 
 def _local_candidates(
     model_type: str,
-    l1_params,
-    l2_params,
+    levels,
+    arities,
     global_sizes: Array,
     local_offsets: Array,
     queries: Array,
     stop_count: int,
     cap: int,
     bucket_topk: Optional[int] = None,
+    beam_width: Optional[int] = None,
 ):
     """Candidate CSR rows owned by this shard, in global probability order.
 
-    The ranking and stop cut are `lmi.rank_visited_buckets` on the
-    replicated *global* sizes — identical on every shard — and the
+    The ranking and stop cut are the shared `lmi` ranking helpers on the
+    replicated *global* sizes — identical on every shard (the beam
+    traversal likewise depends only on replicated node params) — and the
     slot->row walk is `lmi.extract_rows` over the shard-local offsets,
     so each shard materializes only its own share of the candidate set.
     """
-    index_stub = _ProbStub(model_type, l1_params, l2_params)
-    logp = lmi_lib.leaf_log_probs(index_stub, queries)  # (Q, L)
-    order, visited, _sz = lmi_lib.rank_visited_buckets(
-        logp, global_sizes, stop_count, bucket_topk
-    )
+    index_stub = _ProbStub(model_type, levels, arities)
+    if beam_width is None:
+        logp = lmi_lib.leaf_log_probs(index_stub, queries)  # (Q, L)
+        order, visited, _sz = lmi_lib.rank_visited_buckets(
+            logp, global_sizes, stop_count, bucket_topk
+        )
+    else:
+        order, visited, _sz = lmi_lib.beam_rank_visited_buckets(
+            index_stub, queries, global_sizes, stop_count, beam_width, bucket_topk
+        )
     rows, valid, _n = lmi_lib.extract_rows(order, visited, local_offsets, cap)
     return rows, valid
 
 
 class _ProbStub:
-    """Duck-typed view so lmi.leaf_log_probs works on sharded params."""
+    """Duck-typed view so the lmi ranking helpers work on sharded params."""
 
-    def __init__(self, model_type, l1_params, l2_params):
+    def __init__(self, model_type, levels, arities):
         self.model_type = model_type
-        self.l1_params = l1_params
-        self.l2_params = l2_params
+        self.levels = tuple(levels)
+        self.arities = tuple(arities)
 
 
 def sharded_knn(
@@ -185,11 +214,13 @@ def sharded_knn(
     radius_scale: float = 1.0,
     n_objects: Optional[int] = None,
     bucket_topk: Optional[int] = None,
+    beam_width: Optional[int] = None,
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
 ):
     """Distributed kNN: queries sharded over ``query_axes``, DB buckets over
-    ``shard_axis``. Exact vs. the single-device result.
+    ``shard_axis``. Exact vs. the single-device result (for the same
+    ``bucket_topk`` / ``beam_width`` ranking settings).
 
     ``local_cap`` bounds each shard's candidate block; the default
     (stop_count + max bucket) is always exact; pass ~4x the expected
@@ -200,6 +231,11 @@ def sharded_knn(
     ``max_radius`` / ``radius_scale`` mirror `filtering.knn_query`
     (paper Table 3: 30NN within a radius): merged answers farther than
     ``max_radius * radius_scale`` come back id -1 / distance +inf.
+
+    ``beam_width`` runs the beam-pruned level traversal instead of exact
+    enumeration — every shard computes the identical beam from the
+    replicated node models, so the sharded answer still equals the
+    single-device beam answer.
 
     ``use_kernel=True`` runs the per-shard filtering through the fused
     `repro.kernels.lmi_filter` Pallas kernel for *every* store dtype —
@@ -221,10 +257,11 @@ def sharded_knn(
     from repro.core import filtering
 
     store_dtype = sharded.store.dtype
+    store_revision = sharded.store.revision
     has_scales = sharded.store.scales is not None
     radius = _BIG if max_radius is None else jnp.float32(max_radius * radius_scale)
 
-    def local_fn(queries_l, radius_l, data, scales, ids, offsets, l1, l2, gsizes):
+    def local_fn(queries_l, radius_l, data, scales, ids, offsets, levels, gsizes):
         # shard_map passes block-local arrays with a size-1 shard dim
         local_store = store_lib.CandidateStore(
             dtype=store_dtype,
@@ -232,10 +269,12 @@ def sharded_knn(
             ids=ids[0],
             offsets=offsets[0],
             scales=scales[0] if has_scales else None,
+            revision=store_revision,
         )
         rows, valid = _local_candidates(
-            sharded.model_type, l1, l2, gsizes, local_store.offsets, queries_l,
-            stop_count, local_cap, bucket_topk=bucket_topk,
+            sharded.model_type, levels, sharded.arities, gsizes,
+            local_store.offsets, queries_l, stop_count, local_cap,
+            bucket_topk=bucket_topk, beam_width=beam_width,
         )
         kk = min(k, local_cap)
         local_d, top_slot = filtering.filter_topk(
@@ -249,9 +288,16 @@ def sharded_knn(
         all_ids = jax.lax.all_gather(local_ids, shard_axis)
         all_d = jnp.transpose(all_d, (1, 0, 2)).reshape(queries_l.shape[0], -1)
         all_ids = jnp.transpose(all_ids, (1, 0, 2)).reshape(queries_l.shape[0], -1)
-        negm, midx = jax.lax.top_k(-all_d, k)
+        # the merged panel holds S * min(k, local_cap) slots, which can be
+        # fewer than k (tiny buckets at depth >= 3): clamp and pad the tail
+        # with not-found slots, mirroring the single-device path
+        k_merge = min(k, all_d.shape[-1])
+        negm, midx = jax.lax.top_k(-all_d, k_merge)
         merged_ids = jnp.take_along_axis(all_ids, midx, axis=1)
         merged_d = -negm
+        if k_merge < k:
+            merged_ids = jnp.pad(merged_ids, ((0, 0), (0, k - k_merge)), constant_values=-1)
+            merged_d = jnp.pad(merged_d, ((0, 0), (0, k - k_merge)), constant_values=_BIG)
         found = (merged_d < _BIG) & (merged_d <= radius_l)
         return jnp.where(found, merged_ids, -1), jnp.where(found, merged_d, jnp.inf)
 
@@ -265,7 +311,7 @@ def sharded_knn(
     fn = _shard_map(
         local_fn,
         mesh,
-        (qspec, rep, shard_spec_emb, scale_spec, shard_spec_ids, shard_spec_off, rep, rep, rep),
+        (qspec, rep, shard_spec_emb, scale_spec, shard_spec_ids, shard_spec_off, rep, rep),
         (qspec, qspec),
     )
     return fn(
@@ -275,7 +321,6 @@ def sharded_knn(
         sharded.store.scales,
         sharded.store.ids,
         sharded.store.offsets,
-        sharded.l1_params,
-        sharded.l2_params,
+        sharded.levels,
         sharded.global_sizes,
     )

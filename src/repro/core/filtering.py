@@ -38,7 +38,15 @@ Each entry point has two backends:
 The query path performs no per-call host sync: the candidate capacity
 comes from `LMI.max_bucket_size` build metadata (`lmi.query_plan_params`)
 and the radius rides along as a device scalar. ``bucket_topk`` swaps the
-full (Q, L) leaf argsort for a top-K ranking (`lmi.rank_visited_buckets`).
+full (Q, L) leaf argsort for a top-K ranking (`lmi.rank_visited_buckets`);
+``beam_width`` swaps exact leaf enumeration for the beam-pruned
+level-stack traversal (`lmi.beam_leaf_ranking`) — at depth >= 3 the
+dense (Q, n_leaves) panel never exists at all.
+
+Prebuilt stores carry the ``index_revision`` they were materialized
+from; a query against an index whose revision moved on (`lmi.insert`)
+raises instead of silently filtering stale rows — refresh with
+`store.refresh` / `store.from_lmi`.
 """
 from __future__ import annotations
 
@@ -102,12 +110,13 @@ def filter_topk(store, queries, rows, valid, k: int, *, metric: str = "euclidean
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "stop_count", "cap", "metric", "mode", "k", "use_kernel", "interpret", "bucket_topk",
+        "stop_count", "cap", "metric", "mode", "k", "use_kernel", "interpret",
+        "bucket_topk", "beam_width",
     ),
 )
 def _query_impl(
     index, store, queries, radius, *, stop_count, cap, metric, mode, k,
-    use_kernel, interpret, bucket_topk,
+    use_kernel, interpret, bucket_topk, beam_width=None,
 ):
     """One compiled plan for the whole query: search -> filter -> predicate.
 
@@ -116,7 +125,7 @@ def _query_impl(
     index's CSR layout, so the search's row indices address it directly.
     """
     cand_ids, rows, valid, _nb, _nc, _runs = lmi_lib._search_core(
-        index, queries, stop_count, cap, bucket_topk
+        index, queries, stop_count, cap, bucket_topk, beam_width
     )
     if mode == "range":
         d = filter_range(store, queries, rows, valid, metric=metric,
@@ -126,16 +135,37 @@ def _query_impl(
     # ---- kNN: top-k then range-limit (equivalent to limit-then-top-k,
     # since any candidate within the radius that is dropped from the
     # top-k is dominated by k closer candidates, all within the radius).
-    top_d, top_slot = filter_topk(store, queries, rows, valid, k, metric=metric,
+    # k may exceed the candidate capacity (tiny buckets at depth >= 3):
+    # clamp the filter and pad the tail with not-found slots.
+    kk = min(k, cap)
+    top_d, top_slot = filter_topk(store, queries, rows, valid, kk, metric=metric,
                                   use_kernel=use_kernel, interpret=interpret)
+    if kk < k:
+        top_d = jnp.pad(top_d, ((0, 0), (0, k - kk)), constant_values=_BIG)
+        top_slot = jnp.pad(top_slot, ((0, 0), (0, k - kk)), constant_values=-1)
     top_ids = jnp.take_along_axis(cand_ids, jnp.maximum(top_slot, 0), axis=1)
     found = (top_d < _BIG) & (top_d <= radius)
     return jnp.where(found, top_ids, -1), jnp.where(found, top_d, jnp.inf), found
 
 
 def _store_for(index, store):
-    """Default store: the f32 view of the index's CSR arrays (zero-copy)."""
-    return store_lib.from_lmi(index) if store is None else store
+    """Default store: the f32 view of the index's CSR arrays (zero-copy).
+
+    A caller-supplied store must match the index's ``index_revision`` —
+    `lmi.insert` re-splices the CSR arrays, so a store built before the
+    insert still holds the old rows/offsets and would silently filter
+    against them.
+    """
+    if store is None:
+        return store_lib.from_lmi(index)
+    index_rev = getattr(index, "index_revision", 0)
+    if store.revision != index_rev:
+        raise ValueError(
+            f"stale CandidateStore: store revision {store.revision} != index "
+            f"revision {index_rev} (the index was mutated by lmi.insert after "
+            "the store was built) — refresh it with store.refresh(index, store)"
+        )
+    return store
 
 
 def range_query(
@@ -150,13 +180,15 @@ def range_query(
     candidate_cap: Optional[int] = None,
     store: Optional[store_lib.CandidateStore] = None,
     bucket_topk: Optional[int] = None,
+    beam_width: Optional[int] = None,
 ) -> FilterResult:
     """End-to-end LMI range query (paper Table 2).
 
     ``radius`` is in ground-truth (Q-distance) units; ``radius_scale``
     re-scales it into embedding space (paper footnote 3 uses 1.5 for
     Euclidean: Q-range 0.5 -> cutoff 0.75). ``store`` selects the
-    candidate-store precision (default: f32 view of the index).
+    candidate-store precision (default: f32 view of the index);
+    ``beam_width`` the beam-pruned leaf ranking (None = exact).
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
@@ -166,6 +198,7 @@ def range_query(
         index, _store_for(index, store), q, jnp.float32(radius * radius_scale),
         stop_count=stop_count, cap=cap, metric=metric, mode="range", k=0,
         use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
+        beam_width=beam_width,
     )
     return FilterResult(ids=ids, distances=d, mask=mask)
 
@@ -183,13 +216,15 @@ def knn_query(
     candidate_cap: Optional[int] = None,
     store: Optional[store_lib.CandidateStore] = None,
     bucket_topk: Optional[int] = None,
+    beam_width: Optional[int] = None,
 ) -> tuple[Array, Array]:
     """kNN over the candidate set (paper Table 3: 30NN with max radius).
 
     Returns (ids (Q, k), distances (Q, k)); slots beyond the available
     candidates hold id -1 / distance +inf. ``store`` selects the
-    candidate-store precision; ``bucket_topk`` the approximate leaf
-    ranking.
+    candidate-store precision; ``bucket_topk`` / ``beam_width`` the
+    approximate leaf ranking (top-K of the dense panel / beam-pruned
+    traversal; None = exact).
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
@@ -200,6 +235,7 @@ def knn_query(
         index, _store_for(index, store), q, radius,
         stop_count=stop_count, cap=cap, metric=metric, mode="knn", k=int(k),
         use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
+        beam_width=beam_width,
     )
     return ids, d
 

@@ -5,9 +5,9 @@ LMI (K-Means, GMM, K-Means+LogReg). Diagonal covariance keeps the E-step a
 single fused broadcast/matmul (MXU-friendly) and matches sklearn's
 `GaussianMixture(covariance_type="diag")`.
 
-Supports per-point weights (weight 0 == padding) so the LMI level-2 build
-can vmap hundreds of sub-fits as one padded batch, exactly like
-`repro.core.kmeans.fit_many`.
+Supports per-point weights (weight 0 == padding) so every level >= 1 of
+the LMI level-stack build can vmap thousands of per-parent sub-fits as
+one padded batch, exactly like `repro.core.kmeans.fit_many`.
 
 The log-likelihood E-step is computed in a numerically safe form:
 
@@ -105,7 +105,8 @@ def fit(
 
 
 def fit_many(key: Array, xs: Array, ws: Array, k: int, max_iter: int = 25) -> GMMState:
-    """One GMM per padded group (see kmeans.fit_many)."""
+    """One GMM per padded group — the stacked multi-parent fit of the LMI
+    level-stack build (see kmeans.fit_many)."""
     keys = jax.random.split(key, xs.shape[0])
     f = functools.partial(fit, k=k, max_iter=max_iter)
     return jax.vmap(lambda kk, x, w: f(kk, x, weights=w))(keys, xs, ws)

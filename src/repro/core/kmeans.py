@@ -3,8 +3,9 @@
 Features:
   * k-means++ initialisation (D^2 sampling) under `lax.fori_loop`,
   * Lloyd iterations with convergence test in a `lax.while_loop`,
-  * per-point *weights* (weight 0 == padding) so hundreds of variable-size
-    sub-cluster fits vmap as one padded batch (LMI level-2 build),
+  * per-point *weights* (weight 0 == padding) so thousands of variable-size
+    sub-cluster fits vmap as one padded batch — the per-parent routing
+    weights of every level >= 1 of the LMI level-stack build,
   * empty-cluster repair (empty centroid snaps to the farthest live point),
   * fused assignment path through the Pallas `kmeans_assign` kernel when
     `use_kernel=True` (tests validate both paths against each other),
@@ -132,8 +133,10 @@ def fit_many(
 ) -> KMeansState:
     """Fit one K-Means per padded group — a single vmapped program.
 
-    Used by the LMI level>=2 build: each parent node's points become one
-    padded group. Returns stacked KMeansState with leading `groups` dim.
+    Used by every level >= 1 of the LMI level-stack build: each parent
+    node's points become one padded group (`lmi._pad_groups` routes them
+    with 0/1 weights). Returns stacked KMeansState with leading `groups`
+    dim.
     """
     keys = jax.random.split(key, xs.shape[0])
     f = functools.partial(fit, k=k, max_iter=max_iter)

@@ -1,28 +1,48 @@
 """Learned Metric Index (LMI) — the paper's core contribution, TPU-native.
 
 Structure (data-driven LMI, [Slanináková et al. 2021], Sec. 4 of the
-paper): a tree of learned partitioning models. Level 1 is one model with
-arity ``a0`` fit on the whole dataset; level 2 is ``a0`` models of arity
-``a1``, each fit on the points routed to its parent; leaves are data
-buckets. The paper's best setup is (256, 64) with K-Means nodes.
+paper): a tree of learned partitioning models of arbitrary depth. The
+index is a *level stack* ``LMI.levels = (params_0, params_1, ...)``:
+level 0 is one model with arity ``a0`` fit on the whole dataset; level
+``i`` is a vmapped stack of ``prod(arities[:i])`` node models of arity
+``a_i``, each fit on the points routed to its parent (the ``fit_many``
+APIs of kmeans/gmm/logreg with per-parent routing weights). Leaf ids are
+mixed-radix prefixes: ``leaf = ((n_0 * a1 + n_1) * a2 + n_2) ...``. The
+paper's best setup is the 2-level (256, 64) K-Means stack.
 
 TPU-native search
 -----------------
 The reference CPU implementation walks a priority queue of nodes ordered
 by predicted probability. That is branchy and sequential. Because the
-joint leaf probability factorises,
+joint leaf probability factorises over the level stack,
 
-    log P(leaf = (i, j) | q) = log P(i | q) + log P(j | q, i),
+    log P(leaf = (n_0, ..., n_k) | q) = sum_i log P(n_i | q, n_<i),
 
-we instead compute *all* leaf log-probs with two batched model
-evaluations (matmuls), rank leaves by probability with one sort, and cut
-the ranked bucket stream at the stop condition with a cumulative-sum +
-searchsorted. For a 2-level index this is *exactly* the priority-queue
-search result (the queue pops leaves in joint-probability order), but it
-is branch-free, fully batched over queries, and shards over both queries
-and leaves. Candidate extraction returns a fixed-size (Q, C) id matrix +
-validity mask, so downstream filtering is one fused gather + distance +
-top-k — no ragged shapes anywhere. The fused stage is implemented by the
+search is a loop over levels that accumulates factorized log-probs for a
+*frontier* of leaf prefixes, in one of two modes:
+
+  * exact enumeration (``beam_width=None``): the frontier is every node
+    of the level — the batched model evaluations are plain matmuls and
+    the result is the dense ``(Q, n_leaves)`` joint log-prob matrix.
+    For a 2-level index this is *exactly* the priority-queue search
+    result (the queue pops leaves in joint-probability order) and
+    bit-identical to the pre-level-stack 2-level implementation;
+  * beam search (``beam_width=B``): before each expansion the frontier
+    is pruned to the top-``B`` prefixes per query (`jax.lax.top_k`), and
+    only those ``B`` node models are gathered and evaluated. Leaf
+    ranking work drops from ``O(Q * n_leaves)`` to ``O(Q * B * arity)``
+    per level — the difference between scoring 262k leaves per query at
+    depth 3 / arity 64 and scoring ~4k — at the cost of missing leaves
+    whose ancestors fell off the beam (recall impact measured in
+    benchmarks/depth_beam.py; a beam a few multiples of the visited
+    bucket count is within 0.02 recall@30 of exact).
+
+Either mode yields ranked leaves; the ranked bucket stream is cut at the
+stop condition with a cumulative-sum + searchsorted
+(`rank_visited_buckets` / `extract_rows` — shared verbatim with the
+bucket-sharded path). Candidate extraction returns a fixed-size (Q, C)
+id matrix + validity mask, so downstream filtering is one fused gather +
+distance + top-k — no ragged shapes anywhere. The fused stage is the
 `repro.kernels.lmi_filter` Pallas kernel (gather into VMEM + norm
 decomposition + streaming top-k; see repro.core.filtering), so the
 (Q, C, d) candidate intermediate is never materialized in HBM.
@@ -37,8 +57,8 @@ matrix, which makes the distributed version (repro.core.distributed_lmi)
 a pure shard-of-rows problem.
 
 Build is host-orchestrated (it is an offline operation) but every numeric
-step — the root fit, the ``a0`` vmapped child fits, bucket assignment —
-is a jitted JAX program; see `repro.core.kmeans.fit_many`.
+step — the root fit, the per-level vmapped child fits, bucket assignment
+— is a jitted JAX program; see `repro.core.kmeans.fit_many`.
 """
 from __future__ import annotations
 
@@ -57,35 +77,49 @@ Array = jax.Array
 
 MODEL_TYPES = ("kmeans", "gmm", "kmeans+logreg")
 
+LevelParams = dict  # dict[str, Array]; level i carries a leading prod(arities[:i]) node dim (level 0: none)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class LMI:
-    """A built 2-level learned metric index (pytree).
+    """A built learned metric index of arbitrary depth (pytree).
 
-    Leaf ids are ``parent * a1 + child``. ``bucket_offsets`` /
-    ``sorted_ids`` / ``sorted_embeddings`` form the CSR bucket store:
-    bucket ``b`` holds rows ``sorted_*[bucket_offsets[b] :
-    bucket_offsets[b+1]]``.
+    ``levels[i]`` holds the level-``i`` node-model parameters: level 0 is
+    a single model (no leading dim), level ``i >= 1`` a stacked batch
+    with leading dim ``prod(arities[:i])`` (one model per parent
+    prefix). Leaf ids are mixed-radix prefixes over ``arities``.
+    ``bucket_offsets`` / ``sorted_ids`` / ``sorted_embeddings`` form the
+    CSR bucket store: bucket ``b`` holds rows
+    ``sorted_*[bucket_offsets[b] : bucket_offsets[b+1]]``.
+
+    ``index_revision`` counts structural mutations (`insert`); candidate
+    stores built from this index record the revision they saw, so
+    `filtering` can reject a stale prebuilt store instead of silently
+    filtering against outdated rows/offsets.
     """
 
     # --- static metadata
     arities: tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
     model_type: str = dataclasses.field(metadata=dict(static=True))
-    # --- level-1 node model (single model over the whole dataset)
-    l1_params: dict[str, Array]
-    # --- level-2 node models, stacked over the a0 parents
-    l2_params: dict[str, Array]
+    # --- the level stack of node models (level 0 first)
+    levels: tuple[LevelParams, ...]
     # --- CSR bucket store
     bucket_offsets: Array  # (n_leaves + 1,) int32
     sorted_ids: Array  # (M,) int32 — original object id per CSR row
     sorted_embeddings: Array  # (M, d) float32 — embeddings in CSR order
     # --- build-time bucket stats (static, so query planning never syncs)
     max_bucket_size: int = dataclasses.field(default=0, metadata=dict(static=True))
+    # --- structural mutation counter (static; see class docstring)
+    index_revision: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+    @property
+    def depth(self) -> int:
+        return len(self.arities)
 
     @property
     def n_leaves(self) -> int:
-        return self.arities[0] * self.arities[1]
+        return math.prod(self.arities)
 
     @property
     def n_objects(self) -> int:
@@ -95,13 +129,24 @@ class LMI:
     def dim(self) -> int:
         return self.sorted_embeddings.shape[1]
 
+    # ------------------------------------------------ deprecated 2-level views
+    @property
+    def l1_params(self) -> LevelParams:
+        """Deprecated: the pre-level-stack name for ``levels[0]``."""
+        return self.levels[0]
+
+    @property
+    def l2_params(self) -> LevelParams:
+        """Deprecated: the pre-level-stack name for ``levels[1]``."""
+        return self.levels[1]
+
     def bucket_sizes(self) -> Array:
         return self.bucket_offsets[1:] - self.bucket_offsets[:-1]
 
     def memory_bytes(self, include_data: bool = False) -> int:
         """Index-structure footprint (paper Table 3 'index size')."""
         n = 0
-        for leaf in jax.tree.leaves((self.l1_params, self.l2_params)):
+        for leaf in jax.tree.leaves(self.levels):
             n += leaf.size * leaf.dtype.itemsize
         n += self.bucket_offsets.size * 4 + self.sorted_ids.size * 4
         if include_data:
@@ -112,9 +157,9 @@ class LMI:
 # --------------------------------------------------------------------- build
 
 
-def _node_log_proba(model_type: str, params: dict[str, Array], x: Array) -> Array:
-    """Child log-probabilities for one level. Params may carry a leading
-    parents dim; returns (…, n, arity)."""
+def _node_log_proba(model_type: str, params: LevelParams, x: Array) -> Array:
+    """Child log-probabilities for one level. Params may carry leading
+    node-stack dims; returns (…, n, arity)."""
     if model_type == "kmeans":
         return kmeans.predict_log_proba(params["centroids"], x)
     if model_type == "gmm":
@@ -124,7 +169,7 @@ def _node_log_proba(model_type: str, params: dict[str, Array], x: Array) -> Arra
     raise ValueError(f"unknown model_type {model_type!r}")
 
 
-def _fit_root(key: Array, x: Array, k: int, model_type: str, max_iter: int) -> dict[str, Array]:
+def _fit_root(key: Array, x: Array, k: int, model_type: str, max_iter: int) -> LevelParams:
     if model_type == "kmeans":
         st = kmeans.fit(key, x, k, max_iter=max_iter)
         return {"centroids": st.centroids}
@@ -142,8 +187,8 @@ def _fit_root(key: Array, x: Array, k: int, model_type: str, max_iter: int) -> d
 
 def _fit_children(
     key: Array, xs: Array, ws: Array, k: int, model_type: str, max_iter: int
-) -> dict[str, Array]:
-    """Fit a0 stacked child models on padded groups (groups, cap, d)."""
+) -> LevelParams:
+    """Fit a stacked batch of child models on padded groups (groups, cap, d)."""
     if model_type == "kmeans":
         st = kmeans.fit_many(key, xs, ws, k, max_iter=max_iter)
         return {"centroids": st.centroids}
@@ -162,6 +207,30 @@ def _fit_children(
     raise ValueError(f"unknown model_type {model_type!r}")
 
 
+def _pad_groups(x: Array, labels: np.ndarray, n_groups: int, group_cap: Optional[int], min_k: int):
+    """Route points into fixed-size per-parent groups for the vmapped fit.
+
+    Returns (xs (n_groups, cap, d), ws (n_groups, cap)) where ws is the
+    0/1 routing-weight mask (weight 0 == padding; the ``fit_many`` APIs
+    ignore zero-weight rows). Vectorized host-side — no per-group loop,
+    so deep levels with thousands of parents stay cheap to stage.
+    """
+    counts = np.bincount(labels, minlength=n_groups)
+    cap = int(group_cap or max(int(counts.max()), min_k))
+    cap = max(128, ((cap + 127) // 128) * 128)
+    order = np.argsort(labels, kind="stable")
+    starts = np.zeros(n_groups + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    labels_sorted = labels[order]
+    pos = np.arange(labels.shape[0], dtype=np.int64) - starts[labels_sorted]
+    keep = pos < cap  # groups larger than cap are truncated (weight-masked)
+    pad_idx = np.zeros((n_groups, cap), np.int64)
+    pad_w = np.zeros((n_groups, cap), np.float32)
+    pad_idx[labels_sorted[keep], pos[keep]] = order[keep]
+    pad_w[labels_sorted[keep], pos[keep]] = 1.0
+    return x[jnp.asarray(pad_idx)], jnp.asarray(pad_w)
+
+
 def build(
     key: Array,
     embeddings: Array,
@@ -170,60 +239,46 @@ def build(
     max_iter: int = 25,
     group_cap: Optional[int] = None,
 ) -> LMI:
-    """Build a 2-level LMI over ``embeddings`` (M, d).
+    """Build an LMI of depth ``len(arities)`` over ``embeddings`` (M, d).
 
-    Host-orchestrated; all numeric steps are jitted. ``group_cap`` pads
-    every level-2 group to a fixed size (defaults to the largest level-1
-    cluster, rounded up to a multiple of 128 for TPU-friendly shapes).
+    Host-orchestrated; all numeric steps are jitted. Level ``i >= 1`` is
+    one vmapped ``fit_many`` call over ``prod(arities[:i])`` padded
+    groups (``group_cap`` overrides the per-level pad size, which
+    defaults to the largest parent group, rounded up to a multiple of
+    128 for TPU-friendly shapes).
     """
     if model_type not in MODEL_TYPES:
         raise ValueError(f"model_type must be one of {MODEL_TYPES}")
-    if len(arities) != 2:
-        raise ValueError("this implementation builds 2-level indexes (paper's best setups)")
-    a0, a1 = int(arities[0]), int(arities[1])
+    if len(arities) < 1:
+        raise ValueError("arities must name at least one level")
+    arities = tuple(int(a) for a in arities)
     x = jnp.asarray(embeddings, jnp.float32)
-    m, d = x.shape
 
-    k1, k2 = jax.random.split(jax.random.fold_in(key, a0 * a1))
-    l1_params = _fit_root(k1, x, a0, model_type, max_iter)
-    l1_labels = np.asarray(jnp.argmax(_node_log_proba(model_type, l1_params, x), axis=-1))
+    keys = jax.random.split(jax.random.fold_in(key, math.prod(arities)), len(arities))
+    levels = [_fit_root(keys[0], x, arities[0], model_type, max_iter)]
+    # prefix[j] = mixed-radix node id of point j at the deepest fit level
+    prefix = np.asarray(jnp.argmax(_node_log_proba(model_type, levels[0], x), axis=-1))
 
-    # ---- pad level-1 clusters into fixed-size groups for the vmapped fit
-    counts = np.bincount(l1_labels, minlength=a0)
-    cap = int(group_cap or max(int(counts.max()), a1))
-    cap = max(128, ((cap + 127) // 128) * 128)
-    order = np.argsort(l1_labels, kind="stable")
-    starts = np.zeros(a0 + 1, np.int64)
-    np.cumsum(counts, out=starts[1:])
-    # gather indices per group, padded with 0 (weight-masked)
-    pad_idx = np.zeros((a0, cap), np.int64)
-    pad_w = np.zeros((a0, cap), np.float32)
-    for p in range(a0):
-        c = min(int(counts[p]), cap)
-        pad_idx[p, :c] = order[starts[p] : starts[p] + c]
-        pad_w[p, :c] = 1.0
-    xs = x[jnp.asarray(pad_idx)]  # (a0, cap, d)
-    ws = jnp.asarray(pad_w)
-
-    l2_params = _fit_children(k2, xs, ws, a1, model_type, max_iter)
-
-    # ---- leaf assignment: argmax of the child model of one's own parent
-    l2_logp = _assign_children(model_type, l2_params, x, jnp.asarray(l1_labels))
-    l2_labels = np.asarray(jnp.argmax(l2_logp, axis=-1))
-    leaf = l1_labels.astype(np.int64) * a1 + l2_labels.astype(np.int64)
+    for i in range(1, len(arities)):
+        n_nodes = math.prod(arities[:i])
+        xs, ws = _pad_groups(x, prefix, n_nodes, group_cap, arities[i])
+        levels.append(_fit_children(keys[i], xs, ws, arities[i], model_type, max_iter))
+        # child assignment under each point's own parent model
+        child_logp = _assign_children(model_type, levels[i], x, jnp.asarray(prefix))
+        child = np.asarray(jnp.argmax(child_logp, axis=-1))
+        prefix = prefix * arities[i] + child
 
     # ---- CSR bucket store
-    n_leaves = a0 * a1
-    perm = np.argsort(leaf, kind="stable")
-    sizes = np.bincount(leaf, minlength=n_leaves)
+    n_leaves = math.prod(arities)
+    perm = np.argsort(prefix, kind="stable")
+    sizes = np.bincount(prefix, minlength=n_leaves)
     offsets = np.zeros(n_leaves + 1, np.int64)
     np.cumsum(sizes, out=offsets[1:])
 
     return LMI(
-        arities=(a0, a1),
+        arities=arities,
         model_type=model_type,
-        l1_params=jax.tree.map(jnp.asarray, l1_params),
-        l2_params=jax.tree.map(jnp.asarray, l2_params),
+        levels=tuple(jax.tree.map(jnp.asarray, lv) for lv in levels),
         bucket_offsets=jnp.asarray(offsets, jnp.int32),
         sorted_ids=jnp.asarray(perm, jnp.int32),
         sorted_embeddings=x[jnp.asarray(perm)],
@@ -232,9 +287,9 @@ def build(
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def _assign_children(model_type: str, l2_params, x: Array, parents: Array) -> Array:
-    """Log-probs (n, a1) under each point's own parent model."""
-    own = jax.tree.map(lambda p: p[parents], l2_params)  # (n, ...) gathered
+def _assign_children(model_type: str, level_params, x: Array, parents: Array) -> Array:
+    """Log-probs (n, arity) under each point's own parent node model."""
+    own = jax.tree.map(lambda p: p[parents], level_params)  # (n, ...) gathered
 
     def per_point(params_i, x_i):
         return _node_log_proba(model_type, params_i, x_i[None, :])[0]
@@ -245,14 +300,78 @@ def _assign_children(model_type: str, l2_params, x: Array, parents: Array) -> Ar
 # -------------------------------------------------------------------- search
 
 
-def leaf_log_probs(index: LMI, queries: Array) -> Array:
-    """(Q, n_leaves) joint leaf log-probabilities."""
+def leaf_log_probs(index, queries: Array) -> Array:
+    """(Q, n_leaves) joint leaf log-probabilities by exact enumeration.
+
+    The level loop expands the full frontier at every level: level-``i``
+    params carry their node-stack dim, so one batched model evaluation
+    (a matmul) scores every (node, query, child) cell at once. For depth
+    2 this lowers to the identical program as the pre-level-stack
+    implementation (one l1 + one l2 evaluation), so results are
+    bit-exact with it. Works on any object with ``model_type`` /
+    ``levels`` attrs (the sharded path passes a replicated-params stub).
+    """
     q = jnp.asarray(queries, jnp.float32)
-    l1 = _node_log_proba(index.model_type, index.l1_params, q)  # (Q, a0)
-    # l2 params have leading a0; broadcast over parents: (a0, Q, a1)
-    l2 = _node_log_proba(index.model_type, index.l2_params, q)
-    joint = l1.T[:, :, None] + l2  # (a0, Q, a1)
-    return jnp.transpose(joint, (1, 0, 2)).reshape(q.shape[0], -1)
+    acc = _node_log_proba(index.model_type, index.levels[0], q)  # (Q, a0)
+    for params in index.levels[1:]:
+        # params have leading n_nodes; broadcast over nodes: (N, Q, a_i)
+        child = _node_log_proba(index.model_type, params, q)
+        joint = jnp.transpose(acc)[:, :, None] + child  # (N, Q, a_i)
+        acc = jnp.transpose(joint, (1, 0, 2)).reshape(q.shape[0], -1)
+    return acc
+
+
+def beam_leaf_ranking(index, queries: Array, beam_width: int) -> tuple[Array, Array]:
+    """Best-first (order (Q, R), logp (Q, R)) of the beam's surviving leaves.
+
+    A loop over levels keeps only the top-``beam_width`` prefixes per
+    query before each expansion, and evaluates *only those* node models
+    (their params are gathered per query — ``O(Q * B * arity * d)`` work
+    instead of the exact path's ``O(Q * n_leaves * d)``). ``R`` is the
+    final frontier size ``min(beam, N_last) * arities[-1]`` — leaves
+    outside the beam are never scored, which is the approximation.
+
+    While the frontier still fits the beam nothing is pruned, and the
+    expansion stays the *dense* batched evaluation of `leaf_log_probs`
+    (params are read once for the whole batch, not gathered per query) —
+    so ``beam_width >= prod(arities[:-1])`` computes the identical
+    log-prob panel as exact enumeration.
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    nq = q.shape[0]
+    acc = _node_log_proba(index.model_type, index.levels[0], q)  # (Q, a0)
+    prefix = None  # None == full enumeration so far (acc column j is prefix j)
+    for i, params in enumerate(index.levels[1:], start=1):
+        arity = index.arities[i]
+        if prefix is None and acc.shape[-1] <= beam_width:
+            # dense expansion, identical to the leaf_log_probs level step
+            child = _node_log_proba(index.model_type, params, q)  # (N, Q, a)
+            joint = jnp.transpose(acc)[:, :, None] + child
+            acc = jnp.transpose(joint, (1, 0, 2)).reshape(nq, -1)
+            continue
+        if prefix is None:
+            prefix = jnp.broadcast_to(
+                jnp.arange(acc.shape[-1], dtype=jnp.int32)[None, :], acc.shape
+            )
+        if acc.shape[-1] > beam_width:
+            acc, sel = jax.lax.top_k(acc, beam_width)
+            prefix = jnp.take_along_axis(prefix, sel, axis=-1)
+        own = jax.tree.map(lambda p: p[prefix], params)  # (Q, F, ...) gathered
+
+        def per_query(params_q, x_q):
+            return _node_log_proba(index.model_type, params_q, x_q[None, :])[..., 0, :]
+
+        child = jax.vmap(per_query)(own, q)  # (Q, F, arity)
+        acc = (acc[:, :, None] + child).reshape(nq, -1)
+        prefix = (prefix[:, :, None] * arity
+                  + jnp.arange(arity, dtype=jnp.int32)[None, None, :]).reshape(nq, -1)
+    if prefix is None:
+        prefix = jnp.broadcast_to(
+            jnp.arange(acc.shape[-1], dtype=jnp.int32)[None, :], acc.shape
+        )
+    # best-first ordering of the surviving frontier
+    acc, sel = jax.lax.top_k(acc, acc.shape[-1])
+    return jnp.take_along_axis(prefix, sel, axis=-1), acc
 
 
 class SearchResult:
@@ -281,7 +400,9 @@ class BucketRuns(NamedTuple):
     (`kernels.lmi_filter.ops._segment_metadata` — cheaper than shipping
     the variable-length run list), while this explicit form feeds query
     planning and the benchmark's DMA-count model
-    (benchmarks/query_latency.py `gather_metadata`).
+    (benchmarks/query_latency.py `gather_metadata`). ``R`` is the ranked
+    leaf count — ``n_leaves`` for exact enumeration, the (much smaller)
+    surviving frontier for beam search.
     """
 
     starts: Array  # (Q, R) int32 — CSR row where the ranked bucket's run begins
@@ -306,15 +427,31 @@ def query_plan_params(
     return stop_count, int(candidate_cap)
 
 
+def _visited_cut(order: Array, sizes: Array, stop_count: int):
+    """Cut a best-first leaf ranking at the stop condition.
+
+    (sz (Q, R), visited (Q, R)): bucket r is visited iff the candidates
+    gathered before it are < stop_count, so ``visited`` is a prefix of
+    the ranking and the last visited bucket may overshoot by at most its
+    own size.
+    """
+    sz = sizes[order]  # (Q, R) bucket sizes best-first
+    csum = jnp.cumsum(sz, axis=-1)
+    visited = (csum - sz) < stop_count  # (Q, R) — a prefix of the ranking
+    return sz, visited
+
+
 def rank_visited_buckets(
     logp: Array, sizes: Array, stop_count: int, bucket_topk: Optional[int] = None
 ):
-    """Rank leaves by probability and cut the stream at the stop condition.
+    """Rank leaves of a dense (Q, L) log-prob panel and cut the stream at
+    the stop condition (the exact-enumeration ranking).
 
     Returns (order (Q, R), visited (Q, R), sz (Q, R)) where R is the
     number of ranked leaves. Shared by the single-device and sharded
     paths — both compute the *same global* ranking and cut, the sharded
-    path then walks shard-local offsets over it.
+    path then walks shard-local offsets over it. Beam search replaces
+    this with `beam_rank_visited_buckets` (no dense panel exists there).
 
     ``bucket_topk``: rank only the top-K leaves by probability instead of
     full-sorting all of them (§Perf iteration 3a: the (Q, L) argsort
@@ -327,10 +464,24 @@ def rank_visited_buckets(
         _, order = jax.lax.top_k(logp, bucket_topk)  # (Q, K) best-first
     else:
         order = jnp.argsort(-logp, axis=-1)  # (Q, L) best-first
-    sz = sizes[order]  # (Q, R) bucket sizes best-first
-    csum = jnp.cumsum(sz, axis=-1)
-    # Bucket r is visited iff the candidates gathered before it are < stop.
-    visited = (csum - sz) < stop_count  # (Q, R) — a prefix of the ranking
+    sz, visited = _visited_cut(order, sizes, stop_count)
+    return order, visited, sz
+
+
+def beam_rank_visited_buckets(
+    index, queries: Array, sizes: Array, stop_count: int, beam_width: int,
+    bucket_topk: Optional[int] = None,
+):
+    """`rank_visited_buckets` for the beam-pruned traversal: rank only the
+    beam's surviving leaves and cut at the stop condition. Determinism
+    across shards holds exactly as in the dense case — the traversal
+    depends only on replicated node params, so every shard computes the
+    identical ranking. ``bucket_topk`` further truncates the (already
+    best-first) beam ranking to its top K entries."""
+    order, _logp = beam_leaf_ranking(index, queries, beam_width)
+    if bucket_topk is not None and bucket_topk < order.shape[-1]:
+        order = order[:, :bucket_topk]
+    sz, visited = _visited_cut(order, sizes, stop_count)
     return order, visited, sz
 
 
@@ -365,16 +516,23 @@ def extract_rows(order: Array, visited: Array, offsets: Array, cap: int):
 
 def _search_core(
     index: LMI, queries: Array, stop_count: int, cap: int,
-    bucket_topk: Optional[int] = None,
+    bucket_topk: Optional[int] = None, beam_width: Optional[int] = None,
 ):
     """Traceable search body — shared by every query entry point (the
     single-device `search`/`search_rows`, the fused `filtering` queries;
-    the sharded variant composes the same `rank_visited_buckets` +
-    `extract_rows` pieces over shard-local offsets)."""
-    logp = leaf_log_probs(index, queries)  # (Q, L)
-    order, visited, sz = rank_visited_buckets(
-        logp, index.bucket_sizes(), stop_count, bucket_topk
-    )
+    the sharded variant composes the same ranking + `extract_rows`
+    pieces over shard-local offsets). ``beam_width=None`` enumerates
+    every leaf exactly; an int prunes the level frontier to that beam.
+    """
+    if beam_width is None:
+        logp = leaf_log_probs(index, queries)  # (Q, L)
+        order, visited, sz = rank_visited_buckets(
+            logp, index.bucket_sizes(), stop_count, bucket_topk
+        )
+    else:
+        order, visited, sz = beam_rank_visited_buckets(
+            index, queries, index.bucket_sizes(), stop_count, beam_width, bucket_topk
+        )
     n_buckets = jnp.sum(visited, axis=-1).astype(jnp.int32)
     rows, valid, n_cands = extract_rows(order, visited, index.bucket_offsets, cap)
     runs = BucketRuns(
@@ -385,7 +543,7 @@ def _search_core(
     return cand_ids, rows, valid, n_buckets, n_cands, runs
 
 
-_search_impl = functools.partial(jax.jit, static_argnums=(2, 3, 4))(_search_core)
+_search_impl = functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))(_search_core)
 
 
 def search(
@@ -394,6 +552,7 @@ def search(
     stop_condition: float = 0.01,
     candidate_cap: Optional[int] = None,
     bucket_topk: Optional[int] = None,
+    beam_width: Optional[int] = None,
 ) -> SearchResult:
     """Batched LMI search.
 
@@ -403,11 +562,13 @@ def search(
     so the fixed candidate capacity is stop + max bucket size (exact).
     Host-sync-free after warmup: the cap comes from build-time metadata.
     ``bucket_topk`` trades the full (Q, L) leaf argsort for a top-K
-    ranking (see `rank_visited_buckets`); None = exact.
+    ranking (see `rank_visited_buckets`); ``beam_width`` prunes the
+    level traversal itself to a top-B frontier (`beam_leaf_ranking`).
+    None for both = exact.
     """
     stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
     cand_ids, _rows, valid, n_buckets, n_cands, runs = _search_impl(
-        index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk
+        index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk, beam_width
     )
     return SearchResult(cand_ids, valid, n_buckets, n_cands, runs)
 
@@ -415,12 +576,13 @@ def search(
 def search_rows(
     index: LMI, queries: Array, stop_condition: float = 0.01,
     candidate_cap: Optional[int] = None, bucket_topk: Optional[int] = None,
+    beam_width: Optional[int] = None,
 ):
     """Like `search` but returns CSR row indices (for fused filtering that
     gathers from the candidate store without the extra id indirection)."""
     stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
     cand_ids, rows, valid, n_buckets, n_cands, runs = _search_impl(
-        index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk
+        index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk, beam_width
     )
     return cand_ids, rows, valid
 
@@ -431,17 +593,22 @@ def search_rows(
 def insert(index: LMI, new_embeddings: Array, new_ids: Optional[Array] = None) -> LMI:
     """Insert new objects (production API; offline rebuild not required).
 
-    Routes each new object through the trained node models and splices it
-    into the CSR store. Host-side splice; model parameters are unchanged
-    (the paper's index is static after build — this is a beyond-paper
-    framework feature for serving freshness).
+    Routes each new object down the level stack (argmax child under its
+    own parent's model at every level) and splices it into the CSR
+    store. Host-side splice; model parameters are unchanged (the paper's
+    index is static after build — this is a beyond-paper framework
+    feature for serving freshness). Bumps ``index_revision``: candidate
+    stores built against the old CSR layout are detected as stale by
+    `filtering` and must be refreshed via `store.from_lmi`.
     """
     x_new = jnp.asarray(new_embeddings, jnp.float32)
     if new_ids is None:
         new_ids = jnp.arange(index.n_objects, index.n_objects + x_new.shape[0], dtype=jnp.int32)
-    l1 = jnp.argmax(_node_log_proba(index.model_type, index.l1_params, x_new), axis=-1)
-    l2 = jnp.argmax(_assign_children(index.model_type, index.l2_params, x_new, l1), axis=-1)
-    leaf_new = np.asarray(l1 * index.arities[1] + l2)
+    prefix = jnp.argmax(_node_log_proba(index.model_type, index.levels[0], x_new), axis=-1)
+    for i, params in enumerate(index.levels[1:], start=1):
+        child = jnp.argmax(_assign_children(index.model_type, params, x_new, prefix), axis=-1)
+        prefix = prefix * index.arities[i] + child
+    leaf_new = np.asarray(prefix)
 
     offsets = np.asarray(index.bucket_offsets, np.int64)
     sizes_old = offsets[1:] - offsets[:-1]
@@ -460,4 +627,5 @@ def insert(index: LMI, new_embeddings: Array, new_ids: Optional[Array] = None) -
         sorted_ids=jnp.asarray(ids_all[perm], jnp.int32),
         sorted_embeddings=jnp.asarray(emb_all[perm]),
         max_bucket_size=int(sizes.max()),
+        index_revision=index.index_revision + 1,
     )

@@ -7,7 +7,8 @@ argmin. We train with full-batch Adam from `repro.optim` (our own
 substrate, no optax) on the weighted cross-entropy to the K-Means labels.
 
 Supports per-sample weights (0 == padding) and a vmapped `fit_many` for
-the LMI level-2 build, mirroring kmeans/gmm.
+the stacked multi-parent fits of the LMI level-stack build (one weighted
+sub-fit per parent node at every level >= 1), mirroring kmeans/gmm.
 """
 from __future__ import annotations
 

@@ -59,6 +59,9 @@ class CandidateStore:
     ids: Array  # (..., R) int32 original object ids
     offsets: Array  # (..., L + 1) int32 CSR bucket offsets
     scales: Optional[Array] = None  # (..., R) float32 dequant scales (int8)
+    # index_revision of the LMI this store was materialized from; filtering
+    # rejects a store whose revision lags the index (stale after `lmi.insert`)
+    revision: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     @property
     def n_rows(self) -> int:
@@ -91,6 +94,7 @@ class CandidateStore:
             ids=self.ids[index],
             offsets=self.offsets[index],
             scales=None if self.scales is None else self.scales[index],
+            revision=self.revision,
         )
 
 
@@ -113,7 +117,10 @@ def quantize(embeddings: Array, dtype: str) -> tuple[Array, Optional[Array]]:
     return q, scales
 
 
-def make_store(embeddings: Array, ids: Array, offsets: Array, dtype: str = "float32") -> CandidateStore:
+def make_store(
+    embeddings: Array, ids: Array, offsets: Array, dtype: str = "float32",
+    revision: int = 0,
+) -> CandidateStore:
     data, scales = quantize(embeddings, dtype)
     return CandidateStore(
         dtype=dtype,
@@ -121,13 +128,25 @@ def make_store(embeddings: Array, ids: Array, offsets: Array, dtype: str = "floa
         ids=jnp.asarray(ids, jnp.int32),
         offsets=jnp.asarray(offsets, jnp.int32),
         scales=scales,
+        revision=revision,
     )
 
 
 def from_lmi(index, dtype: str = "float32") -> CandidateStore:
     """The store view of a built `repro.core.lmi.LMI` (f32 is zero-copy:
-    the leaves alias the index's CSR arrays)."""
-    return make_store(index.sorted_embeddings, index.sorted_ids, index.bucket_offsets, dtype)
+    the leaves alias the index's CSR arrays). Stamps the index's
+    ``index_revision`` so `filtering` can detect staleness after
+    `lmi.insert` re-splices the CSR arrays."""
+    return make_store(
+        index.sorted_embeddings, index.sorted_ids, index.bucket_offsets, dtype,
+        revision=getattr(index, "index_revision", 0),
+    )
+
+
+def refresh(index, store: CandidateStore) -> CandidateStore:
+    """Re-materialize ``store`` (same precision) from the index's current
+    CSR arrays — the one-call fix after `lmi.insert` invalidates it."""
+    return from_lmi(index, store.dtype)
 
 
 def gather_dequant(data: Array, scales: Optional[Array], rows: Array) -> Array:

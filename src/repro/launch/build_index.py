@@ -2,9 +2,30 @@
 
   python -m repro.launch.build_index --n-proteins 20000 --sections 10 \
       --arity 32 64 --out /tmp/lmi_index
+  python -m repro.launch.build_index --arities 64,64,64 --out /tmp/lmi_d3
 
-Generates (or loads) the protein dataset, embeds it, builds the LMI, and
-saves everything with repro.checkpoint (atomic npz).
+``--arity``/``--arities`` accept any number of levels (the level-stack
+LMI); generates (or loads) the protein dataset, embeds it, builds the
+LMI, and saves everything with repro.checkpoint (atomic npz).
+
+meta.json schema (format 2)
+---------------------------
+  * ``format``           — 2 for level-stack checkpoints (``levels``
+    pytree keys); absent/1 for legacy 2-level ones (``l1_params`` /
+    ``l2_params`` keys). `load_index` restores both.
+  * ``arities``          — list of per-level arities (any depth).
+  * ``depth``            — ``len(arities)`` (convenience mirror).
+  * ``model_type``       — kmeans / gmm / kmeans+logreg.
+  * ``n_sections`` / ``cutoff`` — embedding config.
+  * ``n_objects`` / ``n_leaves`` — database / leaf-bucket counts.
+  * ``max_bucket_size``  — build-time bucket stat; restoring it keeps
+    the serving query plan host-sync-free without a load-time pass.
+  * ``store_dtype``      — serving-time candidate-store precision
+    (float32 / bfloat16 / int8); the store is re-materialized from the
+    f32 CSR arrays at load.
+  * ``beam_width``       — default serving beam (null = exact
+    enumeration); serve.py's ``--beam`` overrides it.
+  * ``seed`` / ``build_seconds`` / ``embed_seconds`` — provenance.
 """
 from __future__ import annotations
 
@@ -23,20 +44,34 @@ from repro.core.embedding import EmbeddingConfig, embed_dataset
 from repro.data.proteins import ProteinGenConfig, generate_dataset
 
 
+def parse_arities(args) -> tuple[int, ...]:
+    """--arities "64,64,64" (comma string) overrides --arity 64 64 64."""
+    if getattr(args, "arities", None):
+        return tuple(int(a) for a in str(args.arities).split(","))
+    return tuple(int(a) for a in args.arity)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-proteins", type=int, default=20_000)
     ap.add_argument("--n-families", type=int, default=200)
     ap.add_argument("--sections", type=int, default=10)
     ap.add_argument("--cutoff", type=float, default=50.0)
-    ap.add_argument("--arity", type=int, nargs=2, default=(32, 64))
+    ap.add_argument("--arity", type=int, nargs="+", default=(32, 64),
+                    help="per-level arities, e.g. --arity 256 64 or --arity 64 64 64")
+    ap.add_argument("--arities", type=str, default=None,
+                    help='comma form of --arity, e.g. --arities 64,64,64 (overrides it)')
     ap.add_argument("--model", choices=("kmeans", "gmm", "kmeans+logreg"), default="kmeans")
     ap.add_argument("--store-dtype", choices=("float32", "bfloat16", "int8"), default="float32",
                     help="serving-time candidate-store precision recorded in meta.json "
                          "(the store is re-materialized from the f32 CSR arrays at load)")
+    ap.add_argument("--beam", type=int, default=None,
+                    help="default serving beam width recorded in meta.json "
+                         "(None = exact leaf enumeration)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", type=str, required=True)
     args = ap.parse_args()
+    arities = parse_arities(args)
 
     t0 = time.time()
     ds = generate_dataset(args.seed, ProteinGenConfig(n_proteins=args.n_proteins, n_families=args.n_families))
@@ -51,10 +86,11 @@ def main():
           f"({emb.size * 4 / 2**20:.1f} MB)")
 
     t0 = time.time()
-    index = lmi.build(jax.random.PRNGKey(args.seed), emb, arities=tuple(args.arity), model_type=args.model)
+    index = lmi.build(jax.random.PRNGKey(args.seed), emb, arities=arities, model_type=args.model)
     t_build = time.time() - t0
     sizes = np.asarray(index.bucket_sizes())
-    print(f"LMI {args.arity[0]}x{args.arity[1]} ({args.model}) built in {t_build:.1f}s; "
+    print(f"LMI {'x'.join(map(str, arities))} ({args.model}, depth {index.depth}) "
+          f"built in {t_build:.1f}s; "
           f"buckets: mean={sizes.mean():.1f} max={sizes.max()} empty={(sizes == 0).sum()}")
     print(f"index structure: {index.memory_bytes() / 2**20:.1f} MB "
           f"(+data: {index.memory_bytes(include_data=True) / 2**20:.1f} MB)")
@@ -67,55 +103,104 @@ def main():
               f"{st.nbytes(include_metadata=False) / 2**20:.1f} MB "
               f"({f32_bytes / max(st.nbytes(include_metadata=False), 1):.1f}x smaller than f32)")
 
-    os.makedirs(args.out, exist_ok=True)
+    save_index(
+        args.out, index,
+        n_sections=args.sections, cutoff=args.cutoff, seed=args.seed,
+        store_dtype=args.store_dtype, beam_width=args.beam,
+        build_seconds=t_build, embed_seconds=t_embed,
+    )
+    print(f"saved to {args.out}")
+
+
+def save_index(directory: str, index: lmi.LMI, *, n_sections: int, cutoff: float,
+               seed: int = 0, store_dtype: str = "float32",
+               beam_width=None, **extra_meta) -> None:
+    """Persist a built LMI (atomic npz + meta.json, format 2)."""
+    os.makedirs(directory, exist_ok=True)
     state = {
-        "l1_params": index.l1_params,
-        "l2_params": index.l2_params,
+        "levels": index.levels,
         "bucket_offsets": index.bucket_offsets,
         "sorted_ids": index.sorted_ids,
         "sorted_embeddings": index.sorted_embeddings,
     }
-    ckpt.save(args.out, 0, state)
-    with open(os.path.join(args.out, "meta.json"), "w") as f:
+    ckpt.save(directory, 0, state)
+    with open(os.path.join(directory, "meta.json"), "w") as f:
         json.dump(
             dict(
-                arities=list(args.arity), model_type=args.model,
-                n_sections=args.sections, cutoff=args.cutoff,
-                n_objects=int(emb.shape[0]), seed=args.seed,
-                store_dtype=args.store_dtype,
-                build_seconds=t_build, embed_seconds=t_embed,
+                format=2,
+                arities=list(index.arities), depth=index.depth,
+                model_type=index.model_type,
+                n_sections=n_sections, cutoff=cutoff,
+                n_objects=index.n_objects, n_leaves=index.n_leaves,
+                max_bucket_size=index.max_bucket_size,
+                store_dtype=store_dtype, beam_width=beam_width, seed=seed,
+                **extra_meta,
             ),
             f, indent=1,
         )
-    print(f"saved to {args.out}")
+
+
+def _level_template(model_type: str, n_nodes: int, arity: int, dim: int) -> dict:
+    """Zero-leaf param template of one level ((n_nodes,) stack dim omitted
+    for the root)."""
+    lead = () if n_nodes == 1 else (n_nodes,)
+    if model_type == "kmeans":
+        return {"centroids": jnp.zeros((*lead, arity, dim), jnp.float32)}
+    if model_type == "gmm":
+        return {
+            "means": jnp.zeros((*lead, arity, dim), jnp.float32),
+            "variances": jnp.zeros((*lead, arity, dim), jnp.float32),
+            "log_weights": jnp.zeros((*lead, arity), jnp.float32),
+        }
+    if model_type == "kmeans+logreg":
+        return {
+            "w": jnp.zeros((*lead, dim, arity), jnp.float32),
+            "b": jnp.zeros((*lead, arity), jnp.float32),
+        }
+    raise ValueError(f"unknown model_type {model_type!r}")
 
 
 def load_index(directory: str) -> lmi.LMI:
     with open(os.path.join(directory, "meta.json")) as f:
         meta = json.load(f)
-    a0, a1 = meta["arities"]
-    n_leaves = a0 * a1
+    arities = tuple(int(a) for a in meta["arities"])
+    n_leaves = 1
+    for a in arities:
+        n_leaves *= a
     dim = meta["n_sections"] * (meta["n_sections"] - 1) // 2
     n = meta["n_objects"]
+    model_type = meta["model_type"]
+    levels_template = tuple(
+        _level_template(model_type, int(np.prod(arities[:i], dtype=np.int64)) if i else 1,
+                        arities[i], dim)
+        for i in range(len(arities))
+    )
     template = {
-        "l1_params": {"centroids": jnp.zeros((a0, dim), jnp.float32)},
-        "l2_params": {"centroids": jnp.zeros((a0, a1, dim), jnp.float32)},
         "bucket_offsets": jnp.zeros((n_leaves + 1,), jnp.int32),
         "sorted_ids": jnp.zeros((n,), jnp.int32),
         "sorted_embeddings": jnp.zeros((n, dim), jnp.float32),
     }
+    if meta.get("format", 1) >= 2:
+        template["levels"] = levels_template
+    else:  # legacy 2-level checkpoints used l1_params/l2_params keys
+        template["l1_params"] = levels_template[0]
+        template["l2_params"] = levels_template[1]
     state = ckpt.restore(directory, template)
-    offsets = np.asarray(state["bucket_offsets"])
+    levels = (tuple(state["levels"]) if "levels" in state
+              else (state["l1_params"], state["l2_params"]))
+    # restore (or recompute, for legacy metas) so serving stays host-sync-free
+    max_bucket = meta.get("max_bucket_size")
+    if max_bucket is None:
+        offsets = np.asarray(state["bucket_offsets"])
+        max_bucket = int((offsets[1:] - offsets[:-1]).max())
     return lmi.LMI(
-        arities=(a0, a1),
-        model_type=meta["model_type"],
-        l1_params=state["l1_params"],
-        l2_params=state["l2_params"],
+        arities=arities,
+        model_type=model_type,
+        levels=levels,
         bucket_offsets=state["bucket_offsets"],
         sorted_ids=state["sorted_ids"],
         sorted_embeddings=state["sorted_embeddings"],
-        # recompute at load (one host pass) so serving stays host-sync-free
-        max_bucket_size=int((offsets[1:] - offsets[:-1]).max()),
+        max_bucket_size=int(max_bucket),
     )
 
 

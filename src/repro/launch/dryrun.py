@@ -527,8 +527,11 @@ def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
     dkey = _data_key(mesh)
     n_obj = ((shape.params["n_objects"] + 511) // 512) * 512  # shardable pad
     dim = cfg.embedding.dim
-    a0, a1 = cfg.arities
-    n_leaves = a0 * a1
+    # shape params may override the config's level stack (depth-3 cells)
+    arities = tuple(shape.params.get("arities", cfg.arities))
+    beam_width = shape.params.get("beam_width", cfg.beam_width)
+    a0 = arities[0]
+    n_leaves = math.prod(arities)
 
     if shape.kind == "build":
         # the full level-1 distributed build: data-parallel Lloyd under
@@ -559,12 +562,20 @@ def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
     # round-robin bucket ownership (Fig 3 balance).
     local_cap = ((4 * stop_count // n_shards + 4 * mean_bucket + 127) // 128) * 128
 
+    # replicated level stack: level 0 unstacked, level i stacked over
+    # prod(arities[:i]) parent nodes (kmeans node models)
+    level_structs = tuple(
+        {"centroids": _struct(
+            (*(() if i == 0 else (math.prod(arities[:i]),)), arities[i], dim),
+            jnp.float32, mesh, P(),
+        )}
+        for i in range(len(arities))
+    )
     sharded = ShardedLMI(
-        arities=cfg.arities,
+        arities=arities,
         model_type=cfg.model_type,
         n_shards=n_shards,
-        l1_params={"centroids": _struct((a0, dim), jnp.float32, mesh, P())},
-        l2_params={"centroids": _struct((a0, a1, dim), jnp.float32, mesh, P())},
+        levels=level_structs,
         global_sizes=_struct((n_leaves,), jnp.int32, mesh, P()),
         # §Perf 3c: candidate store in bf16 — the gather of candidate rows
         # is the search's dominant HBM traffic; distances accumulate in
@@ -580,23 +591,24 @@ def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
     )
     q_in = _struct((nq, dim), jnp.float32, mesh, P(dkey, None))
 
-    def search(q, off, ids, emb, l1c, l2c, gsz):
+    def search(q, off, ids, emb, levels, gsz):
         s = ShardedLMI(
-            arities=cfg.arities,
+            arities=arities,
             model_type=cfg.model_type,
             n_shards=n_shards,
-            l1_params={"centroids": l1c},
-            l2_params={"centroids": l2c},
+            levels=levels,
             global_sizes=gsz,
             store=CandidateStore(dtype="bfloat16", data=emb, ids=ids, offsets=off),
         )
         # §Perf: rank only 4x the expected bucket need instead of
-        # full-sorting all 16384 leaf probabilities per query
+        # full-sorting every leaf probability per query (exact path), or
+        # cut the beam ranking the same way (beam path)
         k_buckets = min(n_leaves, 4 * max(1, stop_count // mean_bucket))
         return sharded_knn(
             s, q, k=cfg.knn_k, mesh=mesh, stop_condition=cfg.stop_condition,
             query_axes=shard_rules.data_axes(mesh), local_cap=local_cap,
             metric=cfg.filter_metric, n_objects=n_obj, bucket_topk=k_buckets,
+            beam_width=beam_width,
         )
 
     fn = jax.jit(search)
@@ -605,12 +617,22 @@ def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
         sharded.shard_offsets,
         sharded.shard_ids,
         sharded.shard_embeddings,
-        sharded.l1_params["centroids"],
-        sharded.l2_params["centroids"],
+        sharded.levels,
         sharded.global_sizes,
     )
-    # useful work: leaf probs + candidate distances
-    model_flops = nq * (2.0 * n_leaves * dim + 2.0 * stop_count * dim)
+    # useful work: leaf ranking + candidate distances. Exact enumeration
+    # scores every leaf; a beam scores min(beam, frontier) * arity nodes
+    # per level.
+    if beam_width is None:
+        rank_nodes = sum(math.prod(arities[: i + 1]) for i in range(len(arities)))
+    else:
+        rank_nodes = arities[0]
+        frontier = arities[0]
+        for a in arities[1:]:
+            frontier = min(frontier, beam_width)
+            rank_nodes += frontier * a
+            frontier *= a
+    model_flops = nq * (2.0 * rank_nodes * dim + 2.0 * stop_count * dim)
     return fn, args, model_flops
 
 

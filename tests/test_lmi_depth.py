@@ -1,0 +1,296 @@
+"""Depth-generalized LMI (ISSUE 3): level-stack equivalence with the
+pre-refactor 2-level search, beam-pruned traversal semantics, depth-3
+end-to-end coverage, and the insert -> stale-CandidateStore regression.
+"""
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import filtering, lmi
+from repro.core import store as store_lib
+
+RNG = np.random.default_rng(3)
+
+
+def _reference_two_level_search(index, queries, stop_condition):
+    """The pre-level-stack 2-level search, op for op: dense joint panel
+    from one l1 + one stacked-l2 evaluation, full argsort, stop cut.
+    The refactor's `beam_width=None` path must be bit-exact with this.
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    stop_count, cap = lmi.query_plan_params(index, stop_condition, None)
+    l1 = lmi._node_log_proba(index.model_type, index.l1_params, q)  # (Q, a0)
+    l2 = lmi._node_log_proba(index.model_type, index.l2_params, q)  # (a0, Q, a1)
+    joint = l1.T[:, :, None] + l2
+    logp = jnp.transpose(joint, (1, 0, 2)).reshape(q.shape[0], -1)
+    order = jnp.argsort(-logp, axis=-1)
+    sizes = index.bucket_sizes()
+    sz = sizes[order]
+    csum = jnp.cumsum(sz, axis=-1)
+    visited = (csum - sz) < stop_count
+    n_buckets = jnp.sum(visited, axis=-1).astype(jnp.int32)
+    rows, valid, n_cands = lmi.extract_rows(order, visited, index.bucket_offsets, cap)
+    return index.sorted_ids[rows], valid, n_buckets, n_cands
+
+
+@settings(max_examples=6)
+@given(
+    n=st.sampled_from((180, 300)),
+    a0=st.integers(min_value=2, max_value=5),
+    a1=st.integers(min_value=2, max_value=5),
+    model_type=st.sampled_from(lmi.MODEL_TYPES),
+    stop=st.floats(min_value=0.02, max_value=0.25),
+)
+def test_depth2_levels_bitexact_vs_reference(n, a0, a1, model_type, stop):
+    """Property (ISSUE 3 acceptance): depth-2 level-stack search with
+    beam_width=None bit-exactly reproduces the pre-refactor SearchResult
+    on random indexes, for all three node-model families."""
+    rng = np.random.default_rng(n * 1000 + a0 * 100 + a1 * 10)
+    x = rng.uniform(size=(n, 12)).astype(np.float32)
+    index = lmi.build(jax.random.PRNGKey(a0 + a1), x, arities=(a0, a1),
+                      model_type=model_type, max_iter=8)
+    q = jnp.asarray(x[:6])
+    res = lmi.search(index, q, stop_condition=stop, beam_width=None)
+    ids_ref, valid_ref, nb_ref, nc_ref = _reference_two_level_search(index, q, stop)
+    np.testing.assert_array_equal(np.asarray(res.candidate_ids), np.asarray(ids_ref))
+    np.testing.assert_array_equal(np.asarray(res.valid), np.asarray(valid_ref))
+    np.testing.assert_array_equal(np.asarray(res.n_buckets), np.asarray(nb_ref))
+    np.testing.assert_array_equal(np.asarray(res.n_candidates), np.asarray(nc_ref))
+
+
+# --------------------------------------------------------- depth-3 structure
+
+
+@pytest.fixture(scope="module")
+def depth3_lmi(key, protein_embeddings):
+    return lmi.build(key, protein_embeddings, arities=(4, 4, 4))
+
+
+def test_depth3_partition_is_complete(depth3_lmi, protein_embeddings):
+    idx = depth3_lmi
+    assert idx.depth == 3 and idx.n_leaves == 64
+    assert int(jnp.sum(idx.bucket_sizes())) == protein_embeddings.shape[0]
+    ids = np.sort(np.asarray(idx.sorted_ids))
+    np.testing.assert_array_equal(ids, np.arange(protein_embeddings.shape[0]))
+    off = np.asarray(idx.bucket_offsets)
+    assert (np.diff(off) >= 0).all() and off[0] == 0 and off[-1] == idx.n_objects
+    # level stack shapes: level 0 unstacked, level i stacked over parents
+    assert idx.levels[0]["centroids"].shape == (4, idx.dim)
+    assert idx.levels[1]["centroids"].shape == (4, 4, idx.dim)
+    assert idx.levels[2]["centroids"].shape == (16, 4, idx.dim)
+
+
+def test_depth3_leaf_log_probs_normalized(depth3_lmi, protein_embeddings):
+    """Joint leaf probabilities sum to 1 per query (log-prob factorization
+    over the level stack is a proper distribution)."""
+    logp = lmi.leaf_log_probs(depth3_lmi, protein_embeddings[:4])
+    assert logp.shape == (4, 64)
+    np.testing.assert_allclose(np.exp(np.asarray(logp)).sum(axis=-1), 1.0, atol=1e-4)
+
+
+def test_depth3_full_stop_returns_everything(depth3_lmi, protein_embeddings):
+    res = lmi.search(depth3_lmi, protein_embeddings[:4], stop_condition=1.0)
+    n = protein_embeddings.shape[0]
+    assert (np.asarray(res.n_candidates) == n).all()
+
+
+def test_depth3_recall_vs_brute_force_at_one_percent(depth3_lmi, protein_embeddings):
+    """ISSUE 3 acceptance: depth-3 recall bound vs brute force at the 1%
+    stop condition (k=5 neighbors of database queries)."""
+    q = protein_embeddings[:64]
+    ids_lmi, _ = filtering.knn_query(depth3_lmi, q, k=5, stop_condition=0.01)
+    ids_bf, _ = filtering.brute_force_knn(q, protein_embeddings, 5)
+    got, ref = np.asarray(ids_lmi), np.asarray(ids_bf)
+    recall = np.mean([
+        len(set(ref[i]) & (set(got[i]) - {-1})) / 5 for i in range(ref.shape[0])
+    ])
+    assert recall >= 0.5, f"depth-3 recall@5 at 1% stop: {recall:.3f}"
+
+
+def test_depth3_model_types_build_and_search(key, protein_embeddings):
+    for model_type in lmi.MODEL_TYPES:
+        idx = lmi.build(key, protein_embeddings[:400], arities=(3, 3, 3),
+                        model_type=model_type, max_iter=8)
+        res = lmi.search(idx, protein_embeddings[:4], stop_condition=0.1)
+        assert (np.asarray(res.n_candidates) > 0).all()
+        assert int(jnp.sum(idx.bucket_sizes())) == 400
+
+
+# --------------------------------------------------------------- beam search
+
+
+def test_beam_wider_than_frontier_equals_exact(depth3_lmi, protein_embeddings):
+    """With beam >= prod(arities[:-1]) nothing is pruned: candidate sets
+    equal exact enumeration (ordering ties aside, the sets are equal)."""
+    q = protein_embeddings[:8]
+    exact = lmi.search(depth3_lmi, q, stop_condition=0.05)
+    wide = lmi.search(depth3_lmi, q, stop_condition=0.05,
+                      beam_width=math.prod(depth3_lmi.arities[:-1]))
+    for i in range(8):
+        e = set(np.asarray(exact.candidate_ids[i])[np.asarray(exact.valid[i])].tolist())
+        w = set(np.asarray(wide.candidate_ids[i])[np.asarray(wide.valid[i])].tolist())
+        assert e == w
+
+
+def test_beam_candidates_are_subset_of_leaf_universe(depth3_lmi, protein_embeddings):
+    """A narrow beam returns valid, deduplicated candidates and visits at
+    most beam * last_arity leaves."""
+    q = protein_embeddings[:8]
+    res = lmi.search(depth3_lmi, q, stop_condition=0.05, beam_width=2)
+    n = depth3_lmi.n_objects
+    for i in range(8):
+        c = np.asarray(res.candidate_ids[i])[np.asarray(res.valid[i])]
+        assert len(set(c.tolist())) == len(c)  # no duplicates
+        assert ((c >= 0) & (c < n)).all()
+    assert (np.asarray(res.n_buckets) <= 2 * depth3_lmi.arities[-1]).all()
+
+
+def test_beam_recall_vs_exact(depth3_lmi, protein_embeddings):
+    """A moderate beam keeps most of the exact answer (the sweep in
+    benchmarks/depth_beam.py tracks the full trade-off curve)."""
+    q = protein_embeddings[:32]
+    ids_e, _ = filtering.knn_query(depth3_lmi, q, k=10, stop_condition=0.05)
+    ids_b, _ = filtering.knn_query(depth3_lmi, q, k=10, stop_condition=0.05,
+                                   beam_width=8)
+    e, b = np.asarray(ids_e), np.asarray(ids_b)
+    recall = np.mean([
+        len((set(e[i]) - {-1}) & (set(b[i]) - {-1})) / max((e[i] >= 0).sum(), 1)
+        for i in range(e.shape[0])
+    ])
+    assert recall >= 0.9, f"beam-8 recall vs exact: {recall:.3f}"
+
+
+def test_beam_on_depth2_prunes_level1(small_lmi, protein_embeddings):
+    """Beam works on 2-level indexes too (prunes the level-1 frontier)."""
+    q = protein_embeddings[:8]
+    ids_e, _ = filtering.knn_query(small_lmi, q, k=5, stop_condition=0.1)
+    ids_b, _ = filtering.knn_query(small_lmi, q, k=5, stop_condition=0.1,
+                                   beam_width=4)
+    assert np.asarray(ids_b).shape == (8, 5)
+    # ample beam (= full frontier) is exact
+    ids_w, _ = filtering.knn_query(small_lmi, q, k=5, stop_condition=0.1,
+                                   beam_width=small_lmi.arities[0])
+    np.testing.assert_array_equal(np.asarray(ids_w), np.asarray(ids_e))
+
+
+# ------------------------------------------------------ sharded beam parity
+
+
+def test_sharded_depth3_beam_matches_single_device(depth3_lmi, protein_embeddings):
+    """Depth-3 index shards end-to-end; the sharded beam answer equals the
+    single-device beam answer (replicated params -> identical beam)."""
+    from repro.compat import make_mesh
+    from repro.core.distributed_lmi import shard_index, sharded_knn
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    sharded = shard_index(depth3_lmi, 1)
+    q = protein_embeddings[:8]
+    for beam in (None, 4):
+        ids_1, d_1 = filtering.knn_query(depth3_lmi, q, k=7, stop_condition=0.05,
+                                         beam_width=beam)
+        ids_s, d_s = sharded_knn(sharded, q, k=7, mesh=mesh, stop_condition=0.05,
+                                 beam_width=beam)
+        np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids_1))
+
+
+def test_shard_index_depth3_partitions_everything(depth3_lmi):
+    from repro.core.distributed_lmi import shard_index
+
+    sharded = shard_index(depth3_lmi, n_shards=4)
+    assert sharded.n_leaves == depth3_lmi.n_leaves
+    ids = []
+    for s in range(4):
+        n = int(sharded.shard_offsets[s, -1])
+        ids.extend(np.asarray(sharded.shard_ids[s, :n]).tolist())
+    assert sorted(ids) == list(range(depth3_lmi.n_objects))
+
+
+# ------------------------------------------------- insert + store staleness
+
+
+def test_insert_depth3_routes_through_all_levels(key, protein_embeddings):
+    idx = lmi.build(key, protein_embeddings[:500], arities=(3, 3, 3))
+    extra = protein_embeddings[500:520]
+    idx2 = lmi.insert(idx, extra)
+    assert idx2.n_objects == 520
+    assert idx2.index_revision == idx.index_revision + 1
+    res = lmi.search(idx2, extra, stop_condition=0.1)
+    found = sum(
+        int((np.asarray(res.candidate_ids[i])[np.asarray(res.valid[i])] == 500 + i).any())
+        for i in range(20)
+    )
+    assert found >= 16
+
+
+def test_insert_invalidates_prebuilt_store(key, protein_embeddings):
+    """Regression (ISSUE 3 satellite): a CandidateStore built before
+    `insert` must be rejected — it still holds the old rows/offsets."""
+    idx = lmi.build(key, protein_embeddings[:500], arities=(4, 4))
+    store = store_lib.from_lmi(idx, "int8")
+    # store works against the index it was built from
+    filtering.knn_query(idx, protein_embeddings[:4], k=5, store=store)
+    idx2 = lmi.insert(idx, protein_embeddings[500:510])
+    with pytest.raises(ValueError, match="stale CandidateStore"):
+        filtering.knn_query(idx2, protein_embeddings[:4], k=5, store=store)
+    with pytest.raises(ValueError, match="stale CandidateStore"):
+        filtering.range_query(idx2, protein_embeddings[:4], radius=0.3, store=store)
+    # refresh re-materializes at the same precision and is accepted
+    fresh = store_lib.refresh(idx2, store)
+    assert fresh.dtype == "int8" and fresh.revision == idx2.index_revision
+    ids, _ = filtering.knn_query(idx2, protein_embeddings[:4], k=5, store=fresh)
+    assert np.asarray(ids).shape == (4, 5)
+
+
+def test_knn_k_larger_than_candidate_cap(key, protein_embeddings):
+    """Tiny buckets at depth 3 can make k exceed the candidate capacity;
+    the tail pads with id -1 / +inf instead of crashing."""
+    idx = lmi.build(key, protein_embeddings[:400], arities=(4, 4, 4))
+    stop_count, cap = lmi.query_plan_params(idx, 0.01)
+    k = cap + 7
+    ids, d = filtering.knn_query(idx, protein_embeddings[:4], k=k, stop_condition=0.01)
+    assert ids.shape == (4, k)
+    assert (np.asarray(ids)[:, cap:] == -1).all()
+    assert np.isinf(np.asarray(d)[:, cap:]).all()
+    # the sharded merge has the same k > S * local_cap edge
+    from repro.compat import make_mesh
+    from repro.core.distributed_lmi import shard_index, sharded_knn
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ids_s, d_s = sharded_knn(shard_index(idx, 1), protein_embeddings[:4], k=k,
+                             mesh=mesh, stop_condition=0.01)
+    np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids))
+
+
+# ------------------------------------------------------------ legacy views
+
+
+def test_deprecated_two_level_properties(small_lmi, depth3_lmi):
+    assert small_lmi.l1_params is small_lmi.levels[0]
+    assert small_lmi.l2_params is small_lmi.levels[1]
+    assert depth3_lmi.l1_params is depth3_lmi.levels[0]
+
+
+def test_save_load_round_trip_depth3(tmp_path, key, protein_embeddings):
+    """build_index format 2: level-stack checkpoints round-trip at any
+    depth; the restored index answers queries identically."""
+    from repro.launch.build_index import load_index, save_index
+
+    idx = lmi.build(key, protein_embeddings[:400], arities=(4, 2, 4))
+    save_index(str(tmp_path), idx, n_sections=10, cutoff=50.0, beam_width=4)
+    import json, os
+    meta = json.load(open(os.path.join(str(tmp_path), "meta.json")))
+    assert meta["format"] == 2 and meta["depth"] == 3
+    assert meta["arities"] == [4, 2, 4] and meta["beam_width"] == 4
+    assert meta["max_bucket_size"] == idx.max_bucket_size
+    loaded = load_index(str(tmp_path))
+    assert loaded.arities == idx.arities
+    assert loaded.max_bucket_size == idx.max_bucket_size
+    q = protein_embeddings[:4]
+    ids_a, _ = filtering.knn_query(idx, q, k=5, stop_condition=0.1)
+    ids_b, _ = filtering.knn_query(loaded, q, k=5, stop_condition=0.1)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
