@@ -16,7 +16,18 @@ sweep quantifies the trade on real indexes:
   * measured recall@K of the beam answer vs the exact-enumeration
     answer on the same index (the acceptance metric: within 0.02);
   * wall-clock µs/query for context (CPU; the model is the
-    hardware-independent comparison).
+    hardware-independent comparison);
+  * **measured node-params bytes** of the beam's pruned-level node
+    evaluation (ISSUE 4): the gather path reads one (arity, d) param
+    block per live (query, prefix) pair; the segmented beam_eval path
+    (`repro.kernels.beam_eval`) sorts pairs by node id and loads each
+    run's block once. Both byte counts are derived from the *actual*
+    traversal's frontier (`lmi.beam_leaf_ranking(collect_pruned=...)` +
+    `beam_eval.segment_stats` replaying the kernel's run-start logic on
+    the real prefixes, at the SERVING_QUERIES batch) and reported next
+    to the cost model's dedup bound. Acceptance (ISSUE 4): >= 5x fewer
+    node-params bytes at the (64, 64, 64) / beam-128 operating point,
+    and the segmented leaf ranking answers exactly match gather mode.
 
 HBM model terms
 ---------------
@@ -59,6 +70,8 @@ ACCEPT_ARITIES = (64, 64, 64)
 ACCEPT_BEAM = 128
 MIN_REDUCTION = 10.0
 MAX_RECALL_DROP = 0.02
+# ISSUE 4 acceptance: measured node-params bytes, segmented vs gather
+NODE_EVAL_MIN_REDUCTION = 5.0
 
 SWEEP_ARITIES = ((32, 64), ACCEPT_ARITIES)
 
@@ -104,6 +117,45 @@ def rank_cost_model(arities, beam, n_queries: int, dim: int) -> dict:
             "ranked_leaves": frontier}
 
 
+def measured_node_eval(index, queries, beam: int) -> dict:
+    """Measured node-params bytes of one beam traversal's pruned levels.
+
+    Runs the real `lmi.beam_leaf_ranking` at the serving batch, captures
+    every pruned level's (Q, F) frontier, and asks
+    `beam_eval.segment_stats` what each access pattern reads for those
+    exact pairs: the per-pair gather vs the node-sorted segmented
+    evaluation (run-start param loads + per-pair vector planes + the
+    once-per-batch plane build). Also reports the cost model's dedup
+    bound (min(pairs, nodes) block reads) for the same levels.
+    """
+    from repro.core import lmi as lmi_lib
+    from repro.kernels import beam_eval
+
+    collected: list = []
+    lmi_lib.beam_leaf_ranking(index, queries, beam, collect_pruned=collected)
+    n_q, dim = queries.shape
+    n_mats, _nv, raw_floats = beam_eval.ops._FAMILY_SHAPES[index.model_type]
+    gather = segmented = bound = 0
+    levels = []
+    for level, prefix in collected:
+        arity = index.arities[level]
+        n_nodes = math.prod(index.arities[:level])
+        st = beam_eval.segment_stats(prefix, index.model_type, arity, dim, n_nodes)
+        gather += st["gather_bytes"]
+        segmented += st["segmented_bytes"]
+        bound += min(st["n_pairs"], n_nodes) * n_mats * arity * dim * 4
+        levels.append({"level": level, **st})
+    return {
+        "serving_queries": n_q,
+        "pruned_levels": [lv["level"] for lv in levels],
+        "per_level": levels,
+        "gather_bytes_per_query": gather / n_q,
+        "segmented_bytes_per_query": segmented / n_q,
+        "modeled_bound_bytes_per_query": bound / n_q,
+        "measured_reduction": gather / segmented if segmented else None,
+    }
+
+
 def _timed(fn):
     out = fn()  # compile + warmup
     jax.block_until_ready(out)
@@ -143,6 +195,12 @@ def main() -> None:
             "max_bucket_size": index.max_bucket_size,
             "points": {},
         }
+        # the pruned-level traffic measurement runs at the serving batch
+        # (the beam traversal never builds the dense panel, so the full
+        # 512-query shape is cheap even where the exact sweep is not)
+        q_serving = jnp.asarray(
+            np.resize(np.asarray(emb)[qids], (SERVING_QUERIES, d)), jnp.float32
+        )
         ids_exact = None
         for beam in (None, *BEAMS):
             fn = lambda: filtering.knn_query(
@@ -163,6 +221,8 @@ def main() -> None:
                 "recall_at_k_vs_exact": common.recall_at_k(ids_exact, ids),
                 "mean_answers": float(np.mean((ids >= 0).sum(axis=1))),
             }
+            if beam is not None:
+                point["node_eval_measured"] = measured_node_eval(index, q_serving, beam)
             sweep["points"]["exact" if beam is None else f"beam_{beam}"] = point
             print(f"{tag},{beam},{point['us_per_query']:.1f},"
                   f"{point['rank_flops_per_query']:.3e},"
@@ -195,6 +255,27 @@ def main() -> None:
     assert recall >= 1.0 - MAX_RECALL_DROP, (
         f"beam recall@{K} {recall:.3f} drops more than {MAX_RECALL_DROP} vs exact"
     )
+
+    # ------------------- ISSUE 4 acceptance: segmented node evaluation
+    ne = beam_pt["node_eval_measured"]
+    ne_red = ne["measured_reduction"]
+    index3, _ = common.built_index_arities(ACCEPT_ARITIES)
+    ids_seg = np.asarray(filtering.knn_query(
+        index3, q, K, STOP, beam_width=ACCEPT_BEAM, node_eval="segmented")[0])
+    seg_match = bool((ids_seg == np.asarray(filtering.knn_query(
+        index3, q, K, STOP, beam_width=ACCEPT_BEAM)[0])).all())
+    results["acceptance"]["node_eval_measured_reduction"] = ne_red
+    results["acceptance"]["node_eval_gather_bytes_per_query"] = ne["gather_bytes_per_query"]
+    results["acceptance"]["node_eval_segmented_bytes_per_query"] = ne["segmented_bytes_per_query"]
+    results["acceptance"]["segmented_ids_match_gather"] = seg_match
+    print(f"# node-eval @ {tag} beam={ACCEPT_BEAM} (serving batch, measured): "
+          f"gather {ne['gather_bytes_per_query']:.3e} B/q -> segmented "
+          f"{ne['segmented_bytes_per_query']:.3e} B/q (x{ne_red:.1f}; modeled bound "
+          f"{ne['modeled_bound_bytes_per_query']:.3e}); answers match gather: {seg_match}")
+    assert ne_red >= NODE_EVAL_MIN_REDUCTION, (
+        f"measured node-params reduction {ne_red:.1f} < {NODE_EVAL_MIN_REDUCTION}"
+    )
+    assert seg_match, "segmented beam answers diverge from gather mode"
 
     # ------------------------- depth-3 shards end-to-end (same beam answer)
     from repro.compat import make_mesh

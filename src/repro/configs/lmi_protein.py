@@ -40,6 +40,11 @@ class LMIProteinConfig:
     # exact enumeration; an int prunes the level frontier to that width —
     # the serving compute knob for deep (>= 3-level) stacks
     beam_width: Optional[int] = None
+    # how the beam's pruned levels read their node models: "gather" =
+    # one (arity, d) param block per (query, prefix) pair; "segmented" =
+    # the repro.kernels.beam_eval node-sorted evaluation (~one block per
+    # touched node per batch — the serving HBM knob for wide beams)
+    node_eval: str = "gather"
 
 
 def make_full() -> LMIProteinConfig:
@@ -84,6 +89,17 @@ SHAPES = (
         "search_512q_d3_beam",
         "search",
         dict(n_queries=512, n_objects=518_576, arities=(64, 64, 64), beam_width=64),
+    ),
+    # same serving point with node_eval="segmented": proves the segmented
+    # query path (canonical planes + oracle node evaluation under
+    # shard_map) compiles and shards on the production meshes; the Pallas
+    # kernel itself is dispatched by use_kernel and validated in
+    # interpret mode (tests/test_beam_eval.py, CI serve step)
+    ShapeSpec(
+        "search_512q_d3_beam_seg",
+        "search",
+        dict(n_queries=512, n_objects=518_576, arities=(64, 64, 64), beam_width=64,
+             node_eval="segmented"),
     ),
 )
 

@@ -168,14 +168,18 @@ def _local_candidates(
     cap: int,
     bucket_topk: Optional[int] = None,
     beam_width: Optional[int] = None,
+    node_eval: str = "gather",
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
 ):
     """Candidate CSR rows owned by this shard, in global probability order.
 
     The ranking and stop cut are the shared `lmi` ranking helpers on the
     replicated *global* sizes — identical on every shard (the beam
-    traversal likewise depends only on replicated node params) — and the
-    slot->row walk is `lmi.extract_rows` over the shard-local offsets,
-    so each shard materializes only its own share of the candidate set.
+    traversal likewise depends only on replicated node params, whatever
+    ``node_eval`` mode evaluates them) — and the slot->row walk is
+    `lmi.extract_rows` over the shard-local offsets, so each shard
+    materializes only its own share of the candidate set.
     """
     index_stub = _ProbStub(model_type, levels, arities)
     if beam_width is None:
@@ -185,7 +189,8 @@ def _local_candidates(
         )
     else:
         order, visited, _sz = lmi_lib.beam_rank_visited_buckets(
-            index_stub, queries, global_sizes, stop_count, beam_width, bucket_topk
+            index_stub, queries, global_sizes, stop_count, beam_width, bucket_topk,
+            node_eval=node_eval, use_kernel=use_kernel, interpret=interpret,
         )
     rows, valid, _n = lmi_lib.extract_rows(order, visited, local_offsets, cap)
     return rows, valid
@@ -215,6 +220,7 @@ def sharded_knn(
     n_objects: Optional[int] = None,
     bucket_topk: Optional[int] = None,
     beam_width: Optional[int] = None,
+    node_eval: str = "gather",
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
 ):
@@ -235,13 +241,17 @@ def sharded_knn(
     ``beam_width`` runs the beam-pruned level traversal instead of exact
     enumeration — every shard computes the identical beam from the
     replicated node models, so the sharded answer still equals the
-    single-device beam answer.
+    single-device beam answer. ``node_eval="segmented"`` evaluates the
+    beam's pruned levels through `repro.kernels.beam_eval` (node-sorted
+    segmented params reads) instead of per-pair gathers; the replicated
+    params still yield the identical beam on every shard.
 
     ``use_kernel=True`` runs the per-shard filtering through the fused
     `repro.kernels.lmi_filter` Pallas kernel for *every* store dtype —
     quantized stores are dequantized in VMEM after the gather, exactly as
     on the single-device path (it is the same `filtering.filter_topk`
-    call).
+    call) — and, with ``node_eval="segmented"``, the beam node
+    evaluation through the beam_eval Pallas kernel.
     """
     if n_objects is None:
         n_objects = sharded.n_objects or int(jnp.sum(sharded.global_sizes))
@@ -275,6 +285,7 @@ def sharded_knn(
             sharded.model_type, levels, sharded.arities, gsizes,
             local_store.offsets, queries_l, stop_count, local_cap,
             bucket_topk=bucket_topk, beam_width=beam_width,
+            node_eval=node_eval, use_kernel=use_kernel, interpret=interpret,
         )
         kk = min(k, local_cap)
         local_d, top_slot = filtering.filter_topk(

@@ -41,7 +41,10 @@ and the radius rides along as a device scalar. ``bucket_topk`` swaps the
 full (Q, L) leaf argsort for a top-K ranking (`lmi.rank_visited_buckets`);
 ``beam_width`` swaps exact leaf enumeration for the beam-pruned
 level-stack traversal (`lmi.beam_leaf_ranking`) — at depth >= 3 the
-dense (Q, n_leaves) panel never exists at all.
+dense (Q, n_leaves) panel never exists at all; ``node_eval`` picks how
+the beam's pruned levels read their node models ("gather" = per-pair
+param gather, "segmented" = the node-sorted `repro.kernels.beam_eval`
+evaluation, dispatched kernel-vs-oracle by the same ``use_kernel``).
 
 Prebuilt stores carry the ``index_revision`` they were materialized
 from; a query against an index whose revision moved on (`lmi.insert`)
@@ -111,21 +114,24 @@ def filter_topk(store, queries, rows, valid, k: int, *, metric: str = "euclidean
     jax.jit,
     static_argnames=(
         "stop_count", "cap", "metric", "mode", "k", "use_kernel", "interpret",
-        "bucket_topk", "beam_width",
+        "bucket_topk", "beam_width", "node_eval",
     ),
 )
 def _query_impl(
     index, store, queries, radius, *, stop_count, cap, metric, mode, k,
-    use_kernel, interpret, bucket_topk, beam_width=None,
+    use_kernel, interpret, bucket_topk, beam_width=None, node_eval="gather",
 ):
     """One compiled plan for the whole query: search -> filter -> predicate.
 
     ``radius`` is a device scalar (embedding-space units; +BIG disables
     the range limit), so changing it never retraces. ``store`` shares the
     index's CSR layout, so the search's row indices address it directly.
+    ``use_kernel`` covers both fused stages: the beam's segmented node
+    evaluation (when ``node_eval="segmented"``) and the candidate filter.
     """
     cand_ids, rows, valid, _nb, _nc, _runs = lmi_lib._search_core(
-        index, queries, stop_count, cap, bucket_topk, beam_width
+        index, queries, stop_count, cap, bucket_topk, beam_width,
+        node_eval, use_kernel, interpret,
     )
     if mode == "range":
         d = filter_range(store, queries, rows, valid, metric=metric,
@@ -181,6 +187,7 @@ def range_query(
     store: Optional[store_lib.CandidateStore] = None,
     bucket_topk: Optional[int] = None,
     beam_width: Optional[int] = None,
+    node_eval: str = "gather",
 ) -> FilterResult:
     """End-to-end LMI range query (paper Table 2).
 
@@ -188,7 +195,9 @@ def range_query(
     re-scales it into embedding space (paper footnote 3 uses 1.5 for
     Euclidean: Q-range 0.5 -> cutoff 0.75). ``store`` selects the
     candidate-store precision (default: f32 view of the index);
-    ``beam_width`` the beam-pruned leaf ranking (None = exact).
+    ``beam_width`` the beam-pruned leaf ranking (None = exact);
+    ``node_eval`` how its pruned levels read node models ("gather" /
+    "segmented" — see `lmi.beam_leaf_ranking`).
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
@@ -198,7 +207,7 @@ def range_query(
         index, _store_for(index, store), q, jnp.float32(radius * radius_scale),
         stop_count=stop_count, cap=cap, metric=metric, mode="range", k=0,
         use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
-        beam_width=beam_width,
+        beam_width=beam_width, node_eval=node_eval,
     )
     return FilterResult(ids=ids, distances=d, mask=mask)
 
@@ -217,6 +226,7 @@ def knn_query(
     store: Optional[store_lib.CandidateStore] = None,
     bucket_topk: Optional[int] = None,
     beam_width: Optional[int] = None,
+    node_eval: str = "gather",
 ) -> tuple[Array, Array]:
     """kNN over the candidate set (paper Table 3: 30NN with max radius).
 
@@ -224,7 +234,8 @@ def knn_query(
     candidates hold id -1 / distance +inf. ``store`` selects the
     candidate-store precision; ``bucket_topk`` / ``beam_width`` the
     approximate leaf ranking (top-K of the dense panel / beam-pruned
-    traversal; None = exact).
+    traversal; None = exact); ``node_eval`` how the beam's pruned levels
+    read node models ("gather" / "segmented").
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
@@ -235,7 +246,7 @@ def knn_query(
         index, _store_for(index, store), q, radius,
         stop_count=stop_count, cap=cap, metric=metric, mode="knn", k=int(k),
         use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
-        beam_width=beam_width,
+        beam_width=beam_width, node_eval=node_eval,
     )
     return ids, d
 

@@ -29,11 +29,15 @@ search is a loop over levels that accumulates factorized log-probs for a
     bit-identical to the pre-level-stack 2-level implementation;
   * beam search (``beam_width=B``): before each expansion the frontier
     is pruned to the top-``B`` prefixes per query (`jax.lax.top_k`), and
-    only those ``B`` node models are gathered and evaluated. Leaf
-    ranking work drops from ``O(Q * n_leaves)`` to ``O(Q * B * arity)``
-    per level — the difference between scoring 262k leaves per query at
-    depth 3 / arity 64 and scoring ~4k — at the cost of missing leaves
-    whose ancestors fell off the beam (recall impact measured in
+    only those ``B`` node models are evaluated — either by per-pair
+    parameter gather (``node_eval="gather"``) or through the node-sorted
+    segmented evaluation of `repro.kernels.beam_eval`
+    (``node_eval="segmented"``: ~one params load per *touched* node per
+    batch instead of one per pair). Leaf ranking work drops from
+    ``O(Q * n_leaves)`` to ``O(Q * B * arity)`` per level — the
+    difference between scoring 262k leaves per query at depth 3 / arity
+    64 and scoring ~4k — at the cost of missing leaves whose ancestors
+    fell off the beam (recall impact measured in
     benchmarks/depth_beam.py; a beam a few multiples of the visited
     bucket count is within 0.02 recall@30 of exact).
 
@@ -321,22 +325,49 @@ def leaf_log_probs(index, queries: Array) -> Array:
     return acc
 
 
-def beam_leaf_ranking(index, queries: Array, beam_width: int) -> tuple[Array, Array]:
+NODE_EVAL_MODES = ("gather", "segmented")
+
+
+def beam_leaf_ranking(
+    index, queries: Array, beam_width: int, node_eval: str = "gather",
+    use_kernel: bool = False, interpret: Optional[bool] = None,
+    collect_pruned: Optional[list] = None,
+) -> tuple[Array, Array]:
     """Best-first (order (Q, R), logp (Q, R)) of the beam's surviving leaves.
 
     A loop over levels keeps only the top-``beam_width`` prefixes per
     query before each expansion, and evaluates *only those* node models
-    (their params are gathered per query — ``O(Q * B * arity * d)`` work
-    instead of the exact path's ``O(Q * n_leaves * d)``). ``R`` is the
-    final frontier size ``min(beam, N_last) * arities[-1]`` — leaves
-    outside the beam are never scored, which is the approximation.
+    — ``O(Q * B * arity * d)`` work instead of the exact path's
+    ``O(Q * n_leaves * d)``. ``R`` is the final frontier size
+    ``min(beam, N_last) * arities[-1]`` — leaves outside the beam are
+    never scored, which is the approximation.
+
+    ``node_eval`` picks how a pruned level's (query, prefix) pairs read
+    their node models (docs/architecture.md — "beam node evaluation"):
+
+      * ``"gather"`` — per-pair parameter gather (``p[prefix]``) + a
+        vmapped model evaluation: one ``(arity, d)`` HBM block read per
+        pair;
+      * ``"segmented"`` — the `repro.kernels.beam_eval` node-sorted
+        segmented evaluation: pairs are sorted by node id and each run
+        of pairs sharing a node loads its block once — ~one params load
+        per *touched node* per batch. ``use_kernel`` dispatches the
+        Pallas kernel vs its jnp oracle (the `filtering` convention);
+        scores match the gather path to f32 accumulation order, so the
+        surviving leaf sets are identical (tests/test_beam_eval.py).
 
     While the frontier still fits the beam nothing is pruned, and the
     expansion stays the *dense* batched evaluation of `leaf_log_probs`
     (params are read once for the whole batch, not gathered per query) —
     so ``beam_width >= prod(arities[:-1])`` computes the identical
-    log-prob panel as exact enumeration.
+    log-prob panel as exact enumeration, in either ``node_eval`` mode.
+
+    ``collect_pruned`` (host-side diagnostic, do not use inside jit):
+    a list that receives ``(level, prefix)`` for every pruned-level
+    evaluation — the measured-traffic input of benchmarks/depth_beam.py.
     """
+    if node_eval not in NODE_EVAL_MODES:
+        raise ValueError(f"node_eval must be one of {NODE_EVAL_MODES}, got {node_eval!r}")
     q = jnp.asarray(queries, jnp.float32)
     nq = q.shape[0]
     acc = _node_log_proba(index.model_type, index.levels[0], q)  # (Q, a0)
@@ -356,12 +387,23 @@ def beam_leaf_ranking(index, queries: Array, beam_width: int) -> tuple[Array, Ar
         if acc.shape[-1] > beam_width:
             acc, sel = jax.lax.top_k(acc, beam_width)
             prefix = jnp.take_along_axis(prefix, sel, axis=-1)
-        own = jax.tree.map(lambda p: p[prefix], params)  # (Q, F, ...) gathered
+        if collect_pruned is not None:
+            collect_pruned.append((i, np.asarray(prefix)))
+        if node_eval == "segmented":
+            from repro.kernels import beam_eval
 
-        def per_query(params_q, x_q):
-            return _node_log_proba(index.model_type, params_q, x_q[None, :])[..., 0, :]
+            planes = beam_eval.family_planes(index.model_type, params)
+            child = beam_eval.node_scores(
+                q, prefix, planes, index.model_type,
+                use_kernel=use_kernel, interpret=interpret,
+            )  # (Q, F, arity)
+        else:
+            own = jax.tree.map(lambda p: p[prefix], params)  # (Q, F, ...) gathered
 
-        child = jax.vmap(per_query)(own, q)  # (Q, F, arity)
+            def per_query(params_q, x_q):
+                return _node_log_proba(index.model_type, params_q, x_q[None, :])[..., 0, :]
+
+            child = jax.vmap(per_query)(own, q)  # (Q, F, arity)
         acc = (acc[:, :, None] + child).reshape(nq, -1)
         prefix = (prefix[:, :, None] * arity
                   + jnp.arange(arity, dtype=jnp.int32)[None, None, :]).reshape(nq, -1)
@@ -470,15 +512,20 @@ def rank_visited_buckets(
 
 def beam_rank_visited_buckets(
     index, queries: Array, sizes: Array, stop_count: int, beam_width: int,
-    bucket_topk: Optional[int] = None,
+    bucket_topk: Optional[int] = None, node_eval: str = "gather",
+    use_kernel: bool = False, interpret: Optional[bool] = None,
 ):
     """`rank_visited_buckets` for the beam-pruned traversal: rank only the
     beam's surviving leaves and cut at the stop condition. Determinism
     across shards holds exactly as in the dense case — the traversal
     depends only on replicated node params, so every shard computes the
-    identical ranking. ``bucket_topk`` further truncates the (already
-    best-first) beam ranking to its top K entries."""
-    order, _logp = beam_leaf_ranking(index, queries, beam_width)
+    identical ranking (in either ``node_eval`` mode). ``bucket_topk``
+    further truncates the (already best-first) beam ranking to its top K
+    entries."""
+    order, _logp = beam_leaf_ranking(
+        index, queries, beam_width, node_eval=node_eval,
+        use_kernel=use_kernel, interpret=interpret,
+    )
     if bucket_topk is not None and bucket_topk < order.shape[-1]:
         order = order[:, :bucket_topk]
     sz, visited = _visited_cut(order, sizes, stop_count)
@@ -517,12 +564,16 @@ def extract_rows(order: Array, visited: Array, offsets: Array, cap: int):
 def _search_core(
     index: LMI, queries: Array, stop_count: int, cap: int,
     bucket_topk: Optional[int] = None, beam_width: Optional[int] = None,
+    node_eval: str = "gather", use_kernel: bool = False,
+    interpret: Optional[bool] = None,
 ):
     """Traceable search body — shared by every query entry point (the
     single-device `search`/`search_rows`, the fused `filtering` queries;
     the sharded variant composes the same ranking + `extract_rows`
     pieces over shard-local offsets). ``beam_width=None`` enumerates
     every leaf exactly; an int prunes the level frontier to that beam.
+    ``node_eval``/``use_kernel`` pick the pruned-level node evaluation
+    (`beam_leaf_ranking`; irrelevant for the exact path).
     """
     if beam_width is None:
         logp = leaf_log_probs(index, queries)  # (Q, L)
@@ -531,7 +582,8 @@ def _search_core(
         )
     else:
         order, visited, sz = beam_rank_visited_buckets(
-            index, queries, index.bucket_sizes(), stop_count, beam_width, bucket_topk
+            index, queries, index.bucket_sizes(), stop_count, beam_width, bucket_topk,
+            node_eval=node_eval, use_kernel=use_kernel, interpret=interpret,
         )
     n_buckets = jnp.sum(visited, axis=-1).astype(jnp.int32)
     rows, valid, n_cands = extract_rows(order, visited, index.bucket_offsets, cap)
@@ -543,7 +595,7 @@ def _search_core(
     return cand_ids, rows, valid, n_buckets, n_cands, runs
 
 
-_search_impl = functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))(_search_core)
+_search_impl = functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7, 8))(_search_core)
 
 
 def search(
@@ -553,6 +605,9 @@ def search(
     candidate_cap: Optional[int] = None,
     bucket_topk: Optional[int] = None,
     beam_width: Optional[int] = None,
+    node_eval: str = "gather",
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
 ) -> SearchResult:
     """Batched LMI search.
 
@@ -563,12 +618,15 @@ def search(
     Host-sync-free after warmup: the cap comes from build-time metadata.
     ``bucket_topk`` trades the full (Q, L) leaf argsort for a top-K
     ranking (see `rank_visited_buckets`); ``beam_width`` prunes the
-    level traversal itself to a top-B frontier (`beam_leaf_ranking`).
+    level traversal itself to a top-B frontier (`beam_leaf_ranking`),
+    with ``node_eval``/``use_kernel`` picking how pruned levels read
+    their node models (gather vs the segmented beam_eval kernel).
     None for both = exact.
     """
     stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
     cand_ids, _rows, valid, n_buckets, n_cands, runs = _search_impl(
-        index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk, beam_width
+        index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk,
+        beam_width, node_eval, use_kernel, interpret,
     )
     return SearchResult(cand_ids, valid, n_buckets, n_cands, runs)
 
@@ -576,13 +634,15 @@ def search(
 def search_rows(
     index: LMI, queries: Array, stop_condition: float = 0.01,
     candidate_cap: Optional[int] = None, bucket_topk: Optional[int] = None,
-    beam_width: Optional[int] = None,
+    beam_width: Optional[int] = None, node_eval: str = "gather",
+    use_kernel: bool = False, interpret: Optional[bool] = None,
 ):
     """Like `search` but returns CSR row indices (for fused filtering that
     gathers from the candidate store without the extra id indirection)."""
     stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
     cand_ids, rows, valid, n_buckets, n_cands, runs = _search_impl(
-        index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk, beam_width
+        index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk,
+        beam_width, node_eval, use_kernel, interpret,
     )
     return cand_ids, rows, valid
 

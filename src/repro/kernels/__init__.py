@@ -3,6 +3,9 @@
   pairwise_l2     — tiled all-pairs squared-L2 (filtering / retrieval)
   lmi_filter      — fused LMI candidate filtering: HBM row gather +
                     distance + streaming top-k (the query hot path)
+  beam_eval       — segmented beam node evaluation: node-sorted
+                    (query, prefix) pairs, one params load per touched
+                    node (the beam-ranking hot path at depth >= 3)
   kmeans_assign   — fused distance+argmin (LMI build Lloyd iterations)
   flash_attention — blockwise online-softmax attention (LM prefill)
   embedding_bag   — gather + segment-sum (recsys lookup)  [pure-JAX ref +

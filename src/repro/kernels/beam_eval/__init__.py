@@ -1,0 +1,4 @@
+from repro.kernels.beam_eval import ops, ref
+from repro.kernels.beam_eval.ops import Planes, family_planes, node_scores, segment_stats
+
+__all__ = ["ops", "ref", "Planes", "family_planes", "node_scores", "segment_stats"]

@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: segmented beam node evaluation.
+
+The hot loop of `lmi.beam_leaf_ranking` at a pruned level scores every
+live (query, beam-prefix) pair under that prefix's node model. The
+gather path reads one ``(arity, d)`` parameter block from HBM *per
+pair*; this kernel receives the pairs sorted by node id (ops.py), so
+pairs sharing a node form contiguous runs, and per grid tile it
+
+  1. DMAs each *run's* parameter block(s) from the HBM-resident plane
+     matrices into a per-run VMEM scratch slot — one block read per run
+     start (``load`` flag), not per pair; runs that span tiles reload
+     once per tile (grid steps share no state, so query blocks can stay
+     parallel),
+  2. contracts every pair's query row (and squared query row, for gmm's
+     second plane) against its run's block — the dot products of the
+     canonical score formulas,
+  3. runs the shared epilogue (`ref.combine_scores` + `ref.log_softmax`
+     — literally the oracle's expressions) over the whole tile and
+     writes the (tp, arity) log-prob tile.
+
+HBM traffic per pruned level drops from ``Q * B`` parameter blocks to
+~``touched nodes + tiles`` blocks plus the cheap per-pair vector-plane
+and query streams — the "one params load per touched node" bound the
+depth_beam HBM model charges beam ranking for. Validated in interpret
+mode like every kernel in this package; the same VMEM-scalar-read
+caveat as `lmi_filter.kernel` applies on very old Mosaic versions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.beam_eval import ref as ref_lib
+from repro.kernels.common import tpu_compiler_params
+
+
+def _beam_eval_kernel(*refs, model_type, n_mats, n_vecs, tp):
+    (node_ref, load_ref, rix_ref, x_ref) = refs[:4]
+    vec_refs = refs[4 : 4 + n_vecs]
+    mat_refs = refs[4 + n_vecs : 4 + n_vecs + n_mats]
+    out_ref = refs[4 + n_vecs + n_mats]
+    scr = refs[5 + n_vecs + n_mats :]
+    mat_scr = scr[:n_mats]  # (tp, arity, d) block slots, one per run
+    dot_scr = scr[n_mats : 2 * n_mats]  # (tp, arity) contraction results
+    sem = scr[-1]
+
+    def run_copies(p):
+        """The parameter-block DMAs a run-starting pair issues: HBM plane
+        row ``node[p]`` -> scratch slot ``rix[p]`` (its run's slot)."""
+        return [
+            pltpu.make_async_copy(
+                mat_refs[m].at[node_ref[0, p]], mat_scr[m].at[rix_ref[0, p]], sem
+            )
+            for m in range(n_mats)
+        ]
+
+    def start(p, _):
+        @pl.when(load_ref[0, p] != 0)
+        def _load():
+            for c in run_copies(p):
+                c.start()
+
+        return 0
+
+    def wait(p, _):
+        @pl.when(load_ref[0, p] != 0)
+        def _load():
+            for c in run_copies(p):
+                c.wait()
+
+        return 0
+
+    # all run DMAs of the tile in flight before the first wait
+    jax.lax.fori_loop(0, tp, start, 0)
+    jax.lax.fori_loop(0, tp, wait, 0)
+
+    def contract(p, _):
+        r = rix_ref[0, p]
+        x = x_ref[p, :]  # (d,)
+        for m in range(n_mats):
+            xm = x if m == 0 else x * x  # mats[1] (gmm) contracts q^2
+            blk = mat_scr[m][r]  # (arity, d) — the pair's run block
+            dot_scr[m][pl.ds(p, 1), :] = jnp.sum(blk * xm[None, :], axis=-1)[None, :]
+        return 0
+
+    jax.lax.fori_loop(0, tp, contract, 0)
+
+    # ---- shared epilogue: identical expressions to the jnp oracle
+    x_all = x_ref[...]
+    qn = jnp.sum(x_all * x_all, axis=-1, keepdims=True)  # (tp, 1)
+    dots = tuple(dot_scr[m][...] for m in range(n_mats))
+    vecs = tuple(v[...] for v in vec_refs)
+    out_ref[...] = ref_lib.log_softmax(
+        ref_lib.combine_scores(model_type, dots, vecs, qn)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("model_type", "tp", "interpret"))
+def beam_eval_pallas(
+    node2d, load2d, rix2d, x, mats, vecs, *, model_type: str, tp: int, interpret: bool
+):
+    """node2d/load2d/rix2d (P // tp, tp) int32 (node-sorted pair
+    metadata, see ops._pair_metadata); x (P, d) f32 per-pair query rows;
+    mats: HBM-resident (N, arity, d) plane matrices; vecs: per-pair
+    (P, arity) vector-plane tiles -> (P, arity) f32 child log-probs in
+    sorted-pair order. P % tp == 0 (ops.py pads)."""
+    p, d = x.shape
+    arity = mats[0].shape[-2]
+    n_mats, n_vecs = len(mats), len(vecs)
+    grid = (p // tp,)
+    meta_spec = pl.BlockSpec((1, tp), lambda i: (i, 0), memory_space=pltpu.VMEM)
+    in_specs = [
+        meta_spec,  # node
+        meta_spec,  # load
+        meta_spec,  # rix
+        pl.BlockSpec((tp, d), lambda i: (i, 0), memory_space=pltpu.VMEM),
+    ]
+    in_specs += [
+        pl.BlockSpec((tp, arity), lambda i: (i, 0), memory_space=pltpu.VMEM)
+        for _ in range(n_vecs)
+    ]
+    in_specs += [pl.BlockSpec(memory_space=pltpu.ANY) for _ in range(n_mats)]
+    return pl.pallas_call(
+        functools.partial(
+            _beam_eval_kernel, model_type=model_type, n_mats=n_mats,
+            n_vecs=n_vecs, tp=tp,
+        ),
+        out_shape=jax.ShapeDtypeStruct((p, arity), jnp.float32),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tp, arity), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        scratch_shapes=(
+            [pltpu.VMEM((tp, arity, d), jnp.float32) for _ in range(n_mats)]
+            + [pltpu.VMEM((tp, arity), jnp.float32) for _ in range(n_mats)]
+            + [pltpu.SemaphoreType.DMA]
+        ),
+        compiler_params=tpu_compiler_params(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(node2d, load2d, rix2d, x, *vecs, *mats)

@@ -1,0 +1,227 @@
+"""Jitted public wrappers for the beam_eval kernel (canonicalize + sort +
+pad + dispatch) and the measured-traffic accounting.
+
+Why this kernel exists: `lmi.beam_leaf_ranking` evaluates, per pruned
+level, one node model for every live (query, beam-prefix) pair. The
+gather path reads that pair's whole ``(arity, d)`` parameter block from
+HBM — ``Q * B`` scattered block reads per level, even though the level
+only has ``N`` distinct node models and a serving batch touches most of
+them many times over. The segmented evaluation sorts the pairs by node
+id so pairs sharing a node become one contiguous *run*, and loads each
+run's parameter block ONCE (plus a reload at tile boundaries, since grid
+steps share no state): HBM block reads drop from ``Q * B`` to
+~``touched nodes + P / tile``, which is the bound the depth_beam HBM
+model already charges beam search for
+(``min(Q * B, N)`` block reads — see `benchmarks.depth_beam.rank_cost_model`).
+
+Canonical planes: `family_planes` folds each model family into at most
+two ``(N, arity, d)`` contraction matrices plus ``(N, arity)`` vector
+planes (formulas documented in `ref`). The matrices are what the kernel
+DMAs run-wise; the vector planes are cheap (``arity`` floats per pair vs
+``arity * d`` for a matrix block) and ride as per-pair tile inputs
+gathered jnp-side, exactly like the int8 scales in `lmi_filter`.
+
+Everything stays on device (sort, gather, inverse permutation are jnp),
+so the segmented query path keeps the zero-host-sync property of the
+gather path (regression-tested with `transfer_guard`).
+
+`segment_stats` is the host-side accounting used by
+benchmarks/depth_beam.py: it replays the same sort + run-start logic in
+numpy on a *measured* traversal's prefix array and reports the bytes the
+two access patterns move.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gmm as gmm_lib
+from repro.kernels.common import round_up, should_interpret
+from repro.kernels.beam_eval import ref
+from repro.kernels.beam_eval.kernel import beam_eval_pallas
+
+Array = jax.Array
+
+_VMEM_BUDGET = 4 * 1024 * 1024  # parameter-block scratch budget, bytes
+
+
+class Planes(NamedTuple):
+    """Canonical per-level node-model parameters (see `ref` for formulas).
+
+    ``mats[m]`` — (N, arity, d) f32; m=0 is contracted with the query,
+    m=1 (gmm only) with the squared query. ``vecs`` — (N, arity) f32.
+    """
+
+    mats: tuple
+    vecs: tuple
+
+
+def family_planes(model_type: str, params) -> Planes:
+    """Canonicalize one stacked level's params (leading N node dim) into
+    contraction planes. Pure jnp, runs under jit (kmeans is zero-copy on
+    the matrix side; derived planes are O(N * arity * d) per batch)."""
+    if model_type == "kmeans":
+        c = jnp.asarray(params["centroids"], jnp.float32)
+        return Planes(mats=(c,), vecs=(jnp.sum(c * c, axis=-1),))
+    if model_type == "gmm":
+        means = jnp.asarray(params["means"], jnp.float32)
+        variances = jnp.asarray(params["variances"], jnp.float32)
+        log_weights = jnp.asarray(params["log_weights"], jnp.float32)
+        inv = 1.0 / variances
+        d = means.shape[-1]
+        logdet = jnp.sum(jnp.log(variances), axis=-1)
+        return Planes(
+            mats=(means * inv, inv),
+            vecs=(
+                log_weights,
+                jnp.sum(means * means * inv, axis=-1),
+                d * gmm_lib._LOG2PI + logdet,
+            ),
+        )
+    if model_type == "kmeans+logreg":
+        w = jnp.asarray(params["w"], jnp.float32)  # (N, d, arity)
+        b = jnp.asarray(params["b"], jnp.float32)
+        return Planes(mats=(jnp.swapaxes(w, -1, -2),), vecs=(b,))
+    raise ValueError(f"unknown model_type {model_type!r}")
+
+
+_FAMILY_SHAPES = {
+    # (n_mats, n_vecs, raw param floats per node block — what gather
+    # mode reads per pair: every leaf of the level params pytree)
+    "kmeans": (1, 1, lambda a, d: a * d),
+    "gmm": (2, 3, lambda a, d: 2 * a * d + a),
+    "kmeans+logreg": (1, 1, lambda a, d: a * d + a),
+}
+
+
+def _pick_tp(n_mats: int, arity: int, d: int) -> int:
+    """Largest pair-tile whose (tp, arity, d) parameter scratch (one
+    block slot per pair, heterogeneous worst case) fits the budget."""
+    for tp in (128, 64, 32, 16):
+        if n_mats * tp * arity * d * 4 <= _VMEM_BUDGET:
+            return tp
+    return 8
+
+
+def _pair_metadata(node_sorted: Array, tp: int):
+    """(load (G, tp), rix (G, tp)) for node-sorted pairs.
+
+    ``load[g, p]`` is 1 iff pair p of tile g starts a run (first pair of
+    the tile, or a node id different from its predecessor): the kernel
+    issues that pair's parameter DMA. ``rix`` is the tile-local run
+    index — the scratch slot every pair of the run reads its block from.
+    """
+    p = node_sorted.shape[0]
+    pos = jnp.arange(p, dtype=jnp.int32)
+    prev = jnp.concatenate([node_sorted[:1] - 1, node_sorted[:-1]])
+    load = ((pos % tp == 0) | (node_sorted != prev)).astype(jnp.int32)
+    load = load.reshape(p // tp, tp)
+    rix = jnp.cumsum(load, axis=1, dtype=jnp.int32) - 1
+    return load, rix
+
+
+@functools.partial(jax.jit, static_argnames=("model_type", "use_kernel", "interpret"))
+def node_scores(
+    queries: Array,
+    prefix: Array,
+    planes: Planes,
+    model_type: str,
+    use_kernel: bool = False,
+    interpret: bool | None = None,
+) -> Array:
+    """(Q, F, arity) child log-probs of each query's beam frontier.
+
+    ``use_kernel=False`` runs the per-pair-gather oracle (`ref`);
+    ``use_kernel=True`` the node-sorted segmented Pallas kernel. Both
+    produce the `lmi.beam_leaf_ranking` gather-path numbers (same score
+    formulas, association order and log-softmax — see `ref`).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    if not use_kernel:
+        return ref.node_scores_ref(queries, prefix, planes, model_type)
+
+    q = jnp.asarray(queries, jnp.float32)
+    nq, d = q.shape
+    f = prefix.shape[1]
+    arity = planes.mats[0].shape[-2]
+    tp = _pick_tp(len(planes.mats), arity, d)
+
+    # ---- sort pairs by node id (stable: equal nodes keep query order)
+    node = prefix.reshape(-1).astype(jnp.int32)  # (P0,)
+    qidx = jnp.repeat(jnp.arange(nq, dtype=jnp.int32), f)
+    order = jnp.argsort(node, stable=True)
+    node_s, qidx_s = node[order], qidx[order]
+
+    # ---- pad to the tile size (edge mode: padding extends the last run,
+    # so it costs zero extra parameter loads beyond its tile boundary)
+    p0, p = node.shape[0], round_up(node.shape[0], tp)
+    if p > p0:
+        node_s = jnp.pad(node_s, (0, p - p0), mode="edge")
+        qidx_s = jnp.pad(qidx_s, (0, p - p0), mode="edge")
+
+    x = q[qidx_s]  # (P, d) — d floats/pair vs arity*d for a param block
+    vecs = tuple(v[node_s] for v in planes.vecs)  # (P, arity) tile inputs
+    load, rix = _pair_metadata(node_s, tp)
+    out = beam_eval_pallas(
+        node_s.reshape(p // tp, tp), load, rix, x, planes.mats, vecs,
+        model_type=model_type, tp=tp, interpret=interpret,
+    )  # (P, arity) in sorted-pair order
+    inv = jnp.argsort(order)  # inv[j] = sorted position of original pair j
+    return out[inv].reshape(nq, f, arity)
+
+
+# ------------------------------------------------------ traffic accounting
+
+
+def segment_stats(prefix, model_type: str, arity: int, dim: int, n_nodes: int) -> dict:
+    """Measured node-params HBM bytes of one pruned-level evaluation.
+
+    ``prefix`` is the actual (Q, F) beam frontier of a traversal
+    (`lmi.beam_leaf_ranking(..., collect_pruned=...)`); this replays the
+    kernel's sort + run-start logic in numpy and counts what each access
+    pattern reads:
+
+      * ``gather_bytes``     — the gather path: every pair reads its
+        node's raw parameter block (all pytree leaves of the level);
+      * ``segmented_mat_bytes`` — one canonical-matrix block per run
+        start (the kernel's DMAs, tile boundaries included);
+      * ``vec_bytes``        — per-pair (arity,) vector-plane gathers;
+      * ``planes_bytes``     — the once-per-batch read of the raw params
+        to build the canonical planes (kmeans matrices alias the
+        centroids, but `family_planes` still reads them for the norms).
+
+    ``segmented_bytes`` totals the segmented side so the reduction ratio
+    is an honest all-in comparison, not just the matrix term.
+    """
+    n_mats, n_vecs, raw_floats = _FAMILY_SHAPES[model_type]
+    tp = _pick_tp(n_mats, arity, dim)
+    node = np.sort(np.asarray(prefix, np.int64).reshape(-1))
+    p0 = node.size
+    p = round_up(p0, tp)
+    node = np.concatenate([node, np.full(p - p0, node[-1] if p0 else 0, np.int64)])
+    pos = np.arange(p)
+    prev = np.concatenate([node[:1] - 1, node[:-1]])
+    n_loads = int(((pos % tp == 0) | (node != prev)).sum())
+
+    block = raw_floats(arity, dim) * 4
+    mat_block = n_mats * arity * dim * 4
+    stats = {
+        "n_pairs": int(p0),
+        "n_nodes": int(n_nodes),
+        "n_touched_nodes": int(np.unique(node[:p0]).size),
+        "n_param_loads": n_loads,
+        "tile_pairs": tp,
+        "gather_bytes": p0 * block,
+        "segmented_mat_bytes": n_loads * mat_block,
+        "vec_bytes": p0 * n_vecs * arity * 4,
+        "planes_bytes": n_nodes * block,
+    }
+    stats["segmented_bytes"] = (
+        stats["segmented_mat_bytes"] + stats["vec_bytes"] + stats["planes_bytes"]
+    )
+    return stats

@@ -1,0 +1,90 @@
+"""Pure-jnp oracle for the beam_eval kernel, plus the *shared* score math.
+
+The semantic contract: given a batch of queries and, per query, a beam
+frontier of node ids into one stacked level of node models, return the
+``(Q, F, arity)`` child log-probabilities — exactly what
+`lmi.beam_leaf_ranking`'s gather path computes with
+``jax.tree.map(lambda p: p[prefix], params)`` + a vmapped
+`_node_log_proba`.
+
+The oracle materializes the per-pair parameter gather on purpose (it is
+the numerically straightforward reference, like `lmi_filter.ref`). The
+kernel reorganizes the *access pattern* (node-sorted segments, one
+HBM param load per run of pairs sharing a node) but must produce the
+same numbers; to keep that comparison tight, the per-family score
+formula (`combine_scores`) and the log-softmax epilogue live here and
+are imported by the kernel body — both implementations literally run
+the same epilogue expressions, only the dot products come from a
+different gather.
+
+Canonical planes (see `ops.family_planes`): every family reduces to at
+most two (N, arity, d) matrices — ``mats[0]`` contracted with the query
+``q``, ``mats[1]`` with ``q*q`` — plus (N, arity) vector planes, combined
+per family with the *same association order* as the `_node_log_proba`
+implementations in kmeans/gmm/logreg (so the segmented scores match the
+gather path to the ulp on identical inputs):
+
+  kmeans   mats=(centroids,)          vecs=(|c|^2,)
+           score = -max((|q|^2 + |c|^2) - 2 q.c, 0)
+  gmm      mats=(mu/var, 1/var)       vecs=(log_w, sum mu^2/var,
+                                            d log 2pi + sum log var)
+           score = log_w - 0.5*(vecs2 + ((q^2 . inv) - 2 (q . mu inv)
+                                         + vecs1))
+  logreg   mats=(w^T,)                vecs=(b,)
+           score = q.w + b
+
+followed by a row-wise log-softmax over the arity axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+FAMILIES = ("kmeans", "gmm", "kmeans+logreg")
+
+
+def log_softmax(x: Array) -> Array:
+    """Row-wise log-softmax over the last axis, spelled exactly like
+    jax.nn.log_softmax (max-shift, then log-sum-exp) so the kernel and
+    the `_node_log_proba` gather path run identical arithmetic."""
+    m = jax.lax.stop_gradient(jnp.max(x, axis=-1, keepdims=True))
+    shifted = x - m
+    return shifted - jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+
+
+def combine_scores(model_type: str, dots, vecs, qn: Array) -> Array:
+    """Pre-softmax child scores from the plane dot products.
+
+    ``dots[m]`` is the (…, arity) contraction of query (m=0) or squared
+    query (m=1) with ``mats[m]``; ``vecs`` are the gathered vector
+    planes; ``qn`` is |q|^2, broadcastable to (…, 1). Association order
+    mirrors kmeans/gmm/logreg `predict_log_proba` term for term.
+    """
+    if model_type == "kmeans":
+        d2 = jnp.maximum((qn + vecs[0]) - 2.0 * dots[0], 0.0)
+        return -d2
+    if model_type == "gmm":
+        quad = dots[1] - 2.0 * dots[0] + vecs[1]
+        return vecs[0] - 0.5 * (vecs[2] + quad)
+    if model_type == "kmeans+logreg":
+        return dots[0] + vecs[0]
+    raise ValueError(f"unknown model_type {model_type!r}")
+
+
+def node_scores_ref(queries: Array, prefix: Array, planes, model_type: str) -> Array:
+    """(Q, F, arity) child log-probs by per-pair gather (the oracle).
+
+    queries (Q, d) f32; prefix (Q, F) int32 node ids into the planes'
+    leading N axis. Materializes the (Q, F, arity, d) parameter gather.
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    xs = (q, q * q)
+    dots = tuple(
+        jnp.einsum("qd,qfad->qfa", xs[m], planes.mats[m][prefix])
+        for m in range(len(planes.mats))
+    )
+    vecs = tuple(v[prefix] for v in planes.vecs)
+    qn = jnp.sum(q * q, axis=-1)[:, None, None]
+    return log_softmax(combine_scores(model_type, dots, vecs, qn))

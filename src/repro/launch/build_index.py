@@ -8,24 +8,9 @@
 LMI); generates (or loads) the protein dataset, embeds it, builds the
 LMI, and saves everything with repro.checkpoint (atomic npz).
 
-meta.json schema (format 2)
----------------------------
-  * ``format``           — 2 for level-stack checkpoints (``levels``
-    pytree keys); absent/1 for legacy 2-level ones (``l1_params`` /
-    ``l2_params`` keys). `load_index` restores both.
-  * ``arities``          — list of per-level arities (any depth).
-  * ``depth``            — ``len(arities)`` (convenience mirror).
-  * ``model_type``       — kmeans / gmm / kmeans+logreg.
-  * ``n_sections`` / ``cutoff`` — embedding config.
-  * ``n_objects`` / ``n_leaves`` — database / leaf-bucket counts.
-  * ``max_bucket_size``  — build-time bucket stat; restoring it keeps
-    the serving query plan host-sync-free without a load-time pass.
-  * ``store_dtype``      — serving-time candidate-store precision
-    (float32 / bfloat16 / int8); the store is re-materialized from the
-    f32 CSR arrays at load.
-  * ``beam_width``       — default serving beam (null = exact
-    enumeration); serve.py's ``--beam`` overrides it.
-  * ``seed`` / ``build_seconds`` / ``embed_seconds`` — provenance.
+The on-disk layout — the meta.json format-2 schema, the checkpoint npz
+key structure, and the legacy (format-1) 2-level compatibility rules
+that `load_index` honors — is specified in docs/index_format.md.
 """
 from __future__ import annotations
 
@@ -68,6 +53,10 @@ def main():
     ap.add_argument("--beam", type=int, default=None,
                     help="default serving beam width recorded in meta.json "
                          "(None = exact leaf enumeration)")
+    ap.add_argument("--node-eval", choices=("gather", "segmented"), default="gather",
+                    help="default beam node-evaluation mode recorded in meta.json "
+                         "(how pruned beam levels read node models; see "
+                         "docs/architecture.md)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", type=str, required=True)
     args = ap.parse_args()
@@ -107,6 +96,7 @@ def main():
         args.out, index,
         n_sections=args.sections, cutoff=args.cutoff, seed=args.seed,
         store_dtype=args.store_dtype, beam_width=args.beam,
+        node_eval=args.node_eval,
         build_seconds=t_build, embed_seconds=t_embed,
     )
     print(f"saved to {args.out}")
@@ -114,8 +104,9 @@ def main():
 
 def save_index(directory: str, index: lmi.LMI, *, n_sections: int, cutoff: float,
                seed: int = 0, store_dtype: str = "float32",
-               beam_width=None, **extra_meta) -> None:
-    """Persist a built LMI (atomic npz + meta.json, format 2)."""
+               beam_width=None, node_eval: str = "gather", **extra_meta) -> None:
+    """Persist a built LMI (atomic npz + meta.json, format 2 — the schema
+    is specified in docs/index_format.md)."""
     os.makedirs(directory, exist_ok=True)
     state = {
         "levels": index.levels,
@@ -133,7 +124,8 @@ def save_index(directory: str, index: lmi.LMI, *, n_sections: int, cutoff: float
                 n_sections=n_sections, cutoff=cutoff,
                 n_objects=index.n_objects, n_leaves=index.n_leaves,
                 max_bucket_size=index.max_bucket_size,
-                store_dtype=store_dtype, beam_width=beam_width, seed=seed,
+                store_dtype=store_dtype, beam_width=beam_width,
+                node_eval=node_eval, seed=seed,
                 **extra_meta,
             ),
             f, indent=1,

@@ -530,6 +530,7 @@ def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
     # shape params may override the config's level stack (depth-3 cells)
     arities = tuple(shape.params.get("arities", cfg.arities))
     beam_width = shape.params.get("beam_width", cfg.beam_width)
+    node_eval = shape.params.get("node_eval", getattr(cfg, "node_eval", "gather"))
     a0 = arities[0]
     n_leaves = math.prod(arities)
 
@@ -608,7 +609,7 @@ def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
             s, q, k=cfg.knn_k, mesh=mesh, stop_condition=cfg.stop_condition,
             query_axes=shard_rules.data_axes(mesh), local_cap=local_cap,
             metric=cfg.filter_metric, n_objects=n_obj, bucket_topk=k_buckets,
-            beam_width=beam_width,
+            beam_width=beam_width, node_eval=node_eval,
         )
 
     fn = jax.jit(search)

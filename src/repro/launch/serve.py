@@ -12,10 +12,11 @@ the ragged final batch never triggers a recompile, and a warmup batch
 absorbs compile time before the timed loop — the reported median/p99
 are steady-state serving latency. `--sharded N` runs the bucket-sharded
 search path on an N-way host mesh (requires XLA_FLAGS device-count
-override); both paths honor `--metric`, `--radius`, `--store-dtype` and
-`--beam` — the candidate store is materialized at the requested
-precision at startup (`repro.core.store`), and the beam width defaults
-to the build's meta.json ``beam_width`` (None = exact enumeration).
+override); both paths honor `--metric`, `--radius`, `--store-dtype`,
+`--beam` and `--node-eval` — the candidate store is materialized at the
+requested precision at startup (`repro.core.store`), and the beam width
+/ node-evaluation mode default to the build's meta.json ``beam_width``
+/ ``node_eval`` (exact enumeration / per-pair gather).
 """
 from __future__ import annotations
 
@@ -48,8 +49,13 @@ def main():
     ap.add_argument("--beam", type=int, default=None,
                     help="beam width for the leaf ranking (default: the build's "
                          "meta.json beam_width; 0 forces exact enumeration)")
+    ap.add_argument("--node-eval", choices=lmi.NODE_EVAL_MODES, default=None,
+                    help="how the beam's pruned levels read node models: 'gather' "
+                         "(per-pair param gather) or 'segmented' (node-sorted "
+                         "beam_eval kernel; default: the build's meta.json node_eval)")
     ap.add_argument("--use-kernel", action="store_true",
-                    help="filter through the fused Pallas kernel")
+                    help="run the fused Pallas kernels (candidate filter + "
+                         "segmented beam node evaluation)")
     ap.add_argument("--sharded", type=int, default=0)
     ap.add_argument("--seed", type=int, default=1)
     args = ap.parse_args()
@@ -61,10 +67,11 @@ def main():
     beam = meta.get("beam_width") if args.beam is None else args.beam
     if beam is not None and beam <= 0:
         beam = None  # --beam 0 == exact
+    node_eval = args.node_eval or meta.get("node_eval", "gather")
     print(f"index: {index.n_objects} objects, {index.n_leaves} buckets "
           f"(depth {index.depth}, arities {'x'.join(map(str, index.arities))}), "
           f"dim {index.dim}, store dtype {store_dtype}, "
-          f"beam {'exact' if beam is None else beam}")
+          f"beam {'exact' if beam is None else beam}, node eval {node_eval}")
 
     # queries: perturbed database objects (realistic near-duplicate load)
     rng = np.random.default_rng(args.seed)
@@ -86,7 +93,7 @@ def main():
         fn = jax.jit(lambda q: sharded_knn(
             sharded, q, k=args.k, mesh=mesh, stop_condition=args.stop,
             metric=args.metric, max_radius=args.radius, beam_width=beam,
-            use_kernel=args.use_kernel,
+            node_eval=node_eval, use_kernel=args.use_kernel,
         ))
     else:
         store = store_lib.from_lmi(index, store_dtype)
@@ -94,7 +101,7 @@ def main():
         fn = lambda q: filtering.knn_query(
             index, q, k=args.k, stop_condition=args.stop, metric=args.metric,
             max_radius=args.radius, store=store, beam_width=beam,
-            use_kernel=args.use_kernel,
+            node_eval=node_eval, use_kernel=args.use_kernel,
         )
 
     # Every batch runs at the fixed (--batch, d) shape: the ragged tail is

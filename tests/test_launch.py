@@ -23,8 +23,9 @@ def test_registry_shapes_cover_assignment():
     """40 assigned cells: 5 LM x 4 + 1 GNN x 4 + 4 recsys x 4."""
     total = sum(len(configs.get(a).shapes) for a in configs.ASSIGNED_ARCHS)
     assert total == 40
-    # + the paper's own arch (2-level build/search + the depth-3 beam cell)
-    assert len(configs.get("lmi-protein").shapes) == 3
+    # + the paper's own arch (2-level build/search + the depth-3 beam
+    # cell and its segmented node-eval variant)
+    assert len(configs.get("lmi-protein").shapes) == 4
 
 
 def test_all_full_configs_construct():
