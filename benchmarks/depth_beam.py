@@ -27,7 +27,22 @@ sweep quantifies the trade on real indexes:
     the real prefixes, at the SERVING_QUERIES batch) and reported next
     to the cost model's dedup bound. Acceptance (ISSUE 4): >= 5x fewer
     node-params bytes at the (64, 64, 64) / beam-128 operating point,
-    and the segmented leaf ranking answers exactly match gather mode.
+    and the segmented leaf ranking answers exactly match gather mode;
+  * **calibrated beams** (ISSUE 5): `repro.core.calibrate` fits
+    per-level temperatures + a width schedule on a calibration slice of
+    the build set; this sweep measures the fitted config's recall@30 vs
+    exact on the benchmark queries and compares its modeled node-eval
+    cost (`calibrate.node_eval_cost`, child-score cells per query)
+    against the uncalibrated scalar operating point above
+    (ACCEPT_BEAM = 128, the beam the repo served at before
+    calibration). Acceptance (ISSUE 5): calibrated recall@30 >= 0.99
+    with >= 2x lower cost than the scalar beam-128 config. A scan of
+    scalar beams is reported next to it (`min_scalar_at_target`) so the
+    schedule-vs-scalar trade is honest at every scale: at the CI scale
+    the last-level width is the binding constraint and the win is the
+    wide-root schedule; at larger scales small scalar beams reach the
+    target too and the calibrated schedule is simply the cheapest
+    fitted point.
 
 HBM model terms
 ---------------
@@ -72,6 +87,16 @@ MIN_REDUCTION = 10.0
 MAX_RECALL_DROP = 0.02
 # ISSUE 4 acceptance: measured node-params bytes, segmented vs gather
 NODE_EVAL_MIN_REDUCTION = 5.0
+# ISSUE 5 acceptance: calibrated schedule vs the uncalibrated scalar
+# ACCEPT_BEAM config — recall@30 >= CAL_TARGET_RECALL at >= 2x lower
+# modeled node-eval cost. The fit targets a slightly higher recall on
+# its own slice (CAL_FIT_RECALL) so the benchmark-query measurement has
+# margin over the asserted bound.
+CAL_TARGET_RECALL = 0.99
+CAL_FIT_RECALL = 0.992
+CAL_MIN_COST_REDUCTION = 2.0
+CAL_QUERIES = 128
+SCALAR_SCAN = (8, 16, 24, 32, 48, 64, 80, 96, 128)
 
 SWEEP_ARITIES = ((32, 64), ACCEPT_ARITIES)
 
@@ -185,6 +210,7 @@ def main() -> None:
     }
 
     print("arities,beam,us_per_query,rank_flops/q,rank_hbm_bytes/q(serving),recall_vs_exact")
+    exact_ids_by_tag: dict = {}
     for arities in SWEEP_ARITIES:
         tag = "x".join(map(str, arities))
         index, t_build = common.built_index_arities(arities)
@@ -228,6 +254,7 @@ def main() -> None:
                   f"{point['rank_flops_per_query']:.3e},"
                   f"{point['rank_hbm_bytes_per_query_serving']:.3e},"
                   f"{point['recall_at_k_vs_exact']:.4f}")
+        exact_ids_by_tag[tag] = ids_exact
         results["sweeps"][tag] = sweep
 
     # ---------------------------------------------- ISSUE 3 acceptance bound
@@ -276,6 +303,63 @@ def main() -> None:
         f"measured node-params reduction {ne_red:.1f} < {NODE_EVAL_MIN_REDUCTION}"
     )
     assert seg_match, "segmented beam answers diverge from gather mode"
+
+    # ------------------------ ISSUE 5 acceptance: calibrated beam search
+    from repro.core import calibrate as cal_lib
+
+    index3, _ = common.built_index_arities(ACCEPT_ARITIES)
+    accept_tag = "x".join(map(str, ACCEPT_ARITIES))
+    ids_exact3 = exact_ids_by_tag[accept_tag]
+    cal = cal_lib.calibrate(
+        index3, n_queries=CAL_QUERIES, target_recall=CAL_FIT_RECALL,
+        k=K, stop_condition=STOP)
+    ids_cal = np.asarray(filtering.knn_query(
+        index3, q, K, STOP, beam_width=cal.beam_widths,
+        temperatures=cal.temperatures)[0])
+    recall_cal = common.recall_at_k(ids_exact3, ids_cal)
+    cost_cal = cal.node_eval_cost
+    cost_scalar = cal_lib.node_eval_cost(ACCEPT_ARITIES, ACCEPT_BEAM)
+    cost_red = cost_scalar / cost_cal
+    # honest context: the cheapest *scalar* beam reaching the target on
+    # the same queries (at small DB scales the last-level width binds
+    # and scalar beams stay expensive; at large scales small scalars
+    # pass too — reported, not asserted)
+    min_scalar = None
+    for b in SCALAR_SCAN:
+        ids_b = np.asarray(filtering.knn_query(index3, q, K, STOP, beam_width=b)[0])
+        r_b = common.recall_at_k(ids_exact3, ids_b)
+        if r_b >= CAL_TARGET_RECALL:
+            min_scalar = {
+                "beam": b, "recall_at_k_vs_exact": r_b,
+                "node_eval_cost": cal_lib.node_eval_cost(ACCEPT_ARITIES, b),
+            }
+            break
+    results["calibration"] = {
+        "arities": list(ACCEPT_ARITIES),
+        "target_recall": CAL_TARGET_RECALL,
+        "fit_target_recall": CAL_FIT_RECALL,
+        **cal.to_meta(),  # temperatures, beam_widths, calibration provenance
+        "recall_at_k_vs_exact": recall_cal,
+        "node_eval_cost_calibrated": cost_cal,
+        "node_eval_cost_uncalibrated_scalar": cost_scalar,
+        "uncalibrated_scalar_beam": ACCEPT_BEAM,
+        "cost_reduction_vs_uncalibrated": cost_red,
+        "min_scalar_at_target": min_scalar,
+    }
+    results["acceptance"]["calibrated_recall_at_k"] = recall_cal
+    results["acceptance"]["calibrated_cost_reduction"] = cost_red
+    print(f"# calibration @ {accept_tag}: temperatures={list(cal.temperatures)} "
+          f"beam_widths={list(cal.beam_widths)} -> recall@{K} {recall_cal:.4f}, "
+          f"node-eval cost {cost_cal} vs scalar beam {ACCEPT_BEAM}'s "
+          f"{cost_scalar} (x{cost_red:.2f}); cheapest scalar at target: "
+          f"{min_scalar}")
+    assert recall_cal >= CAL_TARGET_RECALL, (
+        f"calibrated recall@{K} {recall_cal:.4f} < {CAL_TARGET_RECALL}"
+    )
+    assert cost_red >= CAL_MIN_COST_REDUCTION, (
+        f"calibrated node-eval cost reduction {cost_red:.2f} < "
+        f"{CAL_MIN_COST_REDUCTION} vs the scalar beam-{ACCEPT_BEAM} config"
+    )
 
     # ------------------------- depth-3 shards end-to-end (same beam answer)
     from repro.compat import make_mesh

@@ -12,11 +12,18 @@ dry-run shape proves the depth-3 / beam serving path compiles on the
 production meshes: at (64, 64, 64) = 262,144 leaves, exact enumeration
 would rank a dense (Q, 262144) panel per query block — the beam keeps
 ranking work at O(Q * beam * arity) per level.
+
+Calibrated beams (ISSUE 5): ``beam_width`` also accepts a per-level
+width schedule tuple and ``temperatures`` carries per-level score
+calibration (`repro.core.calibrate` fits both at build time;
+docs/beam_search.md). The ``search_512q_d3_calib`` dry-run cell proves
+the calibrated serving point (wide-root schedule + non-unit
+temperatures) lowers and compiles on the production meshes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 from repro.configs.base import ArchSpec, ShapeSpec
 from repro.core.embedding import EmbeddingConfig
@@ -37,9 +44,15 @@ class LMIProteinConfig:
     # smaller, int8 4x smaller + per-row scales — the serving memory knob
     store_dtype: str = "float32"
     # beam-pruned leaf ranking (repro.core.lmi.beam_leaf_ranking): None =
-    # exact enumeration; an int prunes the level frontier to that width —
-    # the serving compute knob for deep (>= 3-level) stacks
-    beam_width: Optional[int] = None
+    # exact enumeration; an int prunes the level frontier to that width;
+    # a tuple is a per-level width schedule (wide at the root, narrow
+    # below — the repro.core.calibrate fitted form). The serving compute
+    # knob for deep (>= 3-level) stacks.
+    beam_width: Optional[Union[int, tuple]] = None
+    # per-level score temperatures for the calibrated joint ranking
+    # (None = 1.0 everywhere = the uncalibrated scores); fitted together
+    # with the width schedule by repro.core.calibrate
+    temperatures: Optional[tuple] = None
     # how the beam's pruned levels read their node models: "gather" =
     # one (arity, d) param block per (query, prefix) pair; "segmented" =
     # the repro.kernels.beam_eval node-sorted evaluation (~one block per
@@ -99,6 +112,19 @@ SHAPES = (
         "search_512q_d3_beam_seg",
         "search",
         dict(n_queries=512, n_objects=518_576, arities=(64, 64, 64), beam_width=64,
+             node_eval="segmented"),
+    ),
+    # calibrated serving point: per-level width schedule (wide root,
+    # narrow last level) + per-level temperatures, segmented node
+    # evaluation — the repro.core.calibrate output shape; proves the
+    # calibrated beam lowers/compiles and shards on the production
+    # meshes (static schedule + replicated params => identical beams
+    # per shard, as for the scalar beam)
+    ShapeSpec(
+        "search_512q_d3_calib",
+        "search",
+        dict(n_queries=512, n_objects=518_576, arities=(64, 64, 64),
+             beam_width=(64, 16), temperatures=(1.0, 0.8, 0.7),
              node_eval="segmented"),
     ),
 )

@@ -1,0 +1,446 @@
+"""Build-time beam calibration: per-level temperatures + width schedules.
+
+Beam search (`lmi.beam_leaf_ranking`) answers a query from whatever
+leaves survive the per-level prunes, so end-to-end recall hinges on how
+faithfully the upper levels' log-probs predict the *joint* leaf ranking.
+Two things go wrong with the raw scores:
+
+  * **miscalibrated confidence** — each family's pre-softmax scores are
+    on their own scale (negative squared distances, Gaussian
+    log-likelihoods, logits), and the joint ranking sums them across
+    levels. Within one level the child ordering is temperature-invariant
+    (softmax is monotone), but the cross-level sum is not: a level whose
+    scores are too peaked dominates the joint ranking whether or not it
+    is actually that reliable. Per-level temperature scaling
+    (log_softmax(score / T), the classic NLL calibration — cf. LIMS,
+    arXiv:2204.10028, which calibrates learned partition scores against
+    true distances) fixes the weighting;
+  * **one width for every level** — the root's mistakes are
+    unrecoverable (a pruned subtree never comes back) while the last
+    level's frontier is cheap to keep wide, so the optimal schedule is
+    wide at the root and narrow below, not one scalar ``beam_width``.
+
+This module fits both *offline, at build time*, on a calibration slice
+of the build set:
+
+  1. `fit_temperatures` — per level, minimize the NLL of the
+     **true-nearest-leaf prefix** (the leaf holding each calibration
+     query's exact nearest neighbor) over a temperature grid. The grid
+     NLL is evaluated from the T=1 log-probs (log-softmax is
+     shift-invariant, so ``log_softmax(logp_1 / T)`` IS the
+     temperature-T log-prob) — one jitted pass, no refitting;
+  2. `fit_beam_widths` — derive the cheapest per-level width schedule
+     that hits a target recall@k vs exact enumeration. Survival of an
+     answer is deterministic given its per-level prefix *ranks* in the
+     calibrated dense frontier (an answer is kept iff its prefix ranks
+     inside the width at every prune point — ranks are computed once,
+     every candidate schedule is then scored in closed form), and the
+     chosen schedule is verified by actually running the beam, widening
+     until the measured recall meets the target.
+
+The fitted `Calibration` is persisted in meta.json (format 2, optional
+keys — docs/index_format.md) and threaded through every query surface:
+`filtering.{range,knn}_query(temperatures=, beam_width=schedule)`,
+`distributed_lmi.sharded_knn` (replicated + static ⇒ identical beams on
+every shard), `serve --beam 64,16`, and both ``node_eval`` modes (the
+temperature folds into `beam_eval.family_planes`' canonical planes, so
+the Pallas kernel needs no new operand). With temperatures 1.0 and a
+constant schedule everything is bit-identical to the uncalibrated path.
+
+Tuning guidance and measured trade-off curves: docs/beam_search.md;
+acceptance sweep: benchmarks/depth_beam.py (calibrated (64, 64, 64)
+search reaches recall@30 >= 0.99 at >= 2x lower modeled node-eval cost
+than the best uncalibrated scalar beam).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lmi as lmi_lib
+
+Array = jax.Array
+
+# temperature search grid: log-spaced, includes 1.0 exactly (uncalibrated)
+_DEFAULT_TEMP_GRID = np.unique(np.concatenate([
+    np.logspace(np.log10(0.05), np.log10(20.0), 81), [1.0]
+])).astype(np.float32)
+# width-candidate quantiles of the answer-rank distribution per prune point
+_RANK_QUANTILES = (0.5, 0.75, 0.9, 0.95, 0.98, 0.99, 0.995, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """A fitted beam calibration (what build_index persists to meta.json)."""
+
+    temperatures: tuple  # one per level
+    beam_widths: tuple  # one per pruned expansion (len depth - 1)
+    target_recall: float
+    k: int
+    stop_condition: float
+    n_queries: int  # calibration slice size
+    seed: int
+    noise: float
+    # --- diagnostics (informational; serve never reads them)
+    nll_uncalibrated: tuple  # per-level true-prefix NLL at T = 1
+    nll_calibrated: tuple  # per-level NLL at the fitted temperature
+    predicted_recall: float  # closed-form rank-survival estimate
+    measured_recall: float  # actual beam run vs exact on the slice
+    node_eval_cost: int  # modeled cells/query of the fitted schedule
+
+    def to_meta(self) -> dict:
+        """The meta.json (format 2) representation: top-level optional
+        ``temperatures`` / ``beam_widths`` serving defaults plus a
+        ``calibration`` provenance block (docs/index_format.md)."""
+        return dict(
+            temperatures=[round(float(t), 6) for t in self.temperatures],
+            beam_widths=[int(w) for w in self.beam_widths],
+            calibration=dict(
+                n_queries=int(self.n_queries),
+                target_recall=float(self.target_recall),
+                k=int(self.k),
+                stop_condition=float(self.stop_condition),
+                seed=int(self.seed),
+                noise=float(self.noise),
+                nll_uncalibrated=[round(float(v), 6) for v in self.nll_uncalibrated],
+                nll_calibrated=[round(float(v), 6) for v in self.nll_calibrated],
+                predicted_recall=round(float(self.predicted_recall), 6),
+                measured_recall=round(float(self.measured_recall), 6),
+                node_eval_cost=int(self.node_eval_cost),
+            ),
+        )
+
+
+# ----------------------------------------------------------- the cost model
+
+
+def node_eval_cost(arities: Sequence[int], beam_widths=None) -> int:
+    """Modeled node-evaluation cost of one query's leaf ranking: the
+    number of child-score cells `lmi.beam_leaf_ranking` computes
+    (level-0 scores + every expansion's ``frontier * arity``), mirroring
+    its dense-until-first-prune semantics. ``beam_widths=None`` = exact
+    enumeration; scalar and schedule forms as everywhere else.
+
+    This is the cost the width-schedule search minimizes, and the unit
+    of the benchmark's >= 2x acceptance bound — hardware-independent,
+    proportional to both ranking FLOPs (x 2d) and the score-panel HBM
+    footprint."""
+    arities = tuple(int(a) for a in arities)
+    widths = lmi_lib.normalize_beam_widths(beam_widths, len(arities))
+    cost = frontier = arities[0]
+    for i, a in enumerate(arities[1:], start=1):
+        if widths is not None:
+            frontier = min(frontier, widths[i - 1])
+        cost += frontier * a
+        frontier *= a
+    return cost
+
+
+# ----------------------------------------------------- calibration queries
+
+
+def calibration_queries(
+    index, n_queries: int = 256, noise: float = 0.01, seed: int = 0
+) -> Array:
+    """A calibration slice of the build set: ``n_queries`` database rows,
+    perturbed with N(0, noise) and clipped to the embedding range — the
+    near-duplicate serving workload (the same construction serve.py uses
+    for its latency queries). The perturbation is what makes the
+    true-nearest-leaf target non-trivial: an unperturbed build point's
+    nearest leaf is, by construction, its own argmax route."""
+    rng = np.random.default_rng(seed)
+    rows = rng.choice(index.n_objects, size=min(n_queries, index.n_objects),
+                      replace=False)
+    q = np.asarray(index.sorted_embeddings)[np.sort(rows)]
+    q = q + rng.normal(scale=noise, size=q.shape).astype(np.float32)
+    return jnp.asarray(np.clip(q, 0.0, 1.0), jnp.float32)
+
+
+def true_nearest_leaves(index, queries: Array, metric: str = "euclidean") -> np.ndarray:
+    """(Q,) leaf id holding each query's exact nearest neighbor (one
+    brute-force distance panel over the embedding DB — the calibration
+    target; offline, so the scan cost is irrelevant)."""
+    from repro.core import filtering
+
+    d = filtering.brute_force_distances(queries, index.sorted_embeddings, metric=metric)
+    nn_row = np.asarray(jnp.argmin(d, axis=-1))  # CSR row (bucket-sorted)
+    offsets = np.asarray(index.bucket_offsets, np.int64)
+    return (np.searchsorted(offsets, nn_row, side="right") - 1).astype(np.int64)
+
+
+def _level_prefixes(arities: Sequence[int], leaves: np.ndarray) -> list:
+    """prefixes[i] = mixed-radix prefix of ``leaves`` at level i
+    (leaf // prod(arities[i+1:]))."""
+    return [leaves // math.prod(arities[i + 1:]) for i in range(len(arities))]
+
+
+# ------------------------------------------------------ temperature fitting
+
+
+@jax.jit
+def _grid_nll(scores: Array, target: Array, temps: Array) -> Array:
+    """(G,) mean NLL of ``target`` under log_softmax(scores / T) for every
+    grid temperature. ``scores`` are the T=1 log-probs — shift-invariance
+    of log-softmax makes rescaling them equivalent to rescaling the raw
+    pre-softmax scores."""
+    logp = jax.nn.log_softmax(
+        scores[None, :, :] / temps[:, None, None], axis=-1
+    )  # (G, Q, a)
+    picked = jnp.take_along_axis(
+        logp, jnp.broadcast_to(target[None, :, None], (temps.shape[0], target.shape[0], 1)),
+        axis=-1,
+    )[..., 0]
+    return -jnp.mean(picked, axis=-1)
+
+
+def fit_temperatures(
+    index, queries: Array, target_leaves: Optional[np.ndarray] = None,
+    metric: str = "euclidean", temp_grid: Optional[np.ndarray] = None,
+):
+    """Per-level temperatures minimizing the true-nearest-leaf prefix NLL.
+
+    Level i's targets are the true leaf's level-i children, conditioned
+    on the TRUE parent prefix (the level-i node model that owns the
+    target — `lmi._assign_children` gathers it), matching the factorized
+    log-prob the search accumulates. Returns
+    ``(temperatures, nll_at_1, nll_fitted)`` — three per-level tuples.
+    """
+    if target_leaves is None:
+        target_leaves = true_nearest_leaves(index, queries, metric=metric)
+    grid_np = np.asarray(_DEFAULT_TEMP_GRID if temp_grid is None else temp_grid,
+                         np.float32)
+    grid = jnp.asarray(grid_np)
+    q = jnp.asarray(queries, jnp.float32)
+    prefixes = _level_prefixes(index.arities, np.asarray(target_leaves, np.int64))
+    temps, nll0, nll1 = [], [], []
+    for i in range(index.depth):
+        child = jnp.asarray(prefixes[i] % index.arities[i], jnp.int32)
+        if i == 0:
+            scores = lmi_lib._node_log_proba(index.model_type, index.levels[0], q)
+        else:
+            parents = jnp.asarray(prefixes[i - 1], jnp.int32)
+            scores = lmi_lib._assign_children(
+                index.model_type, index.levels[i], q, parents
+            )
+        nll = np.asarray(_grid_nll(scores, child, grid))
+        best = int(np.argmin(nll))
+        one = int(np.argmin(np.abs(grid_np - 1.0)))
+        # Degenerate-fit guard: when the target IS the argmax for
+        # (nearly) every calibration query, NLL decreases monotonically
+        # toward T -> 0 (sharper is always "better") and the grid floor
+        # wins — but a near-one-hot level deforms the joint ranking
+        # badly (its normalizers are non-linear in T). No errors means
+        # no calibration signal: keep T = 1.
+        accuracy = float(jnp.mean(jnp.argmax(scores, axis=-1) == child))
+        if accuracy >= 0.999 or best in (0, grid_np.size - 1):
+            best = one
+        temps.append(round(float(grid_np[best]), 6))
+        nll0.append(float(nll[one]))
+        nll1.append(float(nll[best]))
+    return tuple(temps), tuple(nll0), tuple(nll1)
+
+
+# ---------------------------------------------------- width-schedule fitting
+
+
+def _answer_recall(ref_ids: np.ndarray, got_ids: np.ndarray) -> float:
+    """Mean per-query answer-set overlap, denominated by the reference
+    (-1 == not found) — recall@k of ``got`` vs ``ref``."""
+    return float(np.mean([
+        len((set(ref_ids[i]) - {-1}) & (set(got_ids[i]) - {-1}))
+        / max(int((ref_ids[i] >= 0).sum()), 1)
+        for i in range(ref_ids.shape[0])
+    ]))
+
+
+def _dense_prefix_accs(index, queries: Array, temperatures) -> list:
+    """Calibrated dense joint log-probs at every prune point: accs[i] is
+    the (Q, prod(arities[:i+1])) frontier panel the beam would prune
+    before expanding level i + 1 (i = 0 .. depth-2)."""
+    temps = lmi_lib.normalize_temperatures(temperatures, index.depth)
+    q = jnp.asarray(queries, jnp.float32)
+    acc = lmi_lib._node_log_proba(index.model_type, index.levels[0], q, temps[0])
+    accs = [acc]
+    for i, params in enumerate(index.levels[1:-1], start=1):
+        child = lmi_lib._node_log_proba(index.model_type, params, q, temps[i])
+        joint = jnp.transpose(acc)[:, :, None] + child
+        acc = jnp.transpose(joint, (1, 0, 2)).reshape(q.shape[0], -1)
+        accs.append(acc)
+    return accs
+
+
+def answer_prefix_ranks(
+    index, queries: Array, answer_ids: np.ndarray, temperatures
+) -> tuple:
+    """(ranks, valid): ranks[i] is the (Q, k) dense-frontier rank of each
+    exact answer's level-i prefix at prune point i + 1, under the
+    calibrated scores; ``valid`` masks the -1 (not-found) answer slots.
+
+    An answer survives a schedule ``w`` iff ``ranks[i] < w[i]`` for all
+    i — ranks are vs the *unpruned* frontier, and earlier prunes can
+    only improve a survivor's standing, so the condition is sufficient
+    (the closed-form recall estimate is a slight underestimate; the
+    measured verify pass in `fit_beam_widths` closes the gap)."""
+    valid = answer_ids >= 0
+    row_of_id = np.empty(index.n_objects, np.int64)
+    row_of_id[np.asarray(index.sorted_ids, np.int64)] = np.arange(index.n_objects)
+    rows = row_of_id[np.where(valid, answer_ids, 0)]
+    offsets = np.asarray(index.bucket_offsets, np.int64)
+    leaves = np.searchsorted(offsets, rows, side="right") - 1  # (Q, k)
+    accs = _dense_prefix_accs(index, queries, temperatures)
+    ranks = []
+    for i in range(1, index.depth):
+        tgt = leaves // math.prod(index.arities[i:])  # level-(i-1) prefix
+        acc = np.asarray(accs[i - 1])  # (Q, N_i)
+        tgt_score = np.take_along_axis(acc, tgt, axis=1)  # (Q, k)
+        ranks.append((acc[:, None, :] > tgt_score[:, :, None]).sum(-1))
+    return ranks, valid
+
+
+def _predicted_recall(ranks, valid, widths) -> float:
+    keep = np.ones(valid.shape, bool)
+    for i, w in enumerate(widths):
+        keep &= ranks[i] < w
+    return float((keep & valid).sum() / max(int(valid.sum()), 1))
+
+
+def fit_beam_widths(
+    index, queries: Array, temperatures, target_recall: float = 0.99,
+    k: int = 30, stop_condition: float = 0.01, metric: str = "euclidean",
+    max_widen_rounds: int = 4,
+):
+    """The cheapest per-level width schedule hitting ``target_recall``@k
+    vs exact enumeration on the calibration slice.
+
+    Candidate widths per prune point come from quantiles of the exact
+    answers' prefix-rank distribution (`answer_prefix_ranks`); the
+    cartesian grid is scored in closed form and the cheapest feasible
+    schedule (by `node_eval_cost`) is then *verified* by running the
+    actual calibrated beam, widening geometrically until the measured
+    recall meets the target (the closed form under-counts survivors, so
+    this loop usually passes on the first try).
+
+    Returns ``(widths, diagnostics)`` with predicted/measured recall.
+    """
+    from repro.core import filtering
+
+    depth = index.depth
+    if depth < 2:  # single level: nothing to prune
+        return (), dict(predicted_recall=1.0, measured_recall=1.0)
+    frontiers = [math.prod(index.arities[:i + 1]) for i in range(depth - 1)]
+    ids_exact, _ = filtering.knn_query(
+        index, queries, k=k, stop_condition=stop_condition, metric=metric)
+    ids_exact = np.asarray(ids_exact)
+    ranks, valid = answer_prefix_ranks(index, queries, ids_exact, temperatures)
+
+    candidates = []
+    for i in range(depth - 1):
+        r = ranks[i][valid]
+        qs = np.quantile(r, _RANK_QUANTILES, method="higher").astype(np.int64) + 1
+        cand = {int(min(frontiers[i], max(2, 2 * ((v + 1) // 2)))) for v in qs}
+        cand.add(frontiers[i])  # the no-prune fallback is always feasible
+        candidates.append(sorted(cand))
+
+    best = None
+    for widths in itertools.product(*candidates):
+        if _predicted_recall(ranks, valid, widths) >= target_recall:
+            cost = node_eval_cost(index.arities, widths)
+            if best is None or cost < best[0]:
+                best = (cost, widths)
+    widths = best[1] if best is not None else tuple(frontiers)
+
+    predicted = _predicted_recall(ranks, valid, widths)
+
+    def measure(w):
+        ids_cal, _ = filtering.knn_query(
+            index, queries, k=k, stop_condition=stop_condition, metric=metric,
+            beam_width=w, temperatures=temperatures)
+        return _answer_recall(ids_exact, np.asarray(ids_cal))
+
+    measured = measure(widths)
+    for _ in range(max_widen_rounds):
+        if measured >= target_recall or all(
+            w >= f for w, f in zip(widths, frontiers)
+        ):
+            break
+        widths = tuple(
+            min(frontiers[i], max(w + 2, int(w * 3 / 2))) for i, w in enumerate(widths)
+        )
+        measured = measure(widths)
+
+    # Greedy measured shrink: the closed form under-counts survivors, so
+    # the grid winner usually has slack — walk each level down (most
+    # expensive cost term first) while the measured recall holds. Each
+    # probe is one beam run on the slice; a handful of probes buys the
+    # last 10-30% of the cost win.
+    if measured >= target_recall:
+        improved = True
+        while improved:
+            improved = False
+            order = sorted(range(len(widths)),
+                           key=lambda i: -widths[i] * index.arities[i + 1])
+            for i in order:
+                w_new = max(2, min(widths[i] - 2, int(widths[i] * 7 / 8)))
+                if w_new >= widths[i]:
+                    continue
+                trial = widths[:i] + (w_new,) + widths[i + 1:]
+                m = measure(trial)
+                if m >= target_recall:
+                    widths, measured, improved = trial, m, True
+    return widths, dict(predicted_recall=predicted, measured_recall=measured)
+
+
+# ------------------------------------------------------------- entry point
+
+
+def calibrate(
+    index, n_queries: int = 256, target_recall: float = 0.99, k: int = 30,
+    stop_condition: float = 0.01, metric: str = "euclidean",
+    noise: float = 0.01, seed: int = 0,
+) -> Calibration:
+    """Fit the full beam calibration for a built index (build-time;
+    `repro.launch.build_index --calibrate` persists the result).
+
+    Temperatures first (they reshape the joint ranking the width search
+    scores against), then the width schedule at ``target_recall``@k.
+    """
+    queries = calibration_queries(index, n_queries, noise=noise, seed=seed)
+    leaves = true_nearest_leaves(index, queries, metric=metric)
+    temps, nll0, nll1 = fit_temperatures(index, queries, leaves, metric=metric)
+    widths, diag = fit_beam_widths(
+        index, queries, temps, target_recall=target_recall, k=k,
+        stop_condition=stop_condition, metric=metric)
+    if diag["measured_recall"] < target_recall and any(t != 1.0 for t in temps):
+        # Temperature fallback: if the calibrated joint ranking cannot
+        # reach the target even at full frontiers, the fitted
+        # temperatures hurt more than they help on this slice — refit
+        # the width schedule on the uncalibrated (T = 1) ranking, which
+        # converges to exact enumeration as the widths widen.
+        temps_flat = (1.0,) * index.depth
+        widths_flat, diag_flat = fit_beam_widths(
+            index, queries, temps_flat, target_recall=target_recall, k=k,
+            stop_condition=stop_condition, metric=metric)
+        if diag_flat["measured_recall"] > diag["measured_recall"]:
+            temps, widths, diag = temps_flat, widths_flat, diag_flat
+            nll1 = nll0
+    return Calibration(
+        temperatures=temps,
+        beam_widths=widths,
+        target_recall=float(target_recall),
+        k=int(k),
+        stop_condition=float(stop_condition),
+        n_queries=int(queries.shape[0]),
+        seed=int(seed),
+        noise=float(noise),
+        nll_uncalibrated=nll0,
+        nll_calibrated=nll1,
+        predicted_recall=float(diag["predicted_recall"]),
+        measured_recall=float(diag["measured_recall"]),
+        node_eval_cost=node_eval_cost(index.arities, widths),
+    )

@@ -83,11 +83,13 @@ class ShardedLMI:
     @property
     def l1_params(self) -> dict:
         """Deprecated: the pre-level-stack name for ``levels[0]``."""
+        lmi_lib._warn_two_level_property("l1_params", "levels[0]")
         return self.levels[0]
 
     @property
     def l2_params(self) -> dict:
         """Deprecated: the pre-level-stack name for ``levels[1]``."""
+        lmi_lib._warn_two_level_property("l2_params", "levels[1]")
         return self.levels[1]
 
     # ------------------------------------------------- legacy array views
@@ -167,23 +169,25 @@ def _local_candidates(
     stop_count: int,
     cap: int,
     bucket_topk: Optional[int] = None,
-    beam_width: Optional[int] = None,
+    beam_width: "lmi_lib.BeamWidths" = None,
     node_eval: str = "gather",
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
+    temperatures: "lmi_lib.Temperatures" = None,
 ):
     """Candidate CSR rows owned by this shard, in global probability order.
 
     The ranking and stop cut are the shared `lmi` ranking helpers on the
     replicated *global* sizes — identical on every shard (the beam
-    traversal likewise depends only on replicated node params, whatever
+    traversal likewise depends only on replicated node params and the
+    static ``beam_width`` schedule / ``temperatures``, whatever
     ``node_eval`` mode evaluates them) — and the slot->row walk is
     `lmi.extract_rows` over the shard-local offsets, so each shard
     materializes only its own share of the candidate set.
     """
     index_stub = _ProbStub(model_type, levels, arities)
     if beam_width is None:
-        logp = lmi_lib.leaf_log_probs(index_stub, queries)  # (Q, L)
+        logp = lmi_lib.leaf_log_probs(index_stub, queries, temperatures)  # (Q, L)
         order, visited, _sz = lmi_lib.rank_visited_buckets(
             logp, global_sizes, stop_count, bucket_topk
         )
@@ -191,6 +195,7 @@ def _local_candidates(
         order, visited, _sz = lmi_lib.beam_rank_visited_buckets(
             index_stub, queries, global_sizes, stop_count, beam_width, bucket_topk,
             node_eval=node_eval, use_kernel=use_kernel, interpret=interpret,
+            temperatures=temperatures,
         )
     rows, valid, _n = lmi_lib.extract_rows(order, visited, local_offsets, cap)
     return rows, valid
@@ -203,6 +208,10 @@ class _ProbStub:
         self.model_type = model_type
         self.levels = tuple(levels)
         self.arities = tuple(arities)
+
+    @property
+    def depth(self) -> int:
+        return len(self.arities)
 
 
 def sharded_knn(
@@ -219,14 +228,15 @@ def sharded_knn(
     radius_scale: float = 1.0,
     n_objects: Optional[int] = None,
     bucket_topk: Optional[int] = None,
-    beam_width: Optional[int] = None,
+    beam_width: "lmi_lib.BeamWidths" = None,
     node_eval: str = "gather",
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
+    temperatures: "lmi_lib.Temperatures" = None,
 ):
     """Distributed kNN: queries sharded over ``query_axes``, DB buckets over
     ``shard_axis``. Exact vs. the single-device result (for the same
-    ``bucket_topk`` / ``beam_width`` ranking settings).
+    ``bucket_topk`` / ``beam_width`` / ``temperatures`` ranking settings).
 
     ``local_cap`` bounds each shard's candidate block; the default
     (stop_count + max bucket) is always exact; pass ~4x the expected
@@ -241,7 +251,10 @@ def sharded_knn(
     ``beam_width`` runs the beam-pruned level traversal instead of exact
     enumeration — every shard computes the identical beam from the
     replicated node models, so the sharded answer still equals the
-    single-device beam answer. ``node_eval="segmented"`` evaluates the
+    single-device beam answer. A scalar width and a per-level schedule
+    tuple (with per-level ``temperatures``) are both static, replicated
+    inputs, so a *calibrated* beam (repro.core.calibrate) is likewise
+    identical on every shard. ``node_eval="segmented"`` evaluates the
     beam's pruned levels through `repro.kernels.beam_eval` (node-sorted
     segmented params reads) instead of per-pair gathers; the replicated
     params still yield the identical beam on every shard.
@@ -264,6 +277,8 @@ def sharded_knn(
         from repro.kernels.common import should_interpret
 
         interpret = should_interpret()
+    beam_width = lmi_lib.normalize_beam_widths(beam_width, sharded.depth)
+    temperatures = lmi_lib.normalize_temperatures(temperatures, sharded.depth)
     from repro.core import filtering
 
     store_dtype = sharded.store.dtype
@@ -286,6 +301,7 @@ def sharded_knn(
             local_store.offsets, queries_l, stop_count, local_cap,
             bucket_topk=bucket_topk, beam_width=beam_width,
             node_eval=node_eval, use_kernel=use_kernel, interpret=interpret,
+            temperatures=temperatures,
         )
         kk = min(k, local_cap)
         local_d, top_slot = filtering.filter_topk(

@@ -114,12 +114,13 @@ def filter_topk(store, queries, rows, valid, k: int, *, metric: str = "euclidean
     jax.jit,
     static_argnames=(
         "stop_count", "cap", "metric", "mode", "k", "use_kernel", "interpret",
-        "bucket_topk", "beam_width", "node_eval",
+        "bucket_topk", "beam_width", "node_eval", "temperatures",
     ),
 )
 def _query_impl(
     index, store, queries, radius, *, stop_count, cap, metric, mode, k,
     use_kernel, interpret, bucket_topk, beam_width=None, node_eval="gather",
+    temperatures=None,
 ):
     """One compiled plan for the whole query: search -> filter -> predicate.
 
@@ -128,10 +129,12 @@ def _query_impl(
     index's CSR layout, so the search's row indices address it directly.
     ``use_kernel`` covers both fused stages: the beam's segmented node
     evaluation (when ``node_eval="segmented"``) and the candidate filter.
+    ``beam_width`` / ``temperatures`` arrive pre-normalized (hashable
+    tuples) from the entry points below.
     """
     cand_ids, rows, valid, _nb, _nc, _runs = lmi_lib._search_core(
         index, queries, stop_count, cap, bucket_topk, beam_width,
-        node_eval, use_kernel, interpret,
+        node_eval, use_kernel, interpret, temperatures,
     )
     if mode == "range":
         d = filter_range(store, queries, rows, valid, metric=metric,
@@ -186,8 +189,9 @@ def range_query(
     candidate_cap: Optional[int] = None,
     store: Optional[store_lib.CandidateStore] = None,
     bucket_topk: Optional[int] = None,
-    beam_width: Optional[int] = None,
+    beam_width: "lmi_lib.BeamWidths" = None,
     node_eval: str = "gather",
+    temperatures: "lmi_lib.Temperatures" = None,
 ) -> FilterResult:
     """End-to-end LMI range query (paper Table 2).
 
@@ -195,19 +199,22 @@ def range_query(
     re-scales it into embedding space (paper footnote 3 uses 1.5 for
     Euclidean: Q-range 0.5 -> cutoff 0.75). ``store`` selects the
     candidate-store precision (default: f32 view of the index);
-    ``beam_width`` the beam-pruned leaf ranking (None = exact);
-    ``node_eval`` how its pruned levels read node models ("gather" /
-    "segmented" — see `lmi.beam_leaf_ranking`).
+    ``beam_width`` the beam-pruned leaf ranking (None = exact; scalar or
+    per-level schedule); ``node_eval`` how its pruned levels read node
+    models ("gather" / "segmented" — see `lmi.beam_leaf_ranking`);
+    ``temperatures`` the per-level score calibration
+    (`repro.core.calibrate`, docs/beam_search.md).
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
+    widths, temps = lmi_lib._static_search_args(index, beam_width, temperatures)
     if interpret is None:
         interpret = should_interpret()
     ids, d, mask = _query_impl(
         index, _store_for(index, store), q, jnp.float32(radius * radius_scale),
         stop_count=stop_count, cap=cap, metric=metric, mode="range", k=0,
         use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
-        beam_width=beam_width, node_eval=node_eval,
+        beam_width=widths, node_eval=node_eval, temperatures=temps,
     )
     return FilterResult(ids=ids, distances=d, mask=mask)
 
@@ -225,8 +232,9 @@ def knn_query(
     candidate_cap: Optional[int] = None,
     store: Optional[store_lib.CandidateStore] = None,
     bucket_topk: Optional[int] = None,
-    beam_width: Optional[int] = None,
+    beam_width: "lmi_lib.BeamWidths" = None,
     node_eval: str = "gather",
+    temperatures: "lmi_lib.Temperatures" = None,
 ) -> tuple[Array, Array]:
     """kNN over the candidate set (paper Table 3: 30NN with max radius).
 
@@ -234,11 +242,14 @@ def knn_query(
     candidates hold id -1 / distance +inf. ``store`` selects the
     candidate-store precision; ``bucket_topk`` / ``beam_width`` the
     approximate leaf ranking (top-K of the dense panel / beam-pruned
-    traversal; None = exact); ``node_eval`` how the beam's pruned levels
-    read node models ("gather" / "segmented").
+    traversal, scalar or per-level schedule; None = exact);
+    ``node_eval`` how the beam's pruned levels read node models
+    ("gather" / "segmented"); ``temperatures`` the per-level score
+    calibration (`repro.core.calibrate`).
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
+    widths, temps = lmi_lib._static_search_args(index, beam_width, temperatures)
     if interpret is None:
         interpret = should_interpret()
     radius = _BIG if max_radius is None else jnp.float32(max_radius * radius_scale)
@@ -246,7 +257,7 @@ def knn_query(
         index, _store_for(index, store), q, radius,
         stop_count=stop_count, cap=cap, metric=metric, mode="knn", k=int(k),
         use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
-        beam_width=beam_width, node_eval=node_eval,
+        beam_width=widths, node_eval=node_eval, temperatures=temps,
     )
     return ids, d
 

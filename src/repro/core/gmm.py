@@ -112,10 +112,20 @@ def fit_many(key: Array, xs: Array, ws: Array, k: int, max_iter: int = 25) -> GM
     return jax.vmap(lambda kk, x, w: f(kk, x, weights=w))(keys, xs, ws)
 
 
-def predict_log_proba(means: Array, variances: Array, log_weights: Array, x: Array) -> Array:
-    """Normalised log responsibilities; supports leading batch dims on params."""
+def predict_log_proba(
+    means: Array, variances: Array, log_weights: Array, x: Array,
+    temperature: float = 1.0,
+) -> Array:
+    """Normalised log responsibilities; supports leading batch dims on params.
+
+    ``temperature`` rescales the joint log-likelihoods before the softmax
+    (log_softmax(logp / T)) — the per-level calibration knob of
+    `repro.core.calibrate`. T = 1 is the uncalibrated EM posterior
+    (division by 1.0 is bitwise exact, so T = 1 matches the pre-calibration
+    behavior to the bit).
+    """
     logp = _estep_logprob(jnp.asarray(x, jnp.float32), means, variances, log_weights)
-    return jax.nn.log_softmax(logp, axis=-1)
+    return jax.nn.log_softmax(logp / temperature, axis=-1)
 
 
 def predict_proba(state: GMMState, x: Array) -> Array:

@@ -41,6 +41,12 @@ search is a loop over levels that accumulates factorized log-probs for a
     benchmarks/depth_beam.py; a beam a few multiples of the visited
     bucket count is within 0.02 recall@30 of exact).
 
+Both modes accept per-level *temperatures* and the beam a per-level
+*width schedule* (wide at the root, narrow below) — the calibrated-beam
+knobs `repro.core.calibrate` fits at build time (docs/beam_search.md);
+temperatures of 1.0 and a constant schedule are bit-identical to the
+uncalibrated scalar-beam path.
+
 Either mode yields ranked leaves; the ranked bucket stream is cut at the
 stop condition with a cumulative-sum + searchsorted
 (`rank_visited_buckets` / `extract_rows` — shared verbatim with the
@@ -82,6 +88,72 @@ Array = jax.Array
 MODEL_TYPES = ("kmeans", "gmm", "kmeans+logreg")
 
 LevelParams = dict  # dict[str, Array]; level i carries a leading prod(arities[:i]) node dim (level 0: none)
+
+# beam_width accepted forms: None (exact), int (same width before every
+# expansion — the pre-calibration scalar beam), or a per-level schedule
+# tuple of len(arities) - 1 ints (widths[i-1] prunes the frontier before
+# expanding level i; wide-at-the-root schedules come from
+# repro.core.calibrate). temperatures: None (all 1.0) or len(arities)
+# floats, one per level.
+BeamWidths = Any  # Optional[int | tuple[int, ...]]
+Temperatures = Any  # Optional[float | tuple[float, ...]]
+
+
+def _warn_two_level_property(name: str, replacement: str) -> None:
+    import warnings
+
+    warnings.warn(
+        f"{name} is deprecated since the level-stack refactor (PR 3); read "
+        f"{replacement} instead (docs/architecture.md, 'Deprecated 2-level "
+        "views'). This property will be removed once nothing imports it.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def normalize_beam_widths(beam_width: BeamWidths, depth: int):
+    """Canonical per-level width schedule: None, or a tuple of
+    ``depth - 1`` ints (one prune opportunity before each expansion).
+
+    A scalar ``B`` normalizes to ``(B,) * (depth - 1)`` — by construction
+    the schedule path traces the *identical* program as the pre-schedule
+    scalar beam, so results are bit-identical (property-tested in
+    tests/test_calibrate.py).
+    """
+    if beam_width is None:
+        return None
+    if isinstance(beam_width, (int, np.integer)):
+        if beam_width < 1:
+            raise ValueError(f"beam_width must be >= 1, got {beam_width}")
+        return (int(beam_width),) * max(depth - 1, 0)
+    widths = tuple(int(b) for b in beam_width)
+    if len(widths) != depth - 1:
+        raise ValueError(
+            f"beam width schedule must have depth - 1 = {depth - 1} entries "
+            f"(one per pruned expansion), got {len(widths)}: {widths}"
+        )
+    if any(b < 1 for b in widths):
+        raise ValueError(f"beam widths must be >= 1, got {widths}")
+    return widths
+
+
+def normalize_temperatures(temperatures: Temperatures, depth: int) -> tuple:
+    """Canonical per-level temperatures: a tuple of ``depth`` floats
+    (None == all 1.0 == the uncalibrated scores, bit-identical to the
+    pre-calibration path)."""
+    if temperatures is None:
+        return (1.0,) * depth
+    if isinstance(temperatures, (int, float, np.floating, np.integer)):
+        temperatures = (float(temperatures),) * depth
+    temps = tuple(float(t) for t in temperatures)
+    if len(temps) != depth:
+        raise ValueError(
+            f"temperatures must have one entry per level ({depth}), got "
+            f"{len(temps)}: {temps}"
+        )
+    if any(t <= 0.0 for t in temps):
+        raise ValueError(f"temperatures must be > 0, got {temps}")
+    return temps
 
 
 @jax.tree_util.register_dataclass
@@ -137,11 +209,13 @@ class LMI:
     @property
     def l1_params(self) -> LevelParams:
         """Deprecated: the pre-level-stack name for ``levels[0]``."""
+        _warn_two_level_property("l1_params", "levels[0]")
         return self.levels[0]
 
     @property
     def l2_params(self) -> LevelParams:
         """Deprecated: the pre-level-stack name for ``levels[1]``."""
+        _warn_two_level_property("l2_params", "levels[1]")
         return self.levels[1]
 
     def bucket_sizes(self) -> Array:
@@ -161,15 +235,24 @@ class LMI:
 # --------------------------------------------------------------------- build
 
 
-def _node_log_proba(model_type: str, params: LevelParams, x: Array) -> Array:
+def _node_log_proba(
+    model_type: str, params: LevelParams, x: Array, temperature: float = 1.0
+) -> Array:
     """Child log-probabilities for one level. Params may carry leading
-    node-stack dims; returns (…, n, arity)."""
+    node-stack dims; returns (…, n, arity). ``temperature`` rescales the
+    pre-softmax scores (log_softmax(score / T)) — every family's
+    calibration knob (repro.core.calibrate fits one per level); T = 1 is
+    bitwise the uncalibrated path."""
     if model_type == "kmeans":
-        return kmeans.predict_log_proba(params["centroids"], x)
+        return kmeans.predict_log_proba(params["centroids"], x, temperature=temperature)
     if model_type == "gmm":
-        return gmm.predict_log_proba(params["means"], params["variances"], params["log_weights"], x)
+        return gmm.predict_log_proba(
+            params["means"], params["variances"], params["log_weights"], x,
+            temperature=temperature,
+        )
     if model_type == "kmeans+logreg":
-        return logreg.predict_log_proba(params["w"], params["b"], x)
+        return logreg.predict_log_proba(params["w"], params["b"], x,
+                                        temperature=temperature)
     raise ValueError(f"unknown model_type {model_type!r}")
 
 
@@ -304,7 +387,7 @@ def _assign_children(model_type: str, level_params, x: Array, parents: Array) ->
 # -------------------------------------------------------------------- search
 
 
-def leaf_log_probs(index, queries: Array) -> Array:
+def leaf_log_probs(index, queries: Array, temperatures: Temperatures = None) -> Array:
     """(Q, n_leaves) joint leaf log-probabilities by exact enumeration.
 
     The level loop expands the full frontier at every level: level-``i``
@@ -314,12 +397,19 @@ def leaf_log_probs(index, queries: Array) -> Array:
     implementation (one l1 + one l2 evaluation), so results are
     bit-exact with it. Works on any object with ``model_type`` /
     ``levels`` attrs (the sharded path passes a replicated-params stub).
+
+    ``temperatures`` (per-level, see `normalize_temperatures`) reweights
+    how strongly each level's scores count in the joint ranking —
+    within one level the child ordering is temperature-invariant, but the
+    cross-level sum is not (docs/beam_search.md). None == all 1.0 ==
+    bitwise the uncalibrated panel.
     """
+    temps = normalize_temperatures(temperatures, len(index.levels))
     q = jnp.asarray(queries, jnp.float32)
-    acc = _node_log_proba(index.model_type, index.levels[0], q)  # (Q, a0)
-    for params in index.levels[1:]:
+    acc = _node_log_proba(index.model_type, index.levels[0], q, temps[0])  # (Q, a0)
+    for i, params in enumerate(index.levels[1:], start=1):
         # params have leading n_nodes; broadcast over nodes: (N, Q, a_i)
-        child = _node_log_proba(index.model_type, params, q)
+        child = _node_log_proba(index.model_type, params, q, temps[i])
         joint = jnp.transpose(acc)[:, :, None] + child  # (N, Q, a_i)
         acc = jnp.transpose(joint, (1, 0, 2)).reshape(q.shape[0], -1)
     return acc
@@ -329,9 +419,9 @@ NODE_EVAL_MODES = ("gather", "segmented")
 
 
 def beam_leaf_ranking(
-    index, queries: Array, beam_width: int, node_eval: str = "gather",
+    index, queries: Array, beam_width: BeamWidths, node_eval: str = "gather",
     use_kernel: bool = False, interpret: Optional[bool] = None,
-    collect_pruned: Optional[list] = None,
+    collect_pruned: Optional[list] = None, temperatures: Temperatures = None,
 ) -> tuple[Array, Array]:
     """Best-first (order (Q, R), logp (Q, R)) of the beam's surviving leaves.
 
@@ -341,6 +431,15 @@ def beam_leaf_ranking(
     ``O(Q * n_leaves * d)``. ``R`` is the final frontier size
     ``min(beam, N_last) * arities[-1]`` — leaves outside the beam are
     never scored, which is the approximation.
+
+    ``beam_width`` may be a scalar (the same width before every
+    expansion) or a per-level schedule tuple of ``depth - 1`` ints
+    (``widths[i-1]`` prunes the frontier before expanding level ``i`` —
+    wide at the root, narrow below; `repro.core.calibrate` fits one).
+    ``temperatures`` rescales each level's pre-softmax scores
+    (per-level calibration, same fitting); with all temperatures 1.0 and
+    a constant schedule this computes bit-identical results to the
+    scalar uncalibrated beam, in both ``node_eval`` modes.
 
     ``node_eval`` picks how a pruned level's (query, prefix) pairs read
     their node models (docs/architecture.md — "beam node evaluation"):
@@ -368,15 +467,22 @@ def beam_leaf_ranking(
     """
     if node_eval not in NODE_EVAL_MODES:
         raise ValueError(f"node_eval must be one of {NODE_EVAL_MODES}, got {node_eval!r}")
+    widths = normalize_beam_widths(beam_width, index.depth)
+    if widths is None:
+        raise ValueError("beam_leaf_ranking needs a beam width; use "
+                         "leaf_log_probs for exact enumeration")
+    temps = normalize_temperatures(temperatures, index.depth)
     q = jnp.asarray(queries, jnp.float32)
     nq = q.shape[0]
-    acc = _node_log_proba(index.model_type, index.levels[0], q)  # (Q, a0)
+    acc = _node_log_proba(index.model_type, index.levels[0], q, temps[0])  # (Q, a0)
     prefix = None  # None == full enumeration so far (acc column j is prefix j)
     for i, params in enumerate(index.levels[1:], start=1):
         arity = index.arities[i]
-        if prefix is None and acc.shape[-1] <= beam_width:
+        width = widths[i - 1]
+        temp = temps[i]
+        if prefix is None and acc.shape[-1] <= width:
             # dense expansion, identical to the leaf_log_probs level step
-            child = _node_log_proba(index.model_type, params, q)  # (N, Q, a)
+            child = _node_log_proba(index.model_type, params, q, temp)  # (N, Q, a)
             joint = jnp.transpose(acc)[:, :, None] + child
             acc = jnp.transpose(joint, (1, 0, 2)).reshape(nq, -1)
             continue
@@ -384,24 +490,26 @@ def beam_leaf_ranking(
             prefix = jnp.broadcast_to(
                 jnp.arange(acc.shape[-1], dtype=jnp.int32)[None, :], acc.shape
             )
-        if acc.shape[-1] > beam_width:
-            acc, sel = jax.lax.top_k(acc, beam_width)
+        if acc.shape[-1] > width:
+            acc, sel = jax.lax.top_k(acc, width)
             prefix = jnp.take_along_axis(prefix, sel, axis=-1)
         if collect_pruned is not None:
             collect_pruned.append((i, np.asarray(prefix)))
         if node_eval == "segmented":
             from repro.kernels import beam_eval
 
-            planes = beam_eval.family_planes(index.model_type, params)
+            planes = beam_eval.family_planes(index.model_type, params, temperature=temp)
             child = beam_eval.node_scores(
                 q, prefix, planes, index.model_type,
-                use_kernel=use_kernel, interpret=interpret,
+                use_kernel=use_kernel, interpret=interpret, temperature=temp,
             )  # (Q, F, arity)
         else:
             own = jax.tree.map(lambda p: p[prefix], params)  # (Q, F, ...) gathered
 
             def per_query(params_q, x_q):
-                return _node_log_proba(index.model_type, params_q, x_q[None, :])[..., 0, :]
+                return _node_log_proba(
+                    index.model_type, params_q, x_q[None, :], temp
+                )[..., 0, :]
 
             child = jax.vmap(per_query)(own, q)  # (Q, F, arity)
         acc = (acc[:, :, None] + child).reshape(nq, -1)
@@ -511,20 +619,22 @@ def rank_visited_buckets(
 
 
 def beam_rank_visited_buckets(
-    index, queries: Array, sizes: Array, stop_count: int, beam_width: int,
+    index, queries: Array, sizes: Array, stop_count: int, beam_width: BeamWidths,
     bucket_topk: Optional[int] = None, node_eval: str = "gather",
     use_kernel: bool = False, interpret: Optional[bool] = None,
+    temperatures: Temperatures = None,
 ):
     """`rank_visited_buckets` for the beam-pruned traversal: rank only the
     beam's surviving leaves and cut at the stop condition. Determinism
     across shards holds exactly as in the dense case — the traversal
-    depends only on replicated node params, so every shard computes the
-    identical ranking (in either ``node_eval`` mode). ``bucket_topk``
-    further truncates the (already best-first) beam ranking to its top K
-    entries."""
+    depends only on replicated node params (and the static
+    ``beam_width`` schedule / ``temperatures``), so every shard computes
+    the identical ranking (in either ``node_eval`` mode).
+    ``bucket_topk`` further truncates the (already best-first) beam
+    ranking to its top K entries."""
     order, _logp = beam_leaf_ranking(
         index, queries, beam_width, node_eval=node_eval,
-        use_kernel=use_kernel, interpret=interpret,
+        use_kernel=use_kernel, interpret=interpret, temperatures=temperatures,
     )
     if bucket_topk is not None and bucket_topk < order.shape[-1]:
         order = order[:, :bucket_topk]
@@ -563,20 +673,22 @@ def extract_rows(order: Array, visited: Array, offsets: Array, cap: int):
 
 def _search_core(
     index: LMI, queries: Array, stop_count: int, cap: int,
-    bucket_topk: Optional[int] = None, beam_width: Optional[int] = None,
+    bucket_topk: Optional[int] = None, beam_width: BeamWidths = None,
     node_eval: str = "gather", use_kernel: bool = False,
-    interpret: Optional[bool] = None,
+    interpret: Optional[bool] = None, temperatures: Temperatures = None,
 ):
     """Traceable search body — shared by every query entry point (the
     single-device `search`/`search_rows`, the fused `filtering` queries;
     the sharded variant composes the same ranking + `extract_rows`
     pieces over shard-local offsets). ``beam_width=None`` enumerates
-    every leaf exactly; an int prunes the level frontier to that beam.
-    ``node_eval``/``use_kernel`` pick the pruned-level node evaluation
-    (`beam_leaf_ranking`; irrelevant for the exact path).
+    every leaf exactly; an int (or a per-level schedule tuple) prunes the
+    level frontier to that beam. ``node_eval``/``use_kernel`` pick the
+    pruned-level node evaluation (`beam_leaf_ranking`; irrelevant for
+    the exact path). ``temperatures``: per-level score calibration,
+    applied in both modes (None == uncalibrated).
     """
     if beam_width is None:
-        logp = leaf_log_probs(index, queries)  # (Q, L)
+        logp = leaf_log_probs(index, queries, temperatures)  # (Q, L)
         order, visited, sz = rank_visited_buckets(
             logp, index.bucket_sizes(), stop_count, bucket_topk
         )
@@ -584,6 +696,7 @@ def _search_core(
         order, visited, sz = beam_rank_visited_buckets(
             index, queries, index.bucket_sizes(), stop_count, beam_width, bucket_topk,
             node_eval=node_eval, use_kernel=use_kernel, interpret=interpret,
+            temperatures=temperatures,
         )
     n_buckets = jnp.sum(visited, axis=-1).astype(jnp.int32)
     rows, valid, n_cands = extract_rows(order, visited, index.bucket_offsets, cap)
@@ -595,7 +708,16 @@ def _search_core(
     return cand_ids, rows, valid, n_buckets, n_cands, runs
 
 
-_search_impl = functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7, 8))(_search_core)
+_search_impl = functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7, 8, 9))(_search_core)
+
+
+def _static_search_args(index, beam_width, temperatures):
+    """Hashable (schedule, temps) for the jitted search — normalization
+    here keeps `search(beam_width=B)` and `search(beam_width=(B,) * k)`
+    on the SAME compiled plan (identical static keys)."""
+    widths = normalize_beam_widths(beam_width, index.depth)
+    temps = normalize_temperatures(temperatures, index.depth)
+    return widths, temps
 
 
 def search(
@@ -604,10 +726,11 @@ def search(
     stop_condition: float = 0.01,
     candidate_cap: Optional[int] = None,
     bucket_topk: Optional[int] = None,
-    beam_width: Optional[int] = None,
+    beam_width: BeamWidths = None,
     node_eval: str = "gather",
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
+    temperatures: Temperatures = None,
 ) -> SearchResult:
     """Batched LMI search.
 
@@ -618,15 +741,19 @@ def search(
     Host-sync-free after warmup: the cap comes from build-time metadata.
     ``bucket_topk`` trades the full (Q, L) leaf argsort for a top-K
     ranking (see `rank_visited_buckets`); ``beam_width`` prunes the
-    level traversal itself to a top-B frontier (`beam_leaf_ranking`),
-    with ``node_eval``/``use_kernel`` picking how pruned levels read
-    their node models (gather vs the segmented beam_eval kernel).
-    None for both = exact.
+    level traversal itself to a top-B frontier (`beam_leaf_ranking`) —
+    a scalar or a per-level width schedule — with
+    ``node_eval``/``use_kernel`` picking how pruned levels read their
+    node models (gather vs the segmented beam_eval kernel) and
+    ``temperatures`` the per-level score calibration
+    (`repro.core.calibrate` fits both; docs/beam_search.md).
+    None for beam/bucket_topk = exact.
     """
     stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
+    widths, temps = _static_search_args(index, beam_width, temperatures)
     cand_ids, _rows, valid, n_buckets, n_cands, runs = _search_impl(
         index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk,
-        beam_width, node_eval, use_kernel, interpret,
+        widths, node_eval, use_kernel, interpret, temps,
     )
     return SearchResult(cand_ids, valid, n_buckets, n_cands, runs)
 
@@ -634,15 +761,17 @@ def search(
 def search_rows(
     index: LMI, queries: Array, stop_condition: float = 0.01,
     candidate_cap: Optional[int] = None, bucket_topk: Optional[int] = None,
-    beam_width: Optional[int] = None, node_eval: str = "gather",
+    beam_width: BeamWidths = None, node_eval: str = "gather",
     use_kernel: bool = False, interpret: Optional[bool] = None,
+    temperatures: Temperatures = None,
 ):
     """Like `search` but returns CSR row indices (for fused filtering that
     gathers from the candidate store without the extra id indirection)."""
     stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
+    widths, temps = _static_search_args(index, beam_width, temperatures)
     cand_ids, rows, valid, n_buckets, n_cands, runs = _search_impl(
         index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk,
-        beam_width, node_eval, use_kernel, interpret,
+        widths, node_eval, use_kernel, interpret, temps,
     )
     return cand_ids, rows, valid
 

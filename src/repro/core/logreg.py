@@ -82,11 +82,15 @@ def fit_many(
     return jax.vmap(lambda kk, x, y, w: f(kk, x, y, weights=w))(keys, xs, labels, ws)
 
 
-def predict_log_proba(weights: Array, bias: Array, x: Array) -> Array:
-    """log softmax(x @ w + b); weights may carry leading batch dims (…, d, k)."""
+def predict_log_proba(weights: Array, bias: Array, x: Array,
+                      temperature: float = 1.0) -> Array:
+    """log softmax((x @ w + b) / T); weights may carry leading batch dims
+    (…, d, k). ``temperature`` is the standard logit-scaling calibration
+    (repro.core.calibrate fits it per LMI level); T = 1 (exact division
+    by 1.0) reproduces the uncalibrated softmax bit for bit."""
     logits = jnp.einsum("nd,...dk->...nk", jnp.asarray(x, jnp.float32), weights)
     logits = logits + bias[..., None, :]
-    return jax.nn.log_softmax(logits, axis=-1)
+    return jax.nn.log_softmax(logits / temperature, axis=-1)
 
 
 def predict_proba(state: LogRegState, x: Array) -> Array:

@@ -60,13 +60,31 @@ class Planes(NamedTuple):
     vecs: tuple
 
 
-def family_planes(model_type: str, params) -> Planes:
+def family_planes(model_type: str, params, temperature: float = 1.0) -> Planes:
     """Canonicalize one stacked level's params (leading N node dim) into
     contraction planes. Pure jnp, runs under jit (kmeans is zero-copy on
-    the matrix side; derived planes are O(N * arity * d) per batch)."""
+    the matrix side; derived planes are O(N * arity * d) per batch).
+
+    ``temperature`` (the per-level calibration of `repro.core.calibrate`)
+    folds into the planes themselves, so the Pallas kernel needs no new
+    operand:
+
+      * kmeans — centroids scale by ``1/sqrt(T)`` and the query is scaled
+        the same way in `node_scores`, so the kernel's
+        ``max(|q'|^2 + |c'|^2 - 2 q'.c', 0)`` epilogue computes exactly
+        ``max(d^2, 0) / T`` (the scaling commutes with the clamp);
+      * gmm / logreg — scores are linear in the planes (the query enters
+        unsquashed), so every matrix and vector plane scales by ``1/T``.
+
+    ``temperature == 1.0`` skips the scaling entirely — planes (and
+    therefore scores) stay bit-identical to the uncalibrated path.
+    """
     if model_type == "kmeans":
         c = jnp.asarray(params["centroids"], jnp.float32)
+        if temperature != 1.0:
+            c = c * jnp.float32(temperature**-0.5)
         return Planes(mats=(c,), vecs=(jnp.sum(c * c, axis=-1),))
+    inv_t = jnp.float32(1.0 / temperature)
     if model_type == "gmm":
         means = jnp.asarray(params["means"], jnp.float32)
         variances = jnp.asarray(params["variances"], jnp.float32)
@@ -74,7 +92,7 @@ def family_planes(model_type: str, params) -> Planes:
         inv = 1.0 / variances
         d = means.shape[-1]
         logdet = jnp.sum(jnp.log(variances), axis=-1)
-        return Planes(
+        planes = Planes(
             mats=(means * inv, inv),
             vecs=(
                 log_weights,
@@ -82,11 +100,18 @@ def family_planes(model_type: str, params) -> Planes:
                 d * gmm_lib._LOG2PI + logdet,
             ),
         )
-    if model_type == "kmeans+logreg":
+    elif model_type == "kmeans+logreg":
         w = jnp.asarray(params["w"], jnp.float32)  # (N, d, arity)
         b = jnp.asarray(params["b"], jnp.float32)
-        return Planes(mats=(jnp.swapaxes(w, -1, -2),), vecs=(b,))
-    raise ValueError(f"unknown model_type {model_type!r}")
+        planes = Planes(mats=(jnp.swapaxes(w, -1, -2),), vecs=(b,))
+    else:
+        raise ValueError(f"unknown model_type {model_type!r}")
+    if temperature != 1.0:
+        planes = Planes(
+            mats=tuple(m * inv_t for m in planes.mats),
+            vecs=tuple(v * inv_t for v in planes.vecs),
+        )
+    return planes
 
 
 _FAMILY_SHAPES = {
@@ -124,7 +149,9 @@ def _pair_metadata(node_sorted: Array, tp: int):
     return load, rix
 
 
-@functools.partial(jax.jit, static_argnames=("model_type", "use_kernel", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("model_type", "use_kernel", "interpret", "temperature")
+)
 def node_scores(
     queries: Array,
     prefix: Array,
@@ -132,6 +159,7 @@ def node_scores(
     model_type: str,
     use_kernel: bool = False,
     interpret: bool | None = None,
+    temperature: float = 1.0,
 ) -> Array:
     """(Q, F, arity) child log-probs of each query's beam frontier.
 
@@ -139,9 +167,18 @@ def node_scores(
     ``use_kernel=True`` the node-sorted segmented Pallas kernel. Both
     produce the `lmi.beam_leaf_ranking` gather-path numbers (same score
     formulas, association order and log-softmax — see `ref`).
+
+    ``temperature`` must match the one the ``planes`` were built with
+    (`family_planes`): the planes carry the full ``1/T`` scaling for
+    gmm/logreg, while kmeans splits it — centroids carry ``1/sqrt(T)``
+    and the query picks up the other ``1/sqrt(T)`` here, jnp-side, so
+    the kernel body sees plain operands and needs no temperature input.
+    ``temperature == 1.0`` is bitwise the uncalibrated evaluation.
     """
     if interpret is None:
         interpret = should_interpret()
+    if model_type == "kmeans" and temperature != 1.0:
+        queries = jnp.asarray(queries, jnp.float32) * jnp.float32(temperature**-0.5)
     if not use_kernel:
         return ref.node_scores_ref(queries, prefix, planes, model_type)
 

@@ -36,6 +36,30 @@ def parse_arities(args) -> tuple[int, ...]:
     return tuple(int(a) for a in args.arity)
 
 
+def parse_beam(value):
+    """--beam accepted forms (build_index and serve share this parser):
+    None (unset), "0" (force exact), "128" (scalar width), or a comma
+    schedule "64,16" (per-level widths, len depth - 1 — the
+    `repro.core.calibrate` fitted form). Returns None | int | tuple."""
+    if value is None:
+        return None
+    vals = [int(p) for p in str(value).split(",") if p.strip() != ""]
+    if not vals:
+        return None
+    if len(vals) == 1:
+        return None if vals[0] <= 0 else vals[0]
+    return tuple(vals)
+
+
+def parse_temperatures(value):
+    """--temperatures comma floats ("1.0,0.7,0.5", one per level) -> tuple,
+    or None when unset."""
+    if value is None:
+        return None
+    vals = [float(p) for p in str(value).split(",") if p.strip() != ""]
+    return tuple(vals) or None
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-proteins", type=int, default=20_000)
@@ -50,13 +74,29 @@ def main():
     ap.add_argument("--store-dtype", choices=("float32", "bfloat16", "int8"), default="float32",
                     help="serving-time candidate-store precision recorded in meta.json "
                          "(the store is re-materialized from the f32 CSR arrays at load)")
-    ap.add_argument("--beam", type=int, default=None,
-                    help="default serving beam width recorded in meta.json "
-                         "(None = exact leaf enumeration)")
+    ap.add_argument("--beam", type=str, default=None,
+                    help="default serving beam recorded in meta.json: a scalar "
+                         "width, a comma schedule '64,16' (one width per pruned "
+                         "level), or 0 for exact leaf enumeration (None = exact). "
+                         "--calibrate overrides this with the fitted schedule.")
     ap.add_argument("--node-eval", choices=("gather", "segmented"), default="gather",
                     help="default beam node-evaluation mode recorded in meta.json "
                          "(how pruned beam levels read node models; see "
                          "docs/architecture.md)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit per-level temperatures + a beam width schedule on a "
+                         "calibration slice of the build set (repro.core.calibrate) "
+                         "and record them in meta.json as the serving defaults "
+                         "(docs/beam_search.md)")
+    ap.add_argument("--target-recall", type=float, default=0.99,
+                    help="recall@k (vs exact enumeration) the calibrated width "
+                         "schedule must reach on the calibration slice")
+    ap.add_argument("--calibration-queries", type=int, default=256,
+                    help="calibration slice size (perturbed build-set rows)")
+    ap.add_argument("--calibrate-k", type=int, default=30,
+                    help="the k of the calibration recall target")
+    ap.add_argument("--calibrate-stop", type=float, default=0.01,
+                    help="stop condition the calibration fits against")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", type=str, required=True)
     args = ap.parse_args()
@@ -92,11 +132,37 @@ def main():
               f"{st.nbytes(include_metadata=False) / 2**20:.1f} MB "
               f"({f32_bytes / max(st.nbytes(include_metadata=False), 1):.1f}x smaller than f32)")
 
+    beam = parse_beam(args.beam)
+    beam_width = beam if isinstance(beam, int) else None
+    beam_widths = beam if isinstance(beam, tuple) else None
+    temperatures = None
+    calibration = None
+    if args.calibrate:
+        from repro.core import calibrate as cal_lib
+
+        t0 = time.time()
+        cal = cal_lib.calibrate(
+            index, n_queries=args.calibration_queries,
+            target_recall=args.target_recall, k=args.calibrate_k,
+            stop_condition=args.calibrate_stop, seed=args.seed,
+        )
+        cal_meta = cal.to_meta()
+        temperatures = cal_meta["temperatures"]
+        beam_widths, beam_width = cal_meta["beam_widths"], None
+        calibration = cal_meta["calibration"]
+        print(f"calibrated in {time.time() - t0:.1f}s: temperatures="
+              f"{temperatures} beam_widths={beam_widths} "
+              f"(recall@{args.calibrate_k} {cal.measured_recall:.4f} on the "
+              f"{cal.n_queries}-query slice; node-eval cost "
+              f"{cal.node_eval_cost} vs exact "
+              f"{cal_lib.node_eval_cost(index.arities)})")
+
     save_index(
         args.out, index,
         n_sections=args.sections, cutoff=args.cutoff, seed=args.seed,
-        store_dtype=args.store_dtype, beam_width=args.beam,
-        node_eval=args.node_eval,
+        store_dtype=args.store_dtype, beam_width=beam_width,
+        beam_widths=beam_widths, temperatures=temperatures,
+        calibration=calibration, node_eval=args.node_eval,
         build_seconds=t_build, embed_seconds=t_embed,
     )
     print(f"saved to {args.out}")
@@ -104,9 +170,16 @@ def main():
 
 def save_index(directory: str, index: lmi.LMI, *, n_sections: int, cutoff: float,
                seed: int = 0, store_dtype: str = "float32",
-               beam_width=None, node_eval: str = "gather", **extra_meta) -> None:
+               beam_width=None, beam_widths=None, temperatures=None,
+               calibration=None, node_eval: str = "gather", **extra_meta) -> None:
     """Persist a built LMI (atomic npz + meta.json, format 2 — the schema
-    is specified in docs/index_format.md)."""
+    is specified in docs/index_format.md).
+
+    The calibration keys (``beam_widths`` schedule, ``temperatures``,
+    ``calibration`` provenance — `repro.core.calibrate.Calibration.to_meta`)
+    are optional: when absent, loaders fall back to the scalar
+    ``beam_width`` and temperature 1.0 (the pre-calibration defaults).
+    """
     os.makedirs(directory, exist_ok=True)
     state = {
         "levels": index.levels,
@@ -115,21 +188,50 @@ def save_index(directory: str, index: lmi.LMI, *, n_sections: int, cutoff: float
         "sorted_embeddings": index.sorted_embeddings,
     }
     ckpt.save(directory, 0, state)
+    meta = dict(
+        format=2,
+        arities=list(index.arities), depth=index.depth,
+        model_type=index.model_type,
+        n_sections=n_sections, cutoff=cutoff,
+        n_objects=index.n_objects, n_leaves=index.n_leaves,
+        max_bucket_size=index.max_bucket_size,
+        store_dtype=store_dtype, beam_width=beam_width,
+        node_eval=node_eval, seed=seed,
+        **extra_meta,
+    )
+    # optional calibration keys: only written when set, so uncalibrated
+    # builds keep the exact pre-calibration meta schema
+    if beam_widths is not None:
+        meta["beam_widths"] = list(beam_widths)
+    if temperatures is not None:
+        meta["temperatures"] = [float(t) for t in temperatures]
+    if calibration is not None:
+        meta["calibration"] = calibration
     with open(os.path.join(directory, "meta.json"), "w") as f:
-        json.dump(
-            dict(
-                format=2,
-                arities=list(index.arities), depth=index.depth,
-                model_type=index.model_type,
-                n_sections=n_sections, cutoff=cutoff,
-                n_objects=index.n_objects, n_leaves=index.n_leaves,
-                max_bucket_size=index.max_bucket_size,
-                store_dtype=store_dtype, beam_width=beam_width,
-                node_eval=node_eval, seed=seed,
-                **extra_meta,
-            ),
-            f, indent=1,
-        )
+        json.dump(meta, f, indent=1)
+
+
+def serving_defaults(meta: dict) -> dict:
+    """Resolve the serving-default knobs from a meta.json dict with the
+    legacy rules (docs/index_format.md): a ``beam_widths`` schedule wins
+    over the scalar ``beam_width``; missing calibration keys mean
+    temperature 1.0 everywhere (``temperatures=None``); missing
+    ``node_eval``/``store_dtype`` fall back to gather / float32. Shared
+    by serve.py and the compat tests so the defaults cannot drift."""
+    schedule = meta.get("beam_widths")
+    if schedule:
+        beam = tuple(int(b) for b in schedule)
+    else:
+        beam = meta.get("beam_width")
+        if beam is not None and beam <= 0:
+            beam = None  # legacy builds recorded --beam 0 as "exact"
+    temps = meta.get("temperatures")
+    return dict(
+        store_dtype=meta.get("store_dtype") or "float32",
+        beam=beam,
+        node_eval=meta.get("node_eval") or "gather",
+        temperatures=tuple(float(t) for t in temps) if temps else None,
+    )
 
 
 def _level_template(model_type: str, n_nodes: int, arity: int, dim: int) -> dict:

@@ -530,6 +530,7 @@ def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
     # shape params may override the config's level stack (depth-3 cells)
     arities = tuple(shape.params.get("arities", cfg.arities))
     beam_width = shape.params.get("beam_width", cfg.beam_width)
+    temperatures = shape.params.get("temperatures", getattr(cfg, "temperatures", None))
     node_eval = shape.params.get("node_eval", getattr(cfg, "node_eval", "gather"))
     a0 = arities[0]
     n_leaves = math.prod(arities)
@@ -609,7 +610,7 @@ def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
             s, q, k=cfg.knn_k, mesh=mesh, stop_condition=cfg.stop_condition,
             query_axes=shard_rules.data_axes(mesh), local_cap=local_cap,
             metric=cfg.filter_metric, n_objects=n_obj, bucket_topk=k_buckets,
-            beam_width=beam_width, node_eval=node_eval,
+            beam_width=beam_width, node_eval=node_eval, temperatures=temperatures,
         )
 
     fn = jax.jit(search)
@@ -622,17 +623,12 @@ def _lmi_cell(spec: configs.ArchSpec, shape: configs.ShapeSpec, mesh: Mesh):
         sharded.global_sizes,
     )
     # useful work: leaf ranking + candidate distances. Exact enumeration
-    # scores every leaf; a beam scores min(beam, frontier) * arity nodes
-    # per level.
-    if beam_width is None:
-        rank_nodes = sum(math.prod(arities[: i + 1]) for i in range(len(arities)))
-    else:
-        rank_nodes = arities[0]
-        frontier = arities[0]
-        for a in arities[1:]:
-            frontier = min(frontier, beam_width)
-            rank_nodes += frontier * a
-            frontier *= a
+    # scores every leaf; a beam (scalar or per-level schedule) scores
+    # min(beam_i, frontier) * arity nodes per level — the shared
+    # node-eval cost model.
+    from repro.core.calibrate import node_eval_cost
+
+    rank_nodes = node_eval_cost(arities, beam_width)
     model_flops = nq * (2.0 * rank_nodes * dim + 2.0 * stop_count * dim)
     return fn, args, model_flops
 

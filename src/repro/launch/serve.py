@@ -13,10 +13,14 @@ absorbs compile time before the timed loop — the reported median/p99
 are steady-state serving latency. `--sharded N` runs the bucket-sharded
 search path on an N-way host mesh (requires XLA_FLAGS device-count
 override); both paths honor `--metric`, `--radius`, `--store-dtype`,
-`--beam` and `--node-eval` — the candidate store is materialized at the
-requested precision at startup (`repro.core.store`), and the beam width
-/ node-evaluation mode default to the build's meta.json ``beam_width``
-/ ``node_eval`` (exact enumeration / per-pair gather).
+`--beam`, `--temperatures` and `--node-eval` — the candidate store is
+materialized at the requested precision at startup (`repro.core.store`),
+and the beam / temperatures / node-evaluation mode default to the
+build's meta.json calibration keys (``beam_widths`` schedule over the
+scalar ``beam_width``; missing keys mean exact enumeration, temperature
+1.0, per-pair gather — docs/index_format.md). ``--beam`` accepts a
+scalar or a comma schedule ("64,16", one width per pruned level —
+docs/beam_search.md).
 """
 from __future__ import annotations
 
@@ -31,7 +35,8 @@ import numpy as np
 
 from repro.core import filtering, lmi
 from repro.core import store as store_lib
-from repro.launch.build_index import load_index
+from repro.launch.build_index import (load_index, parse_beam, parse_temperatures,
+                                      serving_defaults)
 
 
 def main():
@@ -46,9 +51,15 @@ def main():
     ap.add_argument("--store-dtype", choices=store_lib.STORE_DTYPES, default=None,
                     help="candidate-store precision (default: the build's meta.json "
                          "store_dtype, else float32)")
-    ap.add_argument("--beam", type=int, default=None,
-                    help="beam width for the leaf ranking (default: the build's "
-                         "meta.json beam_width; 0 forces exact enumeration)")
+    ap.add_argument("--beam", type=str, default=None,
+                    help="beam for the leaf ranking: a scalar width or a comma "
+                         "schedule '64,16' (one width per pruned level, the "
+                         "repro.core.calibrate fitted form; default: the build's "
+                         "meta.json beam_widths/beam_width; 0 forces exact)")
+    ap.add_argument("--temperatures", type=str, default=None,
+                    help="comma per-level temperatures '1.0,0.7,0.5' for the "
+                         "calibrated leaf ranking (default: the build's meta.json "
+                         "temperatures, else 1.0 everywhere)")
     ap.add_argument("--node-eval", choices=lmi.NODE_EVAL_MODES, default=None,
                     help="how the beam's pruned levels read node models: 'gather' "
                          "(per-pair param gather) or 'segmented' (node-sorted "
@@ -63,15 +74,20 @@ def main():
     index = load_index(args.index)
     with open(os.path.join(args.index, "meta.json")) as f:
         meta = json.load(f)
-    store_dtype = args.store_dtype or meta.get("store_dtype", "float32")
-    beam = meta.get("beam_width") if args.beam is None else args.beam
-    if beam is not None and beam <= 0:
-        beam = None  # --beam 0 == exact
-    node_eval = args.node_eval or meta.get("node_eval", "gather")
+    defaults = serving_defaults(meta)
+    store_dtype = args.store_dtype or defaults["store_dtype"]
+    beam = defaults["beam"] if args.beam is None else parse_beam(args.beam)
+    temperatures = (defaults["temperatures"] if args.temperatures is None
+                    else parse_temperatures(args.temperatures))
+    node_eval = args.node_eval or defaults["node_eval"]
+    beam_str = ("exact" if beam is None
+                else ",".join(map(str, beam)) if isinstance(beam, tuple) else beam)
+    temp_str = ("1.0" if temperatures is None
+                else ",".join(f"{t:g}" for t in temperatures))
     print(f"index: {index.n_objects} objects, {index.n_leaves} buckets "
           f"(depth {index.depth}, arities {'x'.join(map(str, index.arities))}), "
           f"dim {index.dim}, store dtype {store_dtype}, "
-          f"beam {'exact' if beam is None else beam}, node eval {node_eval}")
+          f"beam {beam_str}, temperatures {temp_str}, node eval {node_eval}")
 
     # queries: perturbed database objects (realistic near-duplicate load)
     rng = np.random.default_rng(args.seed)
@@ -94,6 +110,7 @@ def main():
             sharded, q, k=args.k, mesh=mesh, stop_condition=args.stop,
             metric=args.metric, max_radius=args.radius, beam_width=beam,
             node_eval=node_eval, use_kernel=args.use_kernel,
+            temperatures=temperatures,
         ))
     else:
         store = store_lib.from_lmi(index, store_dtype)
@@ -102,6 +119,7 @@ def main():
             index, q, k=args.k, stop_condition=args.stop, metric=args.metric,
             max_radius=args.radius, store=store, beam_width=beam,
             node_eval=node_eval, use_kernel=args.use_kernel,
+            temperatures=temperatures,
         )
 
     # Every batch runs at the fixed (--batch, d) shape: the ragged tail is

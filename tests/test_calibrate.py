@@ -1,0 +1,297 @@
+"""Calibrated beam search (ISSUE 5): temperature semantics per model
+family, width-schedule semantics, bit-exactness of the uncalibrated
+configuration (temperatures 1.0 + constant schedule == PR-4's scalar
+beam, gather and segmented alike), the NLL temperature fit, the width
+fitting, and sharded parity of calibrated beams.
+"""
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import calibrate, filtering, lmi
+from repro.kernels.beam_eval import ops as be_ops
+
+RNG = np.random.default_rng(29)
+
+
+@pytest.fixture(scope="module")
+def depth3_idx(key, protein_embeddings):
+    return lmi.build(key, protein_embeddings, arities=(6, 4, 4), max_iter=8)
+
+
+# ----------------------------------------------------- normalize + cost model
+
+
+def test_normalize_beam_widths():
+    assert lmi.normalize_beam_widths(None, 3) is None
+    assert lmi.normalize_beam_widths(8, 3) == (8, 8)
+    assert lmi.normalize_beam_widths((16, 4), 3) == (16, 4)
+    with pytest.raises(ValueError, match="depth - 1"):
+        lmi.normalize_beam_widths((16, 4, 2), 3)
+    with pytest.raises(ValueError, match=">= 1"):
+        lmi.normalize_beam_widths((16, 0), 3)
+
+
+def test_normalize_temperatures():
+    assert lmi.normalize_temperatures(None, 3) == (1.0, 1.0, 1.0)
+    assert lmi.normalize_temperatures(0.5, 2) == (0.5, 0.5)
+    assert lmi.normalize_temperatures((1.0, 2.0), 2) == (1.0, 2.0)
+    with pytest.raises(ValueError, match="one entry per level"):
+        lmi.normalize_temperatures((1.0,), 2)
+    with pytest.raises(ValueError, match="> 0"):
+        lmi.normalize_temperatures((1.0, -1.0), 2)
+
+
+def test_node_eval_cost_matches_traversal_semantics():
+    """Cost-model cells mirror beam_leaf_ranking: dense while the
+    frontier fits the width, min(frontier, width) * arity after."""
+    a = (64, 64, 64)
+    # exact: a0 + a0*a1 + a0*a1*a2
+    assert calibrate.node_eval_cost(a) == 64 + 64 * 64 + 64 * 64 * 64
+    # scalar 128 >= 64: level 1 dense, level 2 pruned to 128
+    assert calibrate.node_eval_cost(a, 128) == 64 + 64 * 64 + 128 * 64
+    # scalar 16 < 64: both prunes engage
+    assert calibrate.node_eval_cost(a, 16) == 64 + 16 * 64 + 16 * 64
+    # schedule: wide root term, narrow last term
+    assert calibrate.node_eval_cost(a, (6, 36)) == 64 + 6 * 64 + 36 * 64
+    # scalar == constant schedule
+    assert calibrate.node_eval_cost(a, 32) == calibrate.node_eval_cost(a, (32, 32))
+    # a width above the frontier never charges more than dense
+    assert calibrate.node_eval_cost(a, (128, 4096)) == calibrate.node_eval_cost(a)
+
+
+# --------------------------------------------------- temperature semantics
+
+
+@settings(max_examples=9)
+@given(
+    model_type=st.sampled_from(lmi.MODEL_TYPES),
+    temperature=st.floats(min_value=0.2, max_value=5.0),
+)
+def test_temperature_is_logprob_rescaling(key, protein_embeddings, model_type,
+                                          temperature):
+    """Property: for every family, _node_log_proba at temperature T
+    equals log_softmax(T=1 log-probs / T) — the shift-invariant
+    definition the calibration NLL fit relies on."""
+    idx = lmi.build(key, protein_embeddings[:400], arities=(4, 3),
+                    model_type=model_type, max_iter=6)
+    q = jnp.asarray(protein_embeddings[:6])
+    for params in idx.levels:
+        at_t = lmi._node_log_proba(model_type, params, q, temperature)
+        ref = jax.nn.log_softmax(
+            lmi._node_log_proba(model_type, params, q, 1.0) / temperature, axis=-1)
+        np.testing.assert_allclose(np.asarray(at_t), np.asarray(ref),
+                                   rtol=5e-5, atol=5e-5)
+
+
+@pytest.mark.parametrize("model_type", lmi.MODEL_TYPES)
+def test_planes_fold_temperature(model_type):
+    """family_planes(T) + node_scores(T) reproduce the gather path's
+    temperature-T scores (oracle and kernel) — the kernel itself has no
+    temperature operand."""
+    n, a, d, nq, f, temp = 11, 5, 9, 6, 7, 0.6
+    if model_type == "kmeans":
+        params = {"centroids": jnp.asarray(RNG.normal(size=(n, a, d)), jnp.float32)}
+    elif model_type == "gmm":
+        params = {
+            "means": jnp.asarray(RNG.normal(size=(n, a, d)), jnp.float32),
+            "variances": jnp.asarray(RNG.uniform(0.05, 2.0, size=(n, a, d)), jnp.float32),
+            "log_weights": jnp.asarray(RNG.normal(size=(n, a)), jnp.float32),
+        }
+    else:
+        params = {"w": jnp.asarray(RNG.normal(size=(n, d, a)), jnp.float32),
+                  "b": jnp.asarray(RNG.normal(size=(n, a)), jnp.float32)}
+    q = jnp.asarray(RNG.normal(size=(nq, d)), jnp.float32)
+    prefix = jnp.asarray(RNG.integers(0, n, size=(nq, f)), jnp.int32)
+    own = jax.tree.map(lambda p: p[prefix], params)
+
+    def per_query(params_q, x_q):
+        return lmi._node_log_proba(model_type, params_q, x_q[None, :], temp)[..., 0, :]
+
+    gather = jax.vmap(per_query)(own, q)
+    planes = be_ops.family_planes(model_type, params, temperature=temp)
+    for use_kernel in (False, True):
+        seg = be_ops.node_scores(q, prefix, planes, model_type,
+                                 use_kernel=use_kernel, interpret=True,
+                                 temperature=temp)
+        np.testing.assert_allclose(np.asarray(seg), np.asarray(gather),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------ bit-exactness of T=1 / constant
+
+
+@settings(max_examples=6)
+@given(
+    model_type=st.sampled_from(lmi.MODEL_TYPES),
+    beam=st.integers(min_value=2, max_value=6),
+    node_eval=st.sampled_from(lmi.NODE_EVAL_MODES),
+)
+def test_unit_calibration_bitexact_vs_scalar_beam(key, protein_embeddings,
+                                                  model_type, beam, node_eval):
+    """ISSUE 5 acceptance property: temperatures 1.0 + a constant width
+    schedule produce BIT-identical leaf rankings and candidate sets to
+    PR 4's scalar beam, in both node_eval modes, for all 3 families."""
+    idx = lmi.build(key, protein_embeddings[:500], arities=(4, 3, 3),
+                    model_type=model_type, max_iter=6)
+    q = jnp.asarray(protein_embeddings[:6])
+    order_a, logp_a = lmi.beam_leaf_ranking(idx, q, beam, node_eval=node_eval)
+    order_b, logp_b = lmi.beam_leaf_ranking(
+        idx, q, (beam,) * 2, node_eval=node_eval,
+        temperatures=(1.0, 1.0, 1.0))
+    np.testing.assert_array_equal(np.asarray(order_a), np.asarray(order_b))
+    np.testing.assert_array_equal(np.asarray(logp_a), np.asarray(logp_b))
+    res_a = lmi.search(idx, q, stop_condition=0.05, beam_width=beam,
+                       node_eval=node_eval)
+    res_b = lmi.search(idx, q, stop_condition=0.05, beam_width=(beam,) * 2,
+                       node_eval=node_eval, temperatures=(1.0, 1.0, 1.0))
+    np.testing.assert_array_equal(np.asarray(res_a.candidate_ids),
+                                  np.asarray(res_b.candidate_ids))
+    np.testing.assert_array_equal(np.asarray(res_a.valid), np.asarray(res_b.valid))
+
+
+def test_exact_path_unit_temperatures_bitexact(depth3_idx, protein_embeddings):
+    """Exact enumeration with explicit unit temperatures is bitwise the
+    default panel (division by 1.0 is exact)."""
+    q = jnp.asarray(protein_embeddings[:4])
+    a = lmi.leaf_log_probs(depth3_idx, q)
+    b = lmi.leaf_log_probs(depth3_idx, q, temperatures=(1.0, 1.0, 1.0))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -------------------------------------------------- schedule + temps, e2e
+
+
+def test_schedule_and_temperatures_end_to_end(depth3_idx, protein_embeddings):
+    """A wide-root/narrow-leaf schedule with non-unit temperatures runs
+    through knn/range on both node_eval modes and the kernel, with
+    identical answers across evaluation modes (same surviving beams)."""
+    q = protein_embeddings[:8]
+    kwargs = dict(beam_width=(5, 8), temperatures=(1.0, 0.8, 0.7),
+                  stop_condition=0.05)
+    ids_g, d_g = filtering.knn_query(depth3_idx, q, k=6, **kwargs)
+    assert np.asarray(ids_g).shape == (8, 6)
+    ids_s, _ = filtering.knn_query(depth3_idx, q, k=6, node_eval="segmented",
+                                   **kwargs)
+    np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids_g))
+    ids_k, _ = filtering.knn_query(depth3_idx, q, k=6, node_eval="segmented",
+                                   use_kernel=True, interpret=True, **kwargs)
+    np.testing.assert_array_equal(np.asarray(ids_k), np.asarray(ids_g))
+    r = filtering.range_query(depth3_idx, q, radius=0.4, **kwargs)
+    assert np.asarray(r.ids).shape[0] == 8
+
+
+def test_wide_schedule_equals_exact(depth3_idx, protein_embeddings):
+    """Widths >= every frontier never prune: schedule answers equal exact
+    enumeration (temperature 1.0)."""
+    q = protein_embeddings[:6]
+    full = (depth3_idx.arities[0],
+            depth3_idx.arities[0] * depth3_idx.arities[1])
+    ids_e, _ = filtering.knn_query(depth3_idx, q, k=5, stop_condition=0.05)
+    ids_w, _ = filtering.knn_query(depth3_idx, q, k=5, stop_condition=0.05,
+                                   beam_width=full)
+    np.testing.assert_array_equal(np.asarray(ids_w), np.asarray(ids_e))
+
+
+def test_sharded_calibrated_beam_matches_single_device(depth3_idx,
+                                                       protein_embeddings):
+    """Schedule + temperatures are static, replicated inputs: every shard
+    computes the identical calibrated beam and the sharded answer equals
+    the single-device one."""
+    from repro.compat import make_mesh
+    from repro.core.distributed_lmi import shard_index, sharded_knn
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    sharded = shard_index(depth3_idx, 1)
+    q = protein_embeddings[:8]
+    ids_1, _ = filtering.knn_query(
+        depth3_idx, q, k=7, stop_condition=0.05, beam_width=(5, 8),
+        temperatures=(1.0, 0.8, 0.7))
+    ids_s, _ = sharded_knn(
+        sharded, q, k=7, mesh=mesh, stop_condition=0.05, beam_width=(5, 8),
+        temperatures=(1.0, 0.8, 0.7))
+    np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids_1))
+
+
+def test_calibrated_query_zero_host_sync(depth3_idx, protein_embeddings):
+    """The calibrated plan stays host-sync-free: schedule + temperatures
+    are static jit keys, not device data."""
+    q = jax.device_put(jnp.asarray(protein_embeddings[:8], jnp.float32))
+    kwargs = dict(beam_width=(5, 8), temperatures=(1.0, 0.8, 0.7))
+    filtering.knn_query(depth3_idx, q, k=5, **kwargs)
+    with jax.transfer_guard_device_to_host("disallow"):
+        filtering.knn_query(depth3_idx, q, k=5, **kwargs)
+
+
+# ----------------------------------------------------------------- fitting
+
+
+def test_fit_temperatures_improves_nll(depth3_idx):
+    """The fitted temperature's NLL never exceeds T=1's, per level, and
+    the degenerate-fit guard keeps every returned temperature off the
+    grid boundaries."""
+    queries = calibrate.calibration_queries(depth3_idx, 96, noise=0.05, seed=1)
+    temps, nll0, nll1 = calibrate.fit_temperatures(depth3_idx, queries)
+    assert len(temps) == len(nll0) == len(nll1) == depth3_idx.depth
+    grid = calibrate._DEFAULT_TEMP_GRID
+    for t, n0, n1 in zip(temps, nll0, nll1):
+        assert n1 <= n0 + 1e-6
+        assert grid[0] < t < grid[-1]
+
+
+def test_grid_nll_identity():
+    """_grid_nll at T=1 is the plain mean NLL of the targets."""
+    scores = jax.nn.log_softmax(
+        jnp.asarray(RNG.normal(size=(32, 7)), jnp.float32), axis=-1)
+    target = jnp.asarray(RNG.integers(0, 7, size=(32,)), jnp.int32)
+    nll = calibrate._grid_nll(scores, target, jnp.asarray([1.0], jnp.float32))
+    ref = -np.mean(np.take_along_axis(np.asarray(scores),
+                                      np.asarray(target)[:, None], 1))
+    np.testing.assert_allclose(np.asarray(nll)[0], ref, rtol=1e-6)
+
+
+def test_calibrate_end_to_end(depth3_idx, protein_embeddings):
+    """calibrate() returns a well-formed Calibration whose fitted config
+    meets its own measured recall on the slice, costs no more than
+    exact enumeration, and actually serves queries."""
+    target = 0.9
+    cal = calibrate.calibrate(depth3_idx, n_queries=72, target_recall=target,
+                              k=5, stop_condition=0.05)
+    assert len(cal.temperatures) == depth3_idx.depth
+    assert len(cal.beam_widths) == depth3_idx.depth - 1
+    frontiers = [math.prod(depth3_idx.arities[:i + 1])
+                 for i in range(depth3_idx.depth - 1)]
+    assert all(1 <= w <= f for w, f in zip(cal.beam_widths, frontiers))
+    assert cal.measured_recall >= target
+    assert cal.node_eval_cost <= calibrate.node_eval_cost(depth3_idx.arities)
+    # the persisted form round-trips through the serving-defaults rules
+    meta = cal.to_meta()
+    assert len(meta["temperatures"]) == depth3_idx.depth
+    assert meta["calibration"]["measured_recall"] == pytest.approx(
+        cal.measured_recall, abs=1e-5)
+    ids, _ = filtering.knn_query(
+        depth3_idx, protein_embeddings[:4], k=5, stop_condition=0.05,
+        beam_width=cal.beam_widths, temperatures=cal.temperatures)
+    assert np.asarray(ids).shape == (4, 5)
+
+
+def test_answer_prefix_ranks_survival_is_sufficient(depth3_idx,
+                                                    protein_embeddings):
+    """The closed-form survival condition underestimates: any schedule
+    it predicts feasible measures at least as well when actually run."""
+    q = calibrate.calibration_queries(depth3_idx, 48, seed=3)
+    ids_exact = np.asarray(filtering.knn_query(
+        depth3_idx, q, k=5, stop_condition=0.05)[0])
+    ranks, valid = calibrate.answer_prefix_ranks(depth3_idx, q, ids_exact, None)
+    assert len(ranks) == depth3_idx.depth - 1
+    for w in ((3, 6), (5, 10)):
+        pred = calibrate._predicted_recall(ranks, valid, w)
+        ids_b = np.asarray(filtering.knn_query(
+            depth3_idx, q, k=5, stop_condition=0.05, beam_width=w)[0])
+        meas = calibrate._answer_recall(ids_exact, ids_b)
+        assert meas >= pred - 1e-9, (w, pred, meas)

@@ -1,0 +1,121 @@
+"""meta.json forward/backward compatibility (ISSUE 5 satellite).
+
+Format-2 index directories written before the calibration keys existed
+(no ``node_eval``, ``beam_widths``, ``temperatures``, ``calibration``)
+must round-trip through `load_index` and search identically to the
+pre-PR-5 behavior — for all 3 model families — and calibrated metas
+must resolve through the one shared `serving_defaults` rule set.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import filtering, lmi
+from repro.launch.build_index import (load_index, parse_beam,
+                                      parse_temperatures, save_index,
+                                      serving_defaults)
+
+
+def _strip_meta_keys(directory, keys):
+    path = os.path.join(directory, "meta.json")
+    meta = json.load(open(path))
+    for k in keys:
+        meta.pop(k, None)
+    with open(path, "w") as f:
+        json.dump(meta, f)
+    return meta
+
+
+@pytest.mark.parametrize("model_type", lmi.MODEL_TYPES)
+def test_format2_without_calibration_keys_round_trips(tmp_path, key,
+                                                      protein_embeddings,
+                                                      model_type):
+    """A format-2 file with the optional node_eval/calibration keys
+    stripped (i.e. a pre-PR-5 checkpoint) loads and answers queries
+    identically to the in-memory index, for every model family, in
+    exact and scalar-beam modes."""
+    d = str(tmp_path / model_type)
+    idx = lmi.build(key, protein_embeddings[:400], arities=(4, 3, 3),
+                    model_type=model_type, max_iter=6)
+    save_index(d, idx, n_sections=10, cutoff=50.0, beam_width=4)
+    meta = _strip_meta_keys(d, ["node_eval", "beam_widths", "temperatures",
+                                "calibration"])
+    assert meta["format"] == 2
+    assert "temperatures" not in meta and "beam_widths" not in meta
+
+    loaded = load_index(d)
+    defaults = serving_defaults(meta)
+    # legacy-default rules: scalar beam survives, everything else falls
+    # back to the uncalibrated pre-PR-5 behavior
+    assert defaults["beam"] == 4
+    assert defaults["temperatures"] is None
+    assert defaults["node_eval"] == "gather"
+    q = protein_embeddings[:6]
+    for beam in (None, defaults["beam"]):
+        ids_mem, d_mem = filtering.knn_query(idx, q, k=5, stop_condition=0.1,
+                                             beam_width=beam)
+        ids_dsk, d_dsk = filtering.knn_query(loaded, q, k=5, stop_condition=0.1,
+                                             beam_width=beam,
+                                             temperatures=defaults["temperatures"],
+                                             node_eval=defaults["node_eval"])
+        np.testing.assert_array_equal(np.asarray(ids_dsk), np.asarray(ids_mem))
+        fin = np.isfinite(np.asarray(d_mem))
+        np.testing.assert_array_equal(np.asarray(d_dsk)[fin], np.asarray(d_mem)[fin])
+
+
+def test_calibrated_meta_round_trips(tmp_path, key, protein_embeddings):
+    """Calibration keys written by save_index resolve through
+    serving_defaults into the schedule/temperature kwargs, and the
+    loaded index serves with them."""
+    from repro.core import calibrate
+
+    d = str(tmp_path / "cal")
+    idx = lmi.build(key, protein_embeddings[:500], arities=(4, 3, 3), max_iter=6)
+    cal = calibrate.calibrate(idx, n_queries=48, target_recall=0.85, k=5,
+                              stop_condition=0.05)
+    cal_meta = cal.to_meta()
+    save_index(d, idx, n_sections=10, cutoff=50.0,
+               beam_widths=cal_meta["beam_widths"],
+               temperatures=cal_meta["temperatures"],
+               calibration=cal_meta["calibration"])
+    meta = json.load(open(os.path.join(d, "meta.json")))
+    assert meta["beam_widths"] == cal_meta["beam_widths"]
+    assert meta["temperatures"] == cal_meta["temperatures"]
+    assert meta["calibration"]["n_queries"] == cal.n_queries
+
+    defaults = serving_defaults(meta)
+    assert defaults["beam"] == tuple(cal.beam_widths)
+    assert defaults["temperatures"] == tuple(cal_meta["temperatures"])
+    loaded = load_index(d)
+    ids, _ = filtering.knn_query(loaded, protein_embeddings[:4], k=5,
+                                 stop_condition=0.05, beam_width=defaults["beam"],
+                                 temperatures=defaults["temperatures"])
+    assert np.asarray(ids).shape == (4, 5)
+    # a beam_widths schedule wins over any scalar beam_width key
+    meta["beam_width"] = 2
+    assert serving_defaults(meta)["beam"] == tuple(cal.beam_widths)
+
+
+def test_serving_defaults_legacy_meta():
+    """A minimal legacy meta dict (format 1 era: no store/beam/calibration
+    keys at all) resolves to the uncalibrated defaults."""
+    defaults = serving_defaults({"arities": [32, 64], "model_type": "kmeans"})
+    assert defaults == dict(store_dtype="float32", beam=None,
+                            node_eval="gather", temperatures=None)
+    # pre-PR-5 builds recorded `--beam 0` verbatim; it still means exact
+    assert serving_defaults({"beam_width": 0})["beam"] is None
+    assert serving_defaults({"beam_width": 8})["beam"] == 8
+
+
+def test_parse_beam_and_temperatures():
+    assert parse_beam(None) is None
+    assert parse_beam("0") is None
+    assert parse_beam("8") == 8
+    assert parse_beam(8) == 8
+    assert parse_beam("64,16") == (64, 16)
+    assert parse_temperatures(None) is None
+    assert parse_temperatures("1.0,0.8,0.7") == (1.0, 0.8, 0.7)

@@ -24,8 +24,9 @@ def test_registry_shapes_cover_assignment():
     total = sum(len(configs.get(a).shapes) for a in configs.ASSIGNED_ARCHS)
     assert total == 40
     # + the paper's own arch (2-level build/search + the depth-3 beam
-    # cell and its segmented node-eval variant)
-    assert len(configs.get("lmi-protein").shapes) == 4
+    # cell, its segmented node-eval variant, and the calibrated
+    # schedule/temperatures cell)
+    assert len(configs.get("lmi-protein").shapes) == 5
 
 
 def test_all_full_configs_construct():

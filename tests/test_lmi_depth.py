@@ -24,8 +24,8 @@ def _reference_two_level_search(index, queries, stop_condition):
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi.query_plan_params(index, stop_condition, None)
-    l1 = lmi._node_log_proba(index.model_type, index.l1_params, q)  # (Q, a0)
-    l2 = lmi._node_log_proba(index.model_type, index.l2_params, q)  # (a0, Q, a1)
+    l1 = lmi._node_log_proba(index.model_type, index.levels[0], q)  # (Q, a0)
+    l2 = lmi._node_log_proba(index.model_type, index.levels[1], q)  # (a0, Q, a1)
     joint = l1.T[:, :, None] + l2
     logp = jnp.transpose(joint, (1, 0, 2)).reshape(q.shape[0], -1)
     order = jnp.argsort(-logp, axis=-1)
@@ -270,9 +270,24 @@ def test_knn_k_larger_than_candidate_cap(key, protein_embeddings):
 
 
 def test_deprecated_two_level_properties(small_lmi, depth3_lmi):
-    assert small_lmi.l1_params is small_lmi.levels[0]
-    assert small_lmi.l2_params is small_lmi.levels[1]
-    assert depth3_lmi.l1_params is depth3_lmi.levels[0]
+    """l1_params / l2_params still alias levels[0:2] but now warn
+    (migration table: docs/architecture.md)."""
+    with pytest.warns(DeprecationWarning, match="l1_params is deprecated"):
+        assert small_lmi.l1_params is small_lmi.levels[0]
+    with pytest.warns(DeprecationWarning, match="levels\\[1\\]"):
+        assert small_lmi.l2_params is small_lmi.levels[1]
+    with pytest.warns(DeprecationWarning):
+        assert depth3_lmi.l1_params is depth3_lmi.levels[0]
+
+
+def test_deprecated_two_level_properties_sharded(depth3_lmi):
+    from repro.core.distributed_lmi import shard_index
+
+    sharded = shard_index(depth3_lmi, 2)
+    with pytest.warns(DeprecationWarning, match="l1_params is deprecated"):
+        assert sharded.l1_params is sharded.levels[0]
+    with pytest.warns(DeprecationWarning, match="l2_params is deprecated"):
+        assert sharded.l2_params is sharded.levels[1]
 
 
 def test_save_load_round_trip_depth3(tmp_path, key, protein_embeddings):
