@@ -57,6 +57,15 @@ beam:    dense levels (frontier <= beam: nothing pruned yet) cost the
          node-sorted segmented evaluation — plus (Q, B*a) score
          writes and the final (much smaller) sort.
 
+ISSUE 6 extends the measured node-eval section with the prebuilt-planes
+variant: `repro.core.planes.IndexPlanes` materializes the canonical
+planes once at build/load, so the once-per-batch ``planes_bytes``
+canonicalization read disappears from the segmented byte budget
+(``segment_stats(..., prebuilt_planes=True)``). The acceptance entry
+asserts the all-in measured reduction reaches
+PREBUILT_MIN_REDUCTION = 10x at the (64, 64, 64) / beam-128 point and
+that serving *with* the prebuilt planes answers bit-identically.
+
 Writes BENCH_depth_beam.json; CI validates it like the store-dtype
 sweep, and the acceptance entry asserts the ISSUE 3 bound: at the
 >= 262,144-leaf config the serving beam cuts modeled ranking FLOPs and
@@ -87,6 +96,11 @@ MIN_REDUCTION = 10.0
 MAX_RECALL_DROP = 0.02
 # ISSUE 4 acceptance: measured node-params bytes, segmented vs gather
 NODE_EVAL_MIN_REDUCTION = 5.0
+# ISSUE 6 acceptance: prebuilt planes (build-time canonicalization,
+# `repro.core.planes`) remove the once-per-batch planes_bytes term from
+# the segmented path — the all-in measured reduction at the same
+# operating point must reach 10x (it was ~6.7x with per-batch planes)
+PREBUILT_MIN_REDUCTION = 10.0
 # ISSUE 5 acceptance: calibrated schedule vs the uncalibrated scalar
 # ACCEPT_BEAM config — recall@30 >= CAL_TARGET_RECALL at >= 2x lower
 # modeled node-eval cost. The fit targets a slightly higher recall on
@@ -160,24 +174,30 @@ def measured_node_eval(index, queries, beam: int) -> dict:
     lmi_lib.beam_leaf_ranking(index, queries, beam, collect_pruned=collected)
     n_q, dim = queries.shape
     n_mats, _nv, raw_floats = beam_eval.ops._FAMILY_SHAPES[index.model_type]
-    gather = segmented = bound = 0
+    gather = segmented = prebuilt = bound = 0
     levels = []
     for level, prefix in collected:
         arity = index.arities[level]
         n_nodes = math.prod(index.arities[:level])
         st = beam_eval.segment_stats(prefix, index.model_type, arity, dim, n_nodes)
+        pre = beam_eval.segment_stats(prefix, index.model_type, arity, dim,
+                                      n_nodes, prebuilt_planes=True)
         gather += st["gather_bytes"]
         segmented += st["segmented_bytes"]
+        prebuilt += pre["segmented_bytes"]
         bound += min(st["n_pairs"], n_nodes) * n_mats * arity * dim * 4
-        levels.append({"level": level, **st})
+        levels.append({"level": level, **st,
+                       "segmented_prebuilt_bytes": pre["segmented_bytes"]})
     return {
         "serving_queries": n_q,
         "pruned_levels": [lv["level"] for lv in levels],
         "per_level": levels,
         "gather_bytes_per_query": gather / n_q,
         "segmented_bytes_per_query": segmented / n_q,
+        "segmented_prebuilt_bytes_per_query": prebuilt / n_q,
         "modeled_bound_bytes_per_query": bound / n_q,
         "measured_reduction": gather / segmented if segmented else None,
+        "measured_reduction_prebuilt": gather / prebuilt if prebuilt else None,
     }
 
 
@@ -303,6 +323,31 @@ def main() -> None:
         f"measured node-params reduction {ne_red:.1f} < {NODE_EVAL_MIN_REDUCTION}"
     )
     assert seg_match, "segmented beam answers diverge from gather mode"
+
+    # --------------- ISSUE 6 acceptance: prebuilt planes + MXU epilogue
+    from repro.core import planes as planes_lib
+
+    pre_red = ne["measured_reduction_prebuilt"]
+    planes3 = planes_lib.from_lmi(index3)
+    ids_planes = np.asarray(filtering.knn_query(
+        index3, q, K, STOP, beam_width=ACCEPT_BEAM, node_eval="segmented",
+        planes=planes3)[0])
+    planes_match = bool((ids_planes == ids_seg).all())
+    results["acceptance"]["node_eval_prebuilt_bytes_per_query"] = (
+        ne["segmented_prebuilt_bytes_per_query"])
+    results["acceptance"]["node_eval_prebuilt_measured_reduction"] = pre_red
+    results["acceptance"]["prebuilt_planes_ids_match"] = planes_match
+    print(f"# prebuilt planes @ {tag} beam={ACCEPT_BEAM} (measured): "
+          f"segmented {ne['segmented_bytes_per_query']:.3e} B/q -> "
+          f"{ne['segmented_prebuilt_bytes_per_query']:.3e} B/q "
+          f"(gather reduction x{ne_red:.1f} -> x{pre_red:.1f}); "
+          f"planes answers match: {planes_match}")
+    assert pre_red >= PREBUILT_MIN_REDUCTION, (
+        f"prebuilt-planes measured reduction {pre_red:.1f} < "
+        f"{PREBUILT_MIN_REDUCTION} at the "
+        f"{'x'.join(map(str, ACCEPT_ARITIES))} beam-{ACCEPT_BEAM} point"
+    )
+    assert planes_match, "prebuilt-planes answers diverge from per-batch planes"
 
     # ------------------------ ISSUE 5 acceptance: calibrated beam search
     from repro.core import calibrate as cal_lib

@@ -19,6 +19,13 @@ bytes, recall@30 vs the f32 store, and the bucket-run gather stats
 candidate rows ~ per-row DMA count). The int8 sweep asserts the
 acceptance bound recall@30 >= 0.95.
 
+ISSUE 6 adds measured per-tile DMA counts (``gather_dma_stats`` JSON
+key): `repro.kernels.lmi_filter.ops.gather_dma_stats` replays the
+kernel's three gather strategies — per-row fallback, fixed SEG-8
+segment windows, per-run variable-length descriptors — over the *real*
+`BucketRuns` metadata of the benchmark query batch, and the run asserts
+the descriptor grid issues >= 4x fewer DMAs than the SEG-8 path.
+
 Wall-clock caveat: on CPU the fused variant runs under the Pallas
 *interpreter* (the kernel body is emulated op by op), so its wall time
 is not the hardware story — the modeled HBM bytes are the
@@ -52,6 +59,10 @@ RADIUS = 0.3
 RADIUS_SCALE = 0.7  # fig5 P90 calibration for Euclidean
 STOP = 0.01
 INT8_MIN_RECALL = 0.95  # ISSUE 2 acceptance bound
+# ISSUE 6 acceptance bound: the per-run descriptor gather must issue at
+# least this many times fewer DMAs than the fixed SEG-8 segment path,
+# measured (gather_dma_stats replay) on the real 20k run metadata
+DESC_MIN_DMA_REDUCTION = 4.0
 
 
 def _timed(fn):
@@ -178,6 +189,24 @@ def main() -> None:
     }
     print(f"# gather runs/query={runs_per_q:.1f} rows/query={rows_per_q:.1f} "
           f"(run-length DMA reduction {rows_per_q / max(runs_per_q, 1.0):.1f}x)")
+
+    # measured per-tile DMA counts (ISSUE 6): replay the kernel's three
+    # gather strategies — per-row fallback, SEG-8 segment windows, per-run
+    # descriptors — over the real run metadata of this query batch
+    from repro.kernels.lmi_filter import ops as lf_ops
+
+    _, rows, valid = lmi.search_rows(index, q, stop_condition=STOP)
+    dma = lf_ops.gather_dma_stats(np.asarray(rows), np.asarray(valid), d,
+                                  runs=res.runs)
+    results["gather_dma_stats"] = dma
+    print(f"# measured DMAs/batch: row={dma['row_dmas']} "
+          f"seg={dma['seg_dmas']} desc={dma['desc_dmas']} "
+          f"(desc vs seg {dma['dma_reduction_desc_vs_seg']:.1f}x, "
+          f"desc vs row {dma['dma_reduction_desc_vs_row']:.1f}x)")
+    assert dma["dma_reduction_desc_vs_seg"] >= DESC_MIN_DMA_REDUCTION, (
+        f"descriptor gather DMA reduction {dma['dma_reduction_desc_vs_seg']:.2f}x "
+        f"< acceptance bound {DESC_MIN_DMA_REDUCTION}x vs the SEG-8 path"
+    )
 
     ids_f32 = np.asarray(filtering.knn_query(index, q, K, STOP, use_kernel=True)[0])
     results["store_sweep"] = {}

@@ -200,3 +200,46 @@ def from_compiled(
         ),
         raw_hbm_bytes=hc_raw.hbm_bytes,
     )
+
+
+def gather_dma_model(n_queries: int, cap: int, d: int, itemsize: int = 4,
+                     mean_run: float = 32.0, runs_per_query: float = 8.0,
+                     bc: int = 256, seg: int = 8) -> dict:
+    """Closed-form DMA-count model of the three candidate-gather
+    strategies of `repro.kernels.lmi_filter` (the measured counterpart is
+    `lmi_filter.ops.gather_dma_stats`, which replays real run metadata).
+
+    Per (bq=8 query rows x bc candidate slots) tile:
+
+      * row gather        — one DMA per candidate row: ``cap`` per query;
+      * SEG-``seg`` segments — contiguity detected in fixed windows, so a
+        run of length L costs ``ceil(L / seg)`` DMAs (plus per-row
+        stragglers for broken windows, not modeled here);
+      * run descriptors   — ``popcount`` of each run∩tile intersection
+        length, ~``log2(min(L, bc)) / 2`` expected set bits, upper
+        bounded by splitting each run at tile boundaries.
+
+    The model is deliberately optimistic for seg (no broken windows) so
+    the measured reduction in the benchmark can only be larger; use it
+    for sizing, use `gather_dma_stats` for acceptance numbers.
+    """
+    import math
+
+    n_tiles = math.ceil(cap / bc)
+    row = n_queries * cap
+    seg_dmas = n_queries * runs_per_query * math.ceil(mean_run / seg)
+    # each run crosses at most ceil(L/bc) tile boundaries; each fragment
+    # costs its popcount, expected ~ half the bit width of its length
+    frag = max(mean_run, 1.0)
+    popcount_est = max(int(math.log2(min(frag, bc))) / 2.0, 1.0)
+    desc = n_queries * runs_per_query * (
+        math.ceil(mean_run / bc) * popcount_est)
+    return dict(
+        n_tiles=n_tiles,
+        row_dmas=int(row),
+        seg_dmas=int(seg_dmas),
+        desc_dmas=int(math.ceil(desc)),
+        gather_bytes=int(n_queries * cap * d * itemsize),
+        modeled_reduction_desc_vs_seg=float(seg_dmas / max(desc, 1.0)),
+        modeled_reduction_desc_vs_row=float(row / max(desc, 1.0)),
+    )

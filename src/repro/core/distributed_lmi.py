@@ -174,6 +174,7 @@ def _local_candidates(
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
     temperatures: "lmi_lib.Temperatures" = None,
+    planes=None,
 ):
     """Candidate CSR rows owned by this shard, in global probability order.
 
@@ -181,9 +182,13 @@ def _local_candidates(
     replicated *global* sizes — identical on every shard (the beam
     traversal likewise depends only on replicated node params and the
     static ``beam_width`` schedule / ``temperatures``, whatever
-    ``node_eval`` mode evaluates them) — and the slot->row walk is
-    `lmi.extract_rows` over the shard-local offsets, so each shard
-    materializes only its own share of the candidate set.
+    ``node_eval`` mode evaluates them — prebuilt ``planes`` are
+    replicated too) — and the slot->row walk is `lmi.extract_rows` over
+    the shard-local offsets, so each shard materializes only its own
+    share of the candidate set. Also returns the shard-local
+    `lmi.BucketRuns` (run r of the ranking covers this shard's rows
+    ``local_offsets[order] : + local_sizes[order]``), feeding the fused
+    filter's per-run descriptor gather exactly as on one device.
     """
     index_stub = _ProbStub(model_type, levels, arities)
     if beam_width is None:
@@ -195,10 +200,15 @@ def _local_candidates(
         order, visited, _sz = lmi_lib.beam_rank_visited_buckets(
             index_stub, queries, global_sizes, stop_count, beam_width, bucket_topk,
             node_eval=node_eval, use_kernel=use_kernel, interpret=interpret,
-            temperatures=temperatures,
+            temperatures=temperatures, planes=planes,
         )
     rows, valid, _n = lmi_lib.extract_rows(order, visited, local_offsets, cap)
-    return rows, valid
+    local_sizes = local_offsets[1:] - local_offsets[:-1]
+    runs = lmi_lib.BucketRuns(
+        starts=local_offsets[order].astype(jnp.int32),
+        lengths=jnp.where(visited, local_sizes[order], 0).astype(jnp.int32),
+    )
+    return rows, valid, runs
 
 
 class _ProbStub:
@@ -233,6 +243,7 @@ def sharded_knn(
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
     temperatures: "lmi_lib.Temperatures" = None,
+    planes=None,
 ):
     """Distributed kNN: queries sharded over ``query_axes``, DB buckets over
     ``shard_axis``. Exact vs. the single-device result (for the same
@@ -257,7 +268,11 @@ def sharded_knn(
     identical on every shard. ``node_eval="segmented"`` evaluates the
     beam's pruned levels through `repro.kernels.beam_eval` (node-sorted
     segmented params reads) instead of per-pair gathers; the replicated
-    params still yield the identical beam on every shard.
+    params still yield the identical beam on every shard. ``planes``:
+    optional prebuilt `repro.core.planes.IndexPlanes` for the segmented
+    mode — validated against the store revision (the sharded analog of
+    ``index_revision``) and the temperature schedule, then replicated to
+    every shard like the level stack.
 
     ``use_kernel=True`` runs the per-shard filtering through the fused
     `repro.kernels.lmi_filter` Pallas kernel for *every* store dtype —
@@ -279,6 +294,17 @@ def sharded_knn(
         interpret = should_interpret()
     beam_width = lmi_lib.normalize_beam_widths(beam_width, sharded.depth)
     temperatures = lmi_lib.normalize_temperatures(temperatures, sharded.depth)
+    if planes is not None:
+        import types
+
+        from repro.core import planes as planes_lib
+
+        # the sharded analog of index_revision is the store's revision
+        planes = planes_lib.validate(
+            types.SimpleNamespace(index_revision=sharded.store.revision,
+                                  depth=sharded.depth),
+            planes, temperatures,
+        )
     from repro.core import filtering
 
     store_dtype = sharded.store.dtype
@@ -286,7 +312,8 @@ def sharded_knn(
     has_scales = sharded.store.scales is not None
     radius = _BIG if max_radius is None else jnp.float32(max_radius * radius_scale)
 
-    def local_fn(queries_l, radius_l, data, scales, ids, offsets, levels, gsizes):
+    def local_fn(queries_l, radius_l, data, scales, ids, offsets, levels, gsizes,
+                 planes_l):
         # shard_map passes block-local arrays with a size-1 shard dim
         local_store = store_lib.CandidateStore(
             dtype=store_dtype,
@@ -296,17 +323,17 @@ def sharded_knn(
             scales=scales[0] if has_scales else None,
             revision=store_revision,
         )
-        rows, valid = _local_candidates(
+        rows, valid, runs = _local_candidates(
             sharded.model_type, levels, sharded.arities, gsizes,
             local_store.offsets, queries_l, stop_count, local_cap,
             bucket_topk=bucket_topk, beam_width=beam_width,
             node_eval=node_eval, use_kernel=use_kernel, interpret=interpret,
-            temperatures=temperatures,
+            temperatures=temperatures, planes=planes_l,
         )
         kk = min(k, local_cap)
         local_d, top_slot = filtering.filter_topk(
             local_store, queries_l, rows, valid, kk, metric=metric,
-            use_kernel=use_kernel, interpret=interpret,
+            use_kernel=use_kernel, interpret=interpret, runs=runs,
         )
         idx = jnp.maximum(top_slot, 0)
         local_ids = jnp.take_along_axis(local_store.ids[rows], idx, axis=1)
@@ -335,10 +362,12 @@ def sharded_knn(
     scale_spec = None if not has_scales else P(shard_axis, None)
     rep = P()
 
+    planes_spec = None if planes is None else rep
     fn = _shard_map(
         local_fn,
         mesh,
-        (qspec, rep, shard_spec_emb, scale_spec, shard_spec_ids, shard_spec_off, rep, rep),
+        (qspec, rep, shard_spec_emb, scale_spec, shard_spec_ids, shard_spec_off,
+         rep, rep, planes_spec),
         (qspec, qspec),
     )
     return fn(
@@ -350,4 +379,5 @@ def sharded_knn(
         sharded.store.offsets,
         sharded.levels,
         sharded.global_sizes,
+        planes,
     )

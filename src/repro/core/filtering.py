@@ -80,29 +80,39 @@ class FilterResult(NamedTuple):
 
 
 def filter_range(store, queries, rows, valid, *, metric: str = "euclidean",
-                 use_kernel: bool = False, interpret: Optional[bool] = None):
+                 use_kernel: bool = False, interpret: Optional[bool] = None,
+                 runs=None):
     """(Q, C) f32 distances of each query to its candidate rows of
     ``store`` — THE shared filtering primitive (single-device + sharded).
-    Invalid slots get +3.4e38."""
+    Invalid slots get +3.4e38. ``runs``: optional `lmi.BucketRuns` gather
+    metadata — the kernel backend then gathers candidates with one
+    variable-length DMA chain per bucket run (descriptor grid) instead of
+    rediscovering fixed-width segments from the rows; the oracle ignores
+    it (distances depend only on rows/valid)."""
     if interpret is None:
         interpret = should_interpret()
     if use_kernel:
         return lf_ops.lmi_filter_range(queries, rows, valid, store.data, metric=metric,
-                                       interpret=interpret, scales=store.scales)
+                                       interpret=interpret, scales=store.scales,
+                                       runs=runs)
     return lf_ref.lmi_filter_ref(queries, rows, valid, store.data, metric=metric,
                                  scales=store.scales)
 
 
 def filter_topk(store, queries, rows, valid, k: int, *, metric: str = "euclidean",
-                use_kernel: bool = False, interpret: Optional[bool] = None):
+                use_kernel: bool = False, interpret: Optional[bool] = None,
+                runs=None):
     """Top-k smallest candidate distances over ``store``: -> (dist (Q, k)
     ascending, slot (Q, k) into the candidate axis). The sharded path
-    calls this per shard on its block-local store."""
+    calls this per shard on its block-local store. ``runs``: optional
+    `lmi.BucketRuns` for the kernel's per-run descriptor gather (see
+    `filter_range`)."""
     if interpret is None:
         interpret = should_interpret()
     if use_kernel:
         return lf_ops.lmi_filter_topk(queries, rows, valid, store.data, k, metric=metric,
-                                      interpret=interpret, scales=store.scales)
+                                      interpret=interpret, scales=store.scales,
+                                      runs=runs)
     return lf_ref.lmi_filter_topk_ref(queries, rows, valid, store.data, k, metric=metric,
                                       scales=store.scales)
 
@@ -120,7 +130,7 @@ def filter_topk(store, queries, rows, valid, k: int, *, metric: str = "euclidean
 def _query_impl(
     index, store, queries, radius, *, stop_count, cap, metric, mode, k,
     use_kernel, interpret, bucket_topk, beam_width=None, node_eval="gather",
-    temperatures=None,
+    temperatures=None, planes=None,
 ):
     """One compiled plan for the whole query: search -> filter -> predicate.
 
@@ -130,15 +140,19 @@ def _query_impl(
     ``use_kernel`` covers both fused stages: the beam's segmented node
     evaluation (when ``node_eval="segmented"``) and the candidate filter.
     ``beam_width`` / ``temperatures`` arrive pre-normalized (hashable
-    tuples) from the entry points below.
+    tuples) from the entry points below; ``planes`` (prebuilt
+    `repro.core.planes.IndexPlanes`, already validated) is a traced
+    pytree. The search's `BucketRuns` feed the fused filter's per-run
+    descriptor gather, so the kernel issues ~one DMA chain per visited
+    bucket instead of one per fixed-width segment.
     """
-    cand_ids, rows, valid, _nb, _nc, _runs = lmi_lib._search_core(
+    cand_ids, rows, valid, _nb, _nc, runs = lmi_lib._search_core(
         index, queries, stop_count, cap, bucket_topk, beam_width,
-        node_eval, use_kernel, interpret, temperatures,
+        node_eval, use_kernel, interpret, temperatures, planes,
     )
     if mode == "range":
         d = filter_range(store, queries, rows, valid, metric=metric,
-                         use_kernel=use_kernel, interpret=interpret)
+                         use_kernel=use_kernel, interpret=interpret, runs=runs)
         mask = d <= radius
         return jnp.where(mask, cand_ids, -1), d, mask
     # ---- kNN: top-k then range-limit (equivalent to limit-then-top-k,
@@ -148,7 +162,8 @@ def _query_impl(
     # clamp the filter and pad the tail with not-found slots.
     kk = min(k, cap)
     top_d, top_slot = filter_topk(store, queries, rows, valid, kk, metric=metric,
-                                  use_kernel=use_kernel, interpret=interpret)
+                                  use_kernel=use_kernel, interpret=interpret,
+                                  runs=runs)
     if kk < k:
         top_d = jnp.pad(top_d, ((0, 0), (0, k - kk)), constant_values=_BIG)
         top_slot = jnp.pad(top_slot, ((0, 0), (0, k - kk)), constant_values=-1)
@@ -177,6 +192,18 @@ def _store_for(index, store):
     return store
 
 
+def _planes_for(index, planes, temps):
+    """Staleness gate for prebuilt node planes, next to `_store_for`:
+    `lmi.insert` bumps ``index_revision``, and planes canonicalized
+    before the insert fold the old params — reject them (ValueError)
+    instead of silently scoring with them. Delegates to
+    `repro.core.planes.validate` (also checks the temperature schedule
+    the planes were folded with)."""
+    from repro.core import planes as planes_lib
+
+    return planes_lib.validate(index, planes, temps)
+
+
 def range_query(
     index: "lmi_lib.LMI",
     queries: Array,
@@ -192,6 +219,7 @@ def range_query(
     beam_width: "lmi_lib.BeamWidths" = None,
     node_eval: str = "gather",
     temperatures: "lmi_lib.Temperatures" = None,
+    planes=None,
 ) -> FilterResult:
     """End-to-end LMI range query (paper Table 2).
 
@@ -203,7 +231,9 @@ def range_query(
     per-level schedule); ``node_eval`` how its pruned levels read node
     models ("gather" / "segmented" — see `lmi.beam_leaf_ranking`);
     ``temperatures`` the per-level score calibration
-    (`repro.core.calibrate`, docs/beam_search.md).
+    (`repro.core.calibrate`, docs/beam_search.md); ``planes`` optional
+    prebuilt node planes for the segmented beam (`repro.core.planes` —
+    validated against the index revision and temperature schedule).
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
@@ -215,6 +245,7 @@ def range_query(
         stop_count=stop_count, cap=cap, metric=metric, mode="range", k=0,
         use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
         beam_width=widths, node_eval=node_eval, temperatures=temps,
+        planes=_planes_for(index, planes, temps),
     )
     return FilterResult(ids=ids, distances=d, mask=mask)
 
@@ -235,6 +266,7 @@ def knn_query(
     beam_width: "lmi_lib.BeamWidths" = None,
     node_eval: str = "gather",
     temperatures: "lmi_lib.Temperatures" = None,
+    planes=None,
 ) -> tuple[Array, Array]:
     """kNN over the candidate set (paper Table 3: 30NN with max radius).
 
@@ -245,7 +277,8 @@ def knn_query(
     traversal, scalar or per-level schedule; None = exact);
     ``node_eval`` how the beam's pruned levels read node models
     ("gather" / "segmented"); ``temperatures`` the per-level score
-    calibration (`repro.core.calibrate`).
+    calibration (`repro.core.calibrate`); ``planes`` optional prebuilt
+    node planes for the segmented beam (`repro.core.planes`).
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
@@ -258,6 +291,7 @@ def knn_query(
         stop_count=stop_count, cap=cap, metric=metric, mode="knn", k=int(k),
         use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
         beam_width=widths, node_eval=node_eval, temperatures=temps,
+        planes=_planes_for(index, planes, temps),
     )
     return ids, d
 

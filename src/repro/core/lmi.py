@@ -422,6 +422,7 @@ def beam_leaf_ranking(
     index, queries: Array, beam_width: BeamWidths, node_eval: str = "gather",
     use_kernel: bool = False, interpret: Optional[bool] = None,
     collect_pruned: Optional[list] = None, temperatures: Temperatures = None,
+    planes=None,
 ) -> tuple[Array, Array]:
     """Best-first (order (Q, R), logp (Q, R)) of the beam's surviving leaves.
 
@@ -461,6 +462,16 @@ def beam_leaf_ranking(
     so ``beam_width >= prod(arities[:-1])`` computes the identical
     log-prob panel as exact enumeration, in either ``node_eval`` mode.
 
+    ``planes``: an optional prebuilt `repro.core.planes.IndexPlanes` —
+    the segmented mode then reads ``planes.levels[i - 1]`` instead of
+    canonicalizing ``family_planes`` inside the traced batch, dropping
+    the per-batch ``O(N * arity * d)`` params read (47 of 113 MB of the
+    segmented byte budget at the depth-3 acceptance point). The planes
+    must have been built at the same ``temperatures`` and
+    ``index_revision`` — entry points validate via
+    `repro.core.planes.validate` (this traced body trusts the caller).
+    Ignored by ``node_eval="gather"``.
+
     ``collect_pruned`` (host-side diagnostic, do not use inside jit):
     a list that receives ``(level, prefix)`` for every pruned-level
     evaluation — the measured-traffic input of benchmarks/depth_beam.py.
@@ -498,9 +509,14 @@ def beam_leaf_ranking(
         if node_eval == "segmented":
             from repro.kernels import beam_eval
 
-            planes = beam_eval.family_planes(index.model_type, params, temperature=temp)
+            if planes is not None:
+                level_planes = planes.levels[i - 1]  # prebuilt at temp (planes.py)
+            else:
+                level_planes = beam_eval.family_planes(
+                    index.model_type, params, temperature=temp
+                )
             child = beam_eval.node_scores(
-                q, prefix, planes, index.model_type,
+                q, prefix, level_planes, index.model_type,
                 use_kernel=use_kernel, interpret=interpret, temperature=temp,
             )  # (Q, F, arity)
         else:
@@ -622,7 +638,7 @@ def beam_rank_visited_buckets(
     index, queries: Array, sizes: Array, stop_count: int, beam_width: BeamWidths,
     bucket_topk: Optional[int] = None, node_eval: str = "gather",
     use_kernel: bool = False, interpret: Optional[bool] = None,
-    temperatures: Temperatures = None,
+    temperatures: Temperatures = None, planes=None,
 ):
     """`rank_visited_buckets` for the beam-pruned traversal: rank only the
     beam's surviving leaves and cut at the stop condition. Determinism
@@ -631,10 +647,14 @@ def beam_rank_visited_buckets(
     ``beam_width`` schedule / ``temperatures``), so every shard computes
     the identical ranking (in either ``node_eval`` mode).
     ``bucket_topk`` further truncates the (already best-first) beam
-    ranking to its top K entries."""
+    ranking to its top K entries. ``planes``: optional prebuilt
+    `IndexPlanes` for the segmented mode (see `beam_leaf_ranking`);
+    determinism still holds — prebuilt planes are bitwise the per-batch
+    canonicalization of the same params at the same temperatures."""
     order, _logp = beam_leaf_ranking(
         index, queries, beam_width, node_eval=node_eval,
         use_kernel=use_kernel, interpret=interpret, temperatures=temperatures,
+        planes=planes,
     )
     if bucket_topk is not None and bucket_topk < order.shape[-1]:
         order = order[:, :bucket_topk]
@@ -676,6 +696,7 @@ def _search_core(
     bucket_topk: Optional[int] = None, beam_width: BeamWidths = None,
     node_eval: str = "gather", use_kernel: bool = False,
     interpret: Optional[bool] = None, temperatures: Temperatures = None,
+    planes=None,
 ):
     """Traceable search body — shared by every query entry point (the
     single-device `search`/`search_rows`, the fused `filtering` queries;
@@ -685,7 +706,10 @@ def _search_core(
     level frontier to that beam. ``node_eval``/``use_kernel`` pick the
     pruned-level node evaluation (`beam_leaf_ranking`; irrelevant for
     the exact path). ``temperatures``: per-level score calibration,
-    applied in both modes (None == uncalibrated).
+    applied in both modes (None == uncalibrated). ``planes``: optional
+    prebuilt `repro.core.planes.IndexPlanes` for the segmented beam
+    (a traced pytree arg — its ``temperatures``/``revision`` fields are
+    static metadata; entry points validate consistency before calling).
     """
     if beam_width is None:
         logp = leaf_log_probs(index, queries, temperatures)  # (Q, L)
@@ -696,7 +720,7 @@ def _search_core(
         order, visited, sz = beam_rank_visited_buckets(
             index, queries, index.bucket_sizes(), stop_count, beam_width, bucket_topk,
             node_eval=node_eval, use_kernel=use_kernel, interpret=interpret,
-            temperatures=temperatures,
+            temperatures=temperatures, planes=planes,
         )
     n_buckets = jnp.sum(visited, axis=-1).astype(jnp.int32)
     rows, valid, n_cands = extract_rows(order, visited, index.bucket_offsets, cap)
@@ -731,6 +755,7 @@ def search(
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
     temperatures: Temperatures = None,
+    planes=None,
 ) -> SearchResult:
     """Batched LMI search.
 
@@ -747,13 +772,19 @@ def search(
     node models (gather vs the segmented beam_eval kernel) and
     ``temperatures`` the per-level score calibration
     (`repro.core.calibrate` fits both; docs/beam_search.md).
-    None for beam/bucket_topk = exact.
+    None for beam/bucket_topk = exact. ``planes``: optional prebuilt
+    `repro.core.planes.IndexPlanes` for the segmented beam — validated
+    against the index revision and the temperature schedule (stale
+    planes raise; `repro.core.planes.refresh` rebuilds them).
     """
+    from repro.core import planes as planes_lib
+
     stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
     widths, temps = _static_search_args(index, beam_width, temperatures)
+    planes = planes_lib.validate(index, planes, temps)
     cand_ids, _rows, valid, n_buckets, n_cands, runs = _search_impl(
         index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk,
-        widths, node_eval, use_kernel, interpret, temps,
+        widths, node_eval, use_kernel, interpret, temps, planes,
     )
     return SearchResult(cand_ids, valid, n_buckets, n_cands, runs)
 
@@ -763,15 +794,18 @@ def search_rows(
     candidate_cap: Optional[int] = None, bucket_topk: Optional[int] = None,
     beam_width: BeamWidths = None, node_eval: str = "gather",
     use_kernel: bool = False, interpret: Optional[bool] = None,
-    temperatures: Temperatures = None,
+    temperatures: Temperatures = None, planes=None,
 ):
     """Like `search` but returns CSR row indices (for fused filtering that
     gathers from the candidate store without the extra id indirection)."""
+    from repro.core import planes as planes_lib
+
     stop_count, cap = query_plan_params(index, stop_condition, candidate_cap)
     widths, temps = _static_search_args(index, beam_width, temperatures)
+    planes = planes_lib.validate(index, planes, temps)
     cand_ids, rows, valid, n_buckets, n_cands, runs = _search_impl(
         index, jnp.asarray(queries, jnp.float32), stop_count, cap, bucket_topk,
-        widths, node_eval, use_kernel, interpret, temps,
+        widths, node_eval, use_kernel, interpret, temps, planes,
     )
     return cand_ids, rows, valid
 

@@ -1,0 +1,135 @@
+"""IndexPlanes — build-time canonical node planes for the segmented beam.
+
+`lmi.beam_leaf_ranking(node_eval="segmented")` evaluates each pruned
+level through `repro.kernels.beam_eval`, whose canonical form is the
+`beam_eval.ops.family_planes` planes (at most two ``(N, arity, d)``
+contraction matrices plus ``(N, arity)`` vector planes per level).
+Historically the planes were canonicalized *inside* every traced query
+batch — an ``O(N * arity * d)`` read of the raw level params per batch
+that the measured traffic accounting charges as ``planes_bytes`` (47 of
+113 MB of the segmented byte budget at the depth-3 acceptance point,
+benchmarks/depth_beam.py).
+
+This module materializes the planes ONCE — at build time (saved next to
+the format-2 checkpoint by `repro.launch.build_index.save_index`) or on
+first use (`from_lmi`) — keyed on the index's ``index_revision``,
+exactly like `repro.core.store.CandidateStore` snapshots the CSR arrays:
+
+  * `from_lmi(index, temperatures)` canonicalizes every prunable level
+    (levels 1..depth-1; level 0 is a single model the beam never
+    gathers) at the serving temperatures and stamps the revision;
+  * query entry points validate revision + temperatures and *raise* on a
+    mismatch (`filtering._planes_for`) instead of silently scoring with
+    planes whose params `lmi.insert`... did not change — but whose CSR
+    revision contract says the caller's view of the index moved on;
+  * `refresh(index, planes)` is the one-call fix, next to
+    `store.refresh`.
+
+Temperatures fold into the planes (`family_planes`), so prebuilt planes
+are only valid for the temperature schedule they were built with — the
+container records it and validation compares against the query's
+schedule. Serving flows that sweep temperatures per query should keep
+the legacy per-batch canonicalization (``planes=None`` everywhere).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.core import lmi as lmi_lib
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IndexPlanes:
+    """Prebuilt `beam_eval.ops.Planes` for every prunable level (pytree).
+
+    ``levels[i - 1]`` holds level ``i``'s planes (levels 1..depth-1);
+    ``temperatures`` is the full per-level schedule they were folded
+    with (a static tuple, `lmi.normalize_temperatures` canonical form);
+    ``revision`` the ``index_revision`` of the LMI they were built from.
+    """
+
+    temperatures: tuple = dataclasses.field(metadata=dict(static=True))
+    levels: tuple  # tuple[beam_eval.ops.Planes], one per level >= 1
+    revision: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels) + 1
+
+    def level_planes(self, level: int):
+        """The planes of (1-indexed) pruned level ``level``."""
+        return self.levels[level - 1]
+
+    def nbytes(self) -> int:
+        n = 0
+        for leaf in jax.tree.leaves(self.levels):
+            n += leaf.size * leaf.dtype.itemsize
+        return n
+
+
+def from_lmi(index, temperatures: "lmi_lib.Temperatures" = None) -> IndexPlanes:
+    """Canonicalize every prunable level of a built LMI into planes.
+
+    ``temperatures``: the serving schedule (scalar / per-level tuple /
+    None == all 1.0) the planes fold in. One ``O(params)`` pass per
+    level — amortized over every segmented query batch served after.
+    """
+    from repro.kernels.beam_eval import ops as be_ops
+
+    temps = lmi_lib.normalize_temperatures(temperatures, index.depth)
+    levels = tuple(
+        be_ops.family_planes(index.model_type, index.levels[i], temperature=temps[i])
+        for i in range(1, index.depth)
+    )
+    return IndexPlanes(
+        temperatures=temps,
+        levels=levels,
+        revision=getattr(index, "index_revision", 0),
+    )
+
+
+def refresh(index, planes: IndexPlanes) -> IndexPlanes:
+    """Re-canonicalize ``planes`` (same temperature schedule) from the
+    index's current params/revision — the one-call fix after `lmi.insert`
+    bumps ``index_revision``, mirroring `store.refresh`."""
+    return from_lmi(index, planes.temperatures)
+
+
+def validate(index, planes: Optional[IndexPlanes],
+             temperatures: "lmi_lib.Temperatures" = None) -> Optional[IndexPlanes]:
+    """Reject stale or temperature-mismatched prebuilt planes.
+
+    Returns ``planes`` (or None) when consistent with ``index`` and the
+    query's ``temperatures``; raises ValueError otherwise. Shared by
+    `filtering` and the direct `lmi.beam_leaf_ranking` path so the
+    staleness contract cannot drift between entry points.
+    """
+    if planes is None:
+        return None
+    index_rev = getattr(index, "index_revision", 0)
+    if planes.revision != index_rev:
+        raise ValueError(
+            f"stale IndexPlanes: planes revision {planes.revision} != index "
+            f"revision {index_rev} (the index was mutated by lmi.insert after "
+            "the planes were built) — refresh them with "
+            "planes.refresh(index, planes)"
+        )
+    temps = lmi_lib.normalize_temperatures(temperatures, index.depth)
+    if tuple(planes.temperatures) != temps:
+        raise ValueError(
+            f"IndexPlanes were folded with temperatures {planes.temperatures} "
+            f"but the query asked for {temps} — rebuild them with "
+            "planes.from_lmi(index, temperatures) for this schedule"
+        )
+    if len(planes.levels) != index.depth - 1:
+        raise ValueError(
+            f"IndexPlanes cover {len(planes.levels)} prunable levels but the "
+            f"index has depth {index.depth} ({index.depth - 1} prunable)"
+        )
+    return planes

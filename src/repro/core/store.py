@@ -145,7 +145,12 @@ def from_lmi(index, dtype: str = "float32") -> CandidateStore:
 
 def refresh(index, store: CandidateStore) -> CandidateStore:
     """Re-materialize ``store`` (same precision) from the index's current
-    CSR arrays — the one-call fix after `lmi.insert` invalidates it."""
+    CSR arrays — the one-call fix after `lmi.insert` invalidates it.
+
+    Prebuilt node-score planes follow the same protocol: they carry the
+    index revision they were built from, queries reject stale ones, and
+    `repro.core.planes.refresh(index, planes)` is the matching one-call
+    fix."""
     return from_lmi(index, store.dtype)
 
 

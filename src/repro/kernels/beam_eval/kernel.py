@@ -11,9 +11,16 @@ pairs sharing a node form contiguous runs, and per grid tile it
      start (``load`` flag), not per pair; runs that span tiles reload
      once per tile (grid steps share no state, so query blocks can stay
      parallel),
-  2. contracts every pair's query row (and squared query row, for gmm's
-     second plane) against its run's block — the dot products of the
-     canonical score formulas,
+  2. contracts the tile's query rows against the run blocks on the MXU:
+     one ``(tp, d) x (d, arity)`` matmul per run, with the tile's
+     non-run rows zero-masked, accumulated over the tile's runs — each
+     run's pairs ride a single batched contraction
+     (``run_pairs`` rows live, the rest contribute exact zeros) instead
+     of the per-pair VPU matvec loop this kernel shipped with. The run
+     count per tile is the loop bound (``rix`` of the last pair + 1):
+     with the frontier's typical node sharing it is far below ``tp``,
+     so the MXU does a few dense matmuls where the VPU previously did
+     ``tp`` serial matvecs,
   3. runs the shared epilogue (`ref.combine_scores` + `ref.log_softmax`
      — literally the oracle's expressions) over the whole tile and
      writes the (tp, arity) log-prob tile.
@@ -45,7 +52,6 @@ def _beam_eval_kernel(*refs, model_type, n_mats, n_vecs, tp):
     out_ref = refs[4 + n_vecs + n_mats]
     scr = refs[5 + n_vecs + n_mats :]
     mat_scr = scr[:n_mats]  # (tp, arity, d) block slots, one per run
-    dot_scr = scr[n_mats : 2 * n_mats]  # (tp, arity) contraction results
     sem = scr[-1]
 
     def run_copies(p):
@@ -78,21 +84,34 @@ def _beam_eval_kernel(*refs, model_type, n_mats, n_vecs, tp):
     jax.lax.fori_loop(0, tp, start, 0)
     jax.lax.fori_loop(0, tp, wait, 0)
 
-    def contract(p, _):
-        r = rix_ref[0, p]
-        x = x_ref[p, :]  # (d,)
-        for m in range(n_mats):
-            xm = x if m == 0 else x * x  # mats[1] (gmm) contracts q^2
-            blk = mat_scr[m][r]  # (arity, d) — the pair's run block
-            dot_scr[m][pl.ds(p, 1), :] = jnp.sum(blk * xm[None, :], axis=-1)[None, :]
-        return 0
+    # ---- MXU contraction: one (tp, d) x (d, arity) matmul per run.
+    # Pairs of run r keep their query rows, every other row is zeroed, so
+    # run r's matmul contributes exactly its pairs' dot products and zero
+    # elsewhere; summing over the tile's runs assembles the full (tp,
+    # arity) dot panel. n_runs = rix of the last pair + 1 bounds the loop.
+    arity = mat_scr[0].shape[1]
+    n_runs = rix_ref[0, tp - 1] + 1
+    rix_row = rix_ref[0, :]  # (tp,)
+    x_all = x_ref[...]
+    dots = []
+    for m in range(n_mats):
+        xm = x_all if m == 0 else x_all * x_all  # mats[1] (gmm) contracts q^2
 
-    jax.lax.fori_loop(0, tp, contract, 0)
+        def run_matmul(r, acc, m=m, xm=xm):
+            xr = jnp.where((rix_row == r)[:, None], xm, 0.0)  # (tp, d)
+            blk = mat_scr[m][r]  # (arity, d) — the run's block
+            return acc + jax.lax.dot_general(
+                xr, blk, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (tp, arity)
+
+        dots.append(jax.lax.fori_loop(
+            0, n_runs, run_matmul, jnp.zeros((tp, arity), jnp.float32)
+        ))
 
     # ---- shared epilogue: identical expressions to the jnp oracle
-    x_all = x_ref[...]
     qn = jnp.sum(x_all * x_all, axis=-1, keepdims=True)  # (tp, 1)
-    dots = tuple(dot_scr[m][...] for m in range(n_mats))
+    dots = tuple(dots)
     vecs = tuple(v[...] for v in vec_refs)
     out_ref[...] = ref_lib.log_softmax(
         ref_lib.combine_scores(model_type, dots, vecs, qn)
@@ -135,7 +154,6 @@ def beam_eval_pallas(
         out_specs=pl.BlockSpec((tp, arity), lambda i: (i, 0), memory_space=pltpu.VMEM),
         scratch_shapes=(
             [pltpu.VMEM((tp, arity, d), jnp.float32) for _ in range(n_mats)]
-            + [pltpu.VMEM((tp, arity), jnp.float32) for _ in range(n_mats)]
             + [pltpu.SemaphoreType.DMA]
         ),
         compiler_params=tpu_compiler_params(dimension_semantics=("parallel",)),

@@ -215,7 +215,8 @@ def node_scores(
 # ------------------------------------------------------ traffic accounting
 
 
-def segment_stats(prefix, model_type: str, arity: int, dim: int, n_nodes: int) -> dict:
+def segment_stats(prefix, model_type: str, arity: int, dim: int, n_nodes: int,
+                  prebuilt_planes: bool = False) -> dict:
     """Measured node-params HBM bytes of one pruned-level evaluation.
 
     ``prefix`` is the actual (Q, F) beam frontier of a traversal
@@ -234,6 +235,12 @@ def segment_stats(prefix, model_type: str, arity: int, dim: int, n_nodes: int) -
 
     ``segmented_bytes`` totals the segmented side so the reduction ratio
     is an honest all-in comparison, not just the matrix term.
+
+    With ``prebuilt_planes=True`` the once-per-batch canonicalization read
+    is elided — the planes were materialized at build/load time
+    (`repro.core.planes.IndexPlanes`) and live in HBM already in canonical
+    layout, so ``planes_bytes`` is 0 and ``segmented_bytes`` shrinks
+    accordingly.
     """
     n_mats, n_vecs, raw_floats = _FAMILY_SHAPES[model_type]
     tp = _pick_tp(n_mats, arity, dim)
@@ -256,7 +263,7 @@ def segment_stats(prefix, model_type: str, arity: int, dim: int, n_nodes: int) -
         "gather_bytes": p0 * block,
         "segmented_mat_bytes": n_loads * mat_block,
         "vec_bytes": p0 * n_vecs * arity * 4,
-        "planes_bytes": n_nodes * block,
+        "planes_bytes": 0 if prebuilt_planes else n_nodes * block,
     }
     stats["segmented_bytes"] = (
         stats["segmented_mat_bytes"] + stats["vec_bytes"] + stats["planes_bytes"]

@@ -22,7 +22,13 @@ most two (N, arity, d) matrices — ``mats[0]`` contracted with the query
 ``q``, ``mats[1]`` with ``q*q`` — plus (N, arity) vector planes, combined
 per family with the *same association order* as the `_node_log_proba`
 implementations in kmeans/gmm/logreg (so the segmented scores match the
-gather path to the ulp on identical inputs):
+gather path to the ulp on identical inputs). The planes may be built
+per batch (`ops.family_planes`) or once at build/load time
+(`repro.core.planes.IndexPlanes`, keyed on index_revision) — the arrays
+are identical, so this oracle covers both. Inside the kernel the
+per-pair contraction is batched into one (run_pairs, d) x (d, arity)
+MXU matmul per run; zero-masked rows contribute exact zeros, so that
+batching is invisible here too:
 
   kmeans   mats=(centroids,)          vecs=(|c|^2,)
            score = -max((|q|^2 + |c|^2) - 2 q.c, 0)

@@ -29,18 +29,42 @@ The `(Q, C, d)` intermediate never exists, and in knn mode the distances
 never round-trip through HBM: HBM traffic is one read of each candidate
 row plus the `(Q, k)` result.
 
-Bucket-run gather: a query's candidate list is a concatenation of
-*contiguous CSR runs* (one per visited bucket — `lmi.BucketRuns`).
-`ops.py` rediscovers that run structure from the rows/valid arrays as
-per-segment gather metadata (`seg_rows`/`seg_contig`, one entry per
-SEG-slot group):
-segments that lie inside a run are fetched with ONE run-length DMA of
-SEG rows; only segments that straddle a run boundary (or contain invalid
-slots) fall back to per-row DMAs. With the paper's bucket sizes (mean >>
-SEG) this cuts the DMA count by ~SEG-fold. All copies of a tile are
-started before the first wait so the DMA engine can coalesce/overlap
-them. The candidate grid axis is sequential ("arbitrary") in knn mode
-because of the accumulator; query blocks stay parallel.
+Pipelined (double-buffered) gather: the candidate scratch holds TWO
+`(bq, bc, d)` slots and the DMA semaphores are a 2-slot array. Tile
+``j`` computes out of slot ``j % 2`` while tile ``j + 1``'s copies are
+already in flight into the other slot — the kernel starts the prefetch
+right after retiring tile ``j``'s waits, *before* the distance math, so
+the gather latency of every tile after the first hides behind the
+previous tile's compute instead of stalling the grid step boundary. The
+candidate grid axis is sequential ("arbitrary") in both modes to make
+the cross-step handoff well-defined; query blocks stay parallel. The
+wait side reconstructs the prefetch's copy descriptors from the current
+tile's metadata (the "next"-tile inputs of step ``j - 1`` hold exactly
+the values the "current" inputs hold at step ``j``), which is all a
+Pallas DMA wait needs.
+
+Two gather modes pick how the tile's rows come in:
+
+  * segment mode (`_seg_gather`): a query's candidate list is a
+    concatenation of *contiguous CSR runs* (one per visited bucket —
+    `lmi.BucketRuns`). `ops.py` rediscovers that structure from the
+    rows/valid arrays as fixed-width per-SEG-slot metadata: segments
+    that lie inside a run are fetched with ONE SEG-row DMA; segments
+    that straddle a run boundary (or contain invalid slots) fall back to
+    per-row DMAs. Works for any rows source, no extra inputs.
+  * descriptor mode (`_desc_gather`): when the caller *has* the
+    `BucketRuns` (the fused query path always does), `ops.py` compacts
+    them into per-run `(start, slot-offset, length)` descriptors plus a
+    per-query run count that rides as a scalar-prefetch operand
+    (`pltpu.PrefetchScalarGridSpec` — the counts sit in SMEM before the
+    body runs). The kernel intersects each run with the tile's slot
+    window and issues the intersection as a binary chunk decomposition:
+    one DMA per set bit of the intersection length (power-of-two chunk
+    sizes, largest first), i.e. ``popcount(len)`` DMAs per run-tile
+    intersection — approaching one variable-length DMA per visited
+    *bucket* instead of one per SEG rows. At the paper's bucket sizes
+    (mean ~ hundreds of rows) that is an order of magnitude fewer DMA
+    issues than segment mode (measured in benchmarks/query_latency.py).
 
 Caveat (TPU): the row indices ride in VMEM and are read as scalars to
 form DMA addresses; on very old Mosaic versions scalar reads from VMEM
@@ -66,8 +90,9 @@ METRICS = ("euclidean", "sq_euclidean", "cosine")
 SEG = 8  # gather segment width (f32 sublane quantum); see ops._segment_metadata
 
 
-def _gather_tile(rows_ref, segr_ref, segc_ref, emb_ref, cand_scr, sem):
-    """DMA the tile's candidate rows of the HBM store into cand_scr.
+def _seg_gather(rows_ref, segr_ref, segc_ref, emb_ref, cand_scr, sem, slot, action):
+    """Issue (``action="start"``) or retire (``"wait"``) one tile's
+    segment-mode copies into scratch slot ``slot``.
 
     Row-run aware: segment s of query-row r covers candidate slots
     [s*SEG, (s+1)*SEG); when ``segc_ref[r, s]`` is set those slots are
@@ -80,43 +105,83 @@ def _gather_tile(rows_ref, segr_ref, segc_ref, emb_ref, cand_scr, sem):
     def seg_copy(r, s):
         return pltpu.make_async_copy(
             emb_ref.at[pl.ds(segr_ref[r, s], SEG)],
-            cand_scr.at[r, pl.ds(s * SEG, SEG)],
-            sem,
+            cand_scr.at[slot, r, pl.ds(s * SEG, SEG)],
+            sem.at[slot],
         )
 
     def row_copy(r, c):
-        return pltpu.make_async_copy(emb_ref.at[rows_ref[r, c]], cand_scr.at[r, c], sem)
+        return pltpu.make_async_copy(
+            emb_ref.at[rows_ref[r, c]], cand_scr.at[slot, r, c], sem.at[slot]
+        )
 
-    def start(t, _):
+    def step(t, _):
         r, s = t // nseg, t % nseg
 
         @pl.when(segc_ref[r, s] != 0)
         def _run():
-            seg_copy(r, s).start()
+            c = seg_copy(r, s)
+            c.start() if action == "start" else c.wait()
 
         @pl.when(segc_ref[r, s] == 0)
         def _rows():
             for i in range(SEG):
-                row_copy(r, s * SEG + i).start()
+                c = row_copy(r, s * SEG + i)
+                c.start() if action == "start" else c.wait()
 
         return 0
 
-    def wait(t, _):
-        r, s = t // nseg, t % nseg
+    jax.lax.fori_loop(0, bq * nseg, step, 0)
 
-        @pl.when(segc_ref[r, s] != 0)
-        def _run():
-            seg_copy(r, s).wait()
 
-        @pl.when(segc_ref[r, s] == 0)
-        def _rows():
-            for i in range(SEG):
-                row_copy(r, s * SEG + i).wait()
+def _desc_gather(nrun_ref, dstart_ref, doff_ref, dlen_ref, emb_ref, cand_scr,
+                 sem, slot, base, qbase, action):
+    """Issue/retire one tile's descriptor-mode copies into slot ``slot``.
 
-        return 0
+    Descriptor t of query-row r is a bucket run: CSR rows
+    ``dstart[r, t] : dstart[r, t] + dlen[r, t]`` land at candidate slots
+    ``doff[r, t] : doff[r, t] + dlen[r, t]``. The run's intersection with
+    this tile's slot window ``[base, base + bc)`` is copied as its binary
+    chunk decomposition — for each set bit ``2^c`` of the intersection
+    length one ``2^c``-row DMA, larger chunks first (chunk offset = the
+    higher bits), so a run-tile intersection costs ``popcount(len)``
+    DMAs. Runs that miss the window have length 0: every chunk gate is
+    false and nothing is issued. ``nrun_ref`` (scalar-prefetch, SMEM)
+    bounds the per-row descriptor loop; slots no run covers are invalid
+    by construction and masked in `_tile_distances`, so their scratch
+    garbage never reaches the output.
+    """
+    bq = dstart_ref.shape[0]
+    bc = cand_scr.shape[2]
+    # a run can never be longer than the embedding table, so the largest
+    # chunk worth emitting is min(bc, M) — keeping every static slice size
+    # legal for small tables (the larger gates could never fire anyway)
+    max_chunk = min(bc, emb_ref.shape[0])
+    for r in range(bq):  # unrolled query rows; runs loop is per-row ragged
 
-    jax.lax.fori_loop(0, bq * nseg, start, 0)
-    jax.lax.fori_loop(0, bq * nseg, wait, 0)
+        def run_step(t, _, r=r):
+            off = doff_ref[r, t]
+            ln = dlen_ref[r, t]
+            lo = jnp.maximum(off, base)
+            hi = jnp.minimum(off + ln, base + bc)
+            clen = jnp.maximum(hi - lo, 0)
+            csrc = dstart_ref[r, t] + (lo - off)
+            cdst = lo - base
+            for cl in range(max_chunk.bit_length() - 1, -1, -1):
+                ch = 1 << cl
+                choff = (clen >> (cl + 1)) << (cl + 1)  # rows in larger chunks
+
+                @pl.when((clen & ch) != 0)
+                def _chunk(ch=ch, choff=choff):
+                    c = pltpu.make_async_copy(
+                        emb_ref.at[pl.ds(csrc + choff, ch)],
+                        cand_scr.at[slot, r, pl.ds(cdst + choff, ch)],
+                        sem.at[slot],
+                    )
+                    c.start() if action == "start" else c.wait()
+
+            return 0
+
+        jax.lax.fori_loop(0, nrun_ref[qbase + r], run_step, 0)
 
 
 def _dequant(cand, scale_ref):
@@ -151,27 +216,89 @@ def _tile_distances(q, cand, valid, metric: str):
     return jnp.where(valid != 0, d, _BIG)
 
 
-def _range_kernel(*refs, metric, quant):
-    if quant:
-        (rows_ref, valid_ref, segr_ref, segc_ref, q_ref, scale_ref, emb_ref,
-         out_ref, cand_scr, sem) = refs
+def _unpack_refs(refs, quant: bool, desc: bool, n_out: int):
+    """Split the flat Pallas ref list into (gather closures over the
+    pipelining slot/action, valid, q, scale, emb, outs, scratch, sem).
+
+    The double-buffer protocol both kernel bodies run (docstring):
+    warm-up start at j == 0, wait the current tile, prefetch tile j + 1
+    into the other slot before computing. ``cur``/``nxt`` reconstruct
+    identical copy descriptors across adjacent grid steps — segment mode
+    from duplicated "next-tile" inputs (index_map j + 1), descriptor
+    mode from the j-independent descriptor block and the shifted window
+    base.
+    """
+    j = pl.program_id(1)
+    slot = j % 2
+    if desc:
+        (nrun_ref, valid_ref, dstart_ref, doff_ref, dlen_ref, q_ref) = refs[:6]
+        rest = refs[6:]
     else:
-        (rows_ref, valid_ref, segr_ref, segc_ref, q_ref, emb_ref,
-         out_ref, cand_scr, sem) = refs
-        scale_ref = None
-    _gather_tile(rows_ref, segr_ref, segc_ref, emb_ref, cand_scr, sem)
-    cand = _dequant(cand_scr[...], scale_ref)
-    out_ref[...] = _tile_distances(q_ref[...], cand, valid_ref[...], metric)
+        (rows_ref, rows_nxt, valid_ref, segr_ref, segc_ref, segr_nxt,
+         segc_nxt, q_ref) = refs[:8]
+        rest = refs[8:]
+    scale_ref = rest[0] if quant else None
+    rest = rest[1:] if quant else rest
+    emb_ref = rest[0]
+    outs = rest[1 : 1 + n_out]
+    scr = rest[1 + n_out :]
+    cand_scr, sem = scr[0], scr[-1]
+    mid_scr = scr[1:-1]
+    if desc:
+        bq = q_ref.shape[0]
+        bc = cand_scr.shape[2]
+        qbase = pl.program_id(0) * bq
+
+        def cur(action):
+            _desc_gather(nrun_ref, dstart_ref, doff_ref, dlen_ref, emb_ref,
+                         cand_scr, sem, slot, j * bc, qbase, action)
+
+        def nxt(action):
+            _desc_gather(nrun_ref, dstart_ref, doff_ref, dlen_ref, emb_ref,
+                         cand_scr, sem, 1 - slot, (j + 1) * bc, qbase, action)
+    else:
+
+        def cur(action):
+            _seg_gather(rows_ref, segr_ref, segc_ref, emb_ref, cand_scr, sem,
+                        slot, action)
+
+        def nxt(action):
+            _seg_gather(rows_nxt, segr_nxt, segc_nxt, emb_ref, cand_scr, sem,
+                        1 - slot, action)
+
+    return cur, nxt, slot, valid_ref, q_ref, scale_ref, outs, mid_scr, cand_scr
 
 
-def _topk_kernel(*refs, metric, quant, k, bc):
-    if quant:
-        (rows_ref, valid_ref, segr_ref, segc_ref, q_ref, scale_ref, emb_ref,
-         outd_ref, outi_ref, cand_scr, topd_scr, topi_scr, sem) = refs
-    else:
-        (rows_ref, valid_ref, segr_ref, segc_ref, q_ref, emb_ref,
-         outd_ref, outi_ref, cand_scr, topd_scr, topi_scr, sem) = refs
-        scale_ref = None
+def _pipelined_tile(cur, nxt, slot, cand_scr, scale_ref, nj: int):
+    """Run the double-buffer handoff for this grid step and return the
+    dequantized (bq, bc, d) f32 candidate tile."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _warm():
+        cur("start")
+
+    cur("wait")
+
+    @pl.when(j + 1 < nj)
+    def _prefetch():
+        nxt("start")
+
+    return _dequant(cand_scr[slot], scale_ref)
+
+
+def _range_kernel(*refs, metric, quant, desc, nj):
+    (cur, nxt, slot, valid_ref, q_ref, scale_ref, outs, _mid,
+     cand_scr) = _unpack_refs(refs, quant, desc, 1)
+    cand = _pipelined_tile(cur, nxt, slot, cand_scr, scale_ref, nj)
+    outs[0][...] = _tile_distances(q_ref[...], cand, valid_ref[...], metric)
+
+
+def _topk_kernel(*refs, metric, quant, desc, nj, k, bc):
+    (cur, nxt, slot, valid_ref, q_ref, scale_ref, outs, mid,
+     cand_scr) = _unpack_refs(refs, quant, desc, 2)
+    outd_ref, outi_ref = outs
+    topd_scr, topi_scr = mid
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -179,8 +306,7 @@ def _topk_kernel(*refs, metric, quant, k, bc):
         topd_scr[...] = jnp.full_like(topd_scr, _BIG)
         topi_scr[...] = jnp.full_like(topi_scr, -1)
 
-    _gather_tile(rows_ref, segr_ref, segc_ref, emb_ref, cand_scr, sem)
-    cand = _dequant(cand_scr[...], scale_ref)
+    cand = _pipelined_tile(cur, nxt, slot, cand_scr, scale_ref, nj)
     d = _tile_distances(q_ref[...], cand, valid_ref[...], metric)  # (bq, bc)
 
     bq, kpad = topd_scr.shape
@@ -213,20 +339,58 @@ def _topk_kernel(*refs, metric, quant, k, bc):
         outi_ref[...] = topi_scr[...]
 
 
-def _filter_specs(bq: int, bc: int, d: int, quant: bool):
-    """in_specs shared by both kernels: rows, valid, seg metadata, query
-    block, (int8) per-row scale tile, and the HBM-resident store."""
+def _seg_specs(bq: int, bc: int, d: int, nj: int, quant: bool):
+    """Segment-mode in_specs: rows (cur + next tile), valid, seg metadata
+    (cur + next), query block, (int8) per-row scale tile, and the
+    HBM-resident store. The "next" duplicates make tile j + 1's gather
+    metadata resident during step j (the prefetch's copy addresses)
+    without widening any block — same (bq, bc)/(bq, bc // SEG) windows,
+    index_map shifted one candidate tile (clamped at the last)."""
+    cur = lambda i, j: (i, j)
+    # min(j + 1, nj - 1) in index arithmetic ((j + 1) // nj is 0 until the
+    # last tile, 1 there) — index maps must return plain integer scalars
+    nxt = lambda i, j: (i, j + 1 - (j + 1) // nj)
     specs = [
-        pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
-        pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
-        pl.BlockSpec((bq, bc // SEG), lambda i, j: (i, j), memory_space=pltpu.VMEM),
-        pl.BlockSpec((bq, bc // SEG), lambda i, j: (i, j), memory_space=pltpu.VMEM),
-        pl.BlockSpec((bq, d), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
+        pl.BlockSpec((bq, bc), cur, memory_space=pltpu.VMEM),  # rows
+        pl.BlockSpec((bq, bc), nxt, memory_space=pltpu.VMEM),  # rows (next)
+        pl.BlockSpec((bq, bc), cur, memory_space=pltpu.VMEM),  # valid
+        pl.BlockSpec((bq, bc // SEG), cur, memory_space=pltpu.VMEM),  # seg_rows
+        pl.BlockSpec((bq, bc // SEG), cur, memory_space=pltpu.VMEM),  # seg_contig
+        pl.BlockSpec((bq, bc // SEG), nxt, memory_space=pltpu.VMEM),
+        pl.BlockSpec((bq, bc // SEG), nxt, memory_space=pltpu.VMEM),
+        pl.BlockSpec((bq, d), lambda i, j: (i, 0), memory_space=pltpu.VMEM),  # q
     ]
     if quant:
-        specs.append(pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM))
+        specs.append(pl.BlockSpec((bq, bc), cur, memory_space=pltpu.VMEM))
     specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
     return specs
+
+
+def _desc_specs(bq: int, bc: int, d: int, n_desc: int, quant: bool):
+    """Descriptor-mode in_specs (scalar-prefetch index_maps take the
+    leading nrun ref): valid, the three (bq, K) descriptor blocks (whole
+    per-query descriptor list resident for every candidate tile — no
+    next-tile duplicates needed, the prefetch only shifts the window
+    base), query block, (int8) scale tile, HBM store."""
+    cur = lambda i, j, n: (i, j)  # trailing arg: the prefetched nrun ref
+    row = lambda i, j, n: (i, 0)
+    specs = [
+        pl.BlockSpec((bq, bc), cur, memory_space=pltpu.VMEM),  # valid
+        pl.BlockSpec((bq, n_desc), row, memory_space=pltpu.VMEM),  # dstart
+        pl.BlockSpec((bq, n_desc), row, memory_space=pltpu.VMEM),  # doff
+        pl.BlockSpec((bq, n_desc), row, memory_space=pltpu.VMEM),  # dlen
+        pl.BlockSpec((bq, d), row, memory_space=pltpu.VMEM),  # q
+    ]
+    if quant:
+        specs.append(pl.BlockSpec((bq, bc), cur, memory_space=pltpu.VMEM))
+    specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+    return specs
+
+
+def _gather_scratch(bq: int, bc: int, d: int, dtype):
+    """Two (bq, bc, d) store-dtype slots + a 2-slot DMA semaphore array —
+    the double-buffer state."""
+    return [pltpu.VMEM((2, bq, bc, d), dtype)], [pltpu.SemaphoreType.DMA((2,))]
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "bq", "bc", "interpret"))
@@ -238,27 +402,27 @@ def lmi_filter_range_pallas(
     (M, d) store-dtype [+ scales (Q, C) f32 for int8] -> (Q, C) f32.
 
     Q % bq == 0, C % bc == 0, bc % SEG == 0 (ops.py pads). ``embeddings``
-    stays in HBM/ANY and is gathered run-wise/row-wise per tile.
+    stays in HBM/ANY and is gathered run-wise/row-wise per tile, double-
+    buffered across candidate tiles.
     """
     q_, d = queries.shape
     c_ = rows.shape[1]
-    grid = (q_ // bq, c_ // bc)
+    nj = c_ // bc
+    grid = (q_ // bq, nj)
     quant = scales is not None
-    args = (rows, valid, seg_rows, seg_contig, queries)
+    args = (rows, rows, valid, seg_rows, seg_contig, seg_rows, seg_contig, queries)
     args += (scales,) if quant else ()
     args += (embeddings,)
+    vmem, sems = _gather_scratch(bq, bc, d, embeddings.dtype)
     return pl.pallas_call(
-        functools.partial(_range_kernel, metric=metric, quant=quant),
+        functools.partial(_range_kernel, metric=metric, quant=quant, desc=False, nj=nj),
         out_shape=jax.ShapeDtypeStruct((q_, c_), jnp.float32),
         grid=grid,
-        in_specs=_filter_specs(bq, bc, d, quant),
+        in_specs=_seg_specs(bq, bc, d, nj, quant),
         out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
-        scratch_shapes=[
-            pltpu.VMEM((bq, bc, d), embeddings.dtype),
-            pltpu.SemaphoreType.DMA,
-        ],
+        scratch_shapes=vmem + sems,
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel"),
+            dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(*args)
@@ -277,29 +441,109 @@ def lmi_filter_topk_pallas(
     """
     q_, d = queries.shape
     c_ = rows.shape[1]
-    grid = (q_ // bq, c_ // bc)
+    nj = c_ // bc
+    grid = (q_ // bq, nj)
     quant = scales is not None
-    args = (rows, valid, seg_rows, seg_contig, queries)
+    args = (rows, rows, valid, seg_rows, seg_contig, seg_rows, seg_contig, queries)
     args += (scales,) if quant else ()
     args += (embeddings,)
+    vmem, sems = _gather_scratch(bq, bc, d, embeddings.dtype)
     return pl.pallas_call(
-        functools.partial(_topk_kernel, metric=metric, quant=quant, k=k, bc=bc),
+        functools.partial(_topk_kernel, metric=metric, quant=quant, desc=False,
+                          nj=nj, k=k, bc=bc),
         out_shape=(
             jax.ShapeDtypeStruct((q_, kpad), jnp.float32),
             jax.ShapeDtypeStruct((q_, kpad), jnp.int32),
         ),
         grid=grid,
-        in_specs=_filter_specs(bq, bc, d, quant),
+        in_specs=_seg_specs(bq, bc, d, nj, quant),
         out_specs=(
             pl.BlockSpec((bq, kpad), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
             pl.BlockSpec((bq, kpad), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
         ),
-        scratch_shapes=[
-            pltpu.VMEM((bq, bc, d), embeddings.dtype),
+        scratch_shapes=vmem + [
             pltpu.VMEM((bq, kpad), jnp.float32),
             pltpu.VMEM((bq, kpad), jnp.int32),
-            pltpu.SemaphoreType.DMA,
-        ],
+        ] + sems,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*args)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "bq", "bc", "interpret"))
+def lmi_filter_range_desc_pallas(
+    queries, valid, nrun, dstart, doff, dlen, embeddings, scales,
+    *, metric: str, bq: int, bc: int, interpret: bool,
+):
+    """Descriptor-gather range variant: candidate rows come from per-run
+    (start, slot-offset, length) descriptors (ops._run_descriptors)
+    instead of a (Q, C) rows matrix. nrun (Q,) i32 rides as a
+    scalar-prefetch operand; dstart/doff/dlen are (Q, K)."""
+    q_, d = queries.shape
+    c_ = valid.shape[1]
+    nj = c_ // bc
+    quant = scales is not None
+    args = (nrun, valid, dstart, doff, dlen, queries)
+    args += (scales,) if quant else ()
+    args += (embeddings,)
+    vmem, sems = _gather_scratch(bq, bc, d, embeddings.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q_ // bq, nj),
+        in_specs=_desc_specs(bq, bc, d, dstart.shape[1], quant),
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j, n: (i, j),
+                               memory_space=pltpu.VMEM),
+        scratch_shapes=vmem + sems,
+    )
+    return pl.pallas_call(
+        functools.partial(_range_kernel, metric=metric, quant=quant, desc=True, nj=nj),
+        out_shape=jax.ShapeDtypeStruct((q_, c_), jnp.float32),
+        grid_spec=grid_spec,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*args)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "kpad", "bq", "bc", "interpret"))
+def lmi_filter_topk_desc_pallas(
+    queries, valid, nrun, dstart, doff, dlen, embeddings, scales,
+    *, metric: str, k: int, kpad: int, bq: int, bc: int, interpret: bool,
+):
+    """Descriptor-gather streaming top-k variant (see the range variant
+    and `_desc_gather`)."""
+    q_, d = queries.shape
+    c_ = valid.shape[1]
+    nj = c_ // bc
+    quant = scales is not None
+    args = (nrun, valid, dstart, doff, dlen, queries)
+    args += (scales,) if quant else ()
+    args += (embeddings,)
+    vmem, sems = _gather_scratch(bq, bc, d, embeddings.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q_ // bq, nj),
+        in_specs=_desc_specs(bq, bc, d, dstart.shape[1], quant),
+        out_specs=(
+            pl.BlockSpec((bq, kpad), lambda i, j, n: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bq, kpad), lambda i, j, n: (i, 0), memory_space=pltpu.VMEM),
+        ),
+        scratch_shapes=vmem + [
+            pltpu.VMEM((bq, kpad), jnp.float32),
+            pltpu.VMEM((bq, kpad), jnp.int32),
+        ] + sems,
+    )
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, metric=metric, quant=quant, desc=True,
+                          nj=nj, k=k, bc=bc),
+        out_shape=(
+            jax.ShapeDtypeStruct((q_, kpad), jnp.float32),
+            jax.ShapeDtypeStruct((q_, kpad), jnp.int32),
+        ),
+        grid_spec=grid_spec,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),

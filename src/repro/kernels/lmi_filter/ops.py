@@ -8,16 +8,31 @@ it is the HBM-resident database in its CandidateStore precision
 DMA bytes scale with the store dtype; the feature dim runs at its
 natural (possibly unaligned) width.
 
-Gather metadata: candidate lists produced by the LMI are concatenations
-of contiguous bucket runs (see `lmi._search_core`'s BucketRuns). Rather
-than shipping the variable-length run list into the kernel, the run
-structure is folded into fixed-width *segment* metadata — for every
-group of SEG candidate slots, the starting CSR row and a flag saying the
-whole group is one contiguous valid stretch — which the kernel turns
-into one SEG-row DMA instead of SEG row DMAs (`kernel._gather_tile`).
-Derived with two jnp compares, works for any rows source (single-device
-CSR rows or shard-local rows), and degrades gracefully: rows with no run
-structure just take the per-row path everywhere.
+Gather metadata — two forms, picked by whether the caller has the
+`lmi.BucketRuns` in hand (the fused `filtering._query_impl` always
+does; standalone callers may only have rows):
+
+  * segment metadata (``runs=None``): the run structure is rediscovered
+    from the rows/valid arrays as fixed-width *per-SEG-slot* metadata —
+    for every group of SEG candidate slots, the starting CSR row and a
+    flag saying the whole group is one contiguous valid stretch — which
+    the kernel turns into one SEG-row DMA instead of SEG row DMAs
+    (`kernel._seg_gather`). Works for any rows source and degrades
+    gracefully: rows with no run structure just take the per-row path.
+  * run descriptors (``runs=BucketRuns``): the explicit per-bucket runs
+    are compacted into per-run (start, slot-offset, length) descriptor
+    triples plus a per-query run count (`_run_descriptors`); the kernel
+    gathers each run-tile intersection as a binary chunk decomposition —
+    ``popcount(length)`` DMAs per intersection, approaching ONE
+    variable-length DMA per visited bucket (`kernel._desc_gather`).
+    `gather_dma_stats` replays all three disciplines (per-row / per-SEG
+    / per-run) over real run metadata for the benchmark's measured
+    DMA-issue counts.
+
+Both forms feed the double-buffered gather: tile j + 1's copies are
+prefetched into the second VMEM slot while tile j computes, so
+`_pick_bc` budgets TWO store-dtype candidate slots plus the f32
+dequantized tile.
 """
 from __future__ import annotations
 
@@ -25,11 +40,14 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.common import pad_to, round_up, should_interpret
 from repro.kernels.lmi_filter.kernel import (
     SEG,
+    lmi_filter_range_desc_pallas,
     lmi_filter_range_pallas,
+    lmi_filter_topk_desc_pallas,
     lmi_filter_topk_pallas,
 )
 
@@ -41,12 +59,13 @@ _STORE_DTYPES = (jnp.float32, jnp.bfloat16, jnp.int8)
 
 
 def _pick_bc(d: int, itemsize: int) -> int:
-    """Largest candidate-tile width whose VMEM working set fits: the
-    (bq, bc, d) store-dtype gather scratch PLUS the f32 dequantized copy
-    the kernel widens it into (quantized stores shrink the DMA, not the
-    compute tile)."""
+    """Largest candidate-tile width whose VMEM working set fits: TWO
+    (bq, bc, d) store-dtype gather slots (double buffering — tile j + 1
+    streams in while tile j computes) PLUS the f32 dequantized copy the
+    kernel widens the current slot into (quantized stores shrink the
+    DMA, not the compute tile)."""
     for bc in (512, 256, 128):
-        if _BQ * bc * d * (itemsize + 4) <= _VMEM_BUDGET:
+        if _BQ * bc * d * (2 * itemsize + 4) <= _VMEM_BUDGET:
             return bc
     return 128
 
@@ -73,60 +92,184 @@ def _segment_metadata(rows, valid):
     return r[..., 0], contig.astype(jnp.int32)
 
 
+def _run_descriptors(runs, cap: int):
+    """Compact `lmi.BucketRuns` into the kernel's descriptor operands.
+
+    -> (nrun (Q,) i32, dstart/doff/dlen (Q, K) i32) where K =
+    min(R, cap): run r of query q covers candidate slots
+    ``doff : doff + dlen`` with CSR rows ``dstart : dstart + dlen``.
+    Slot offsets are the running sum of the run lengths (the candidate
+    list is the runs' concatenation); lengths are clipped to the
+    candidate capacity (the last visited bucket may overshoot — its tail
+    beyond ``cap`` was never materialized as a slot). Nonzero runs are
+    compacted to the front (stable, preserving slot order) so the
+    kernel's per-row loop is bounded by the *actual* run count; K is a
+    static bound because every nonzero clipped run occupies >= 1 of the
+    cap slots. All jnp — zero host sync.
+    """
+    starts = jnp.asarray(runs.starts, jnp.int32)
+    lengths = jnp.asarray(runs.lengths, jnp.int32)
+    off = jnp.cumsum(lengths, axis=1) - lengths
+    eff = jnp.clip(cap - off, 0, lengths)  # clip the overshooting tail
+    nz = (eff > 0).astype(jnp.int32)
+    k = min(starts.shape[1], cap)
+    order = jnp.argsort(1 - nz, axis=1, stable=True)[:, :k]
+    dstart = jnp.take_along_axis(starts, order, axis=1)
+    doff = jnp.take_along_axis(off, order, axis=1).astype(jnp.int32)
+    dlen = jnp.take_along_axis(eff, order, axis=1).astype(jnp.int32)
+    nrun = jnp.sum(nz, axis=1).astype(jnp.int32)
+    return nrun, dstart, doff, dlen
+
+
 def _pad_inputs(queries, rows, valid, bc: int, scales):
     q = pad_to(jnp.asarray(queries, jnp.float32), 0, _BQ)
     r = pad_to(jnp.asarray(rows, jnp.int32), 0, _BQ)
     r = pad_to(r, 1, bc)
     v = pad_to(jnp.asarray(valid, jnp.int32), 0, _BQ)
     v = pad_to(v, 1, bc)  # padding is invalid (0)
-    seg_rows, seg_contig = _segment_metadata(r, v)
     # per-slot dequant scales ride as a (Q, C) tile input: 4 bytes/slot of
     # extra traffic vs. the d bytes/slot the int8 store saves
     sc = None if scales is None else jnp.where(v != 0, jnp.asarray(scales, jnp.float32)[r], 0.0)
-    return q, r, v, seg_rows, seg_contig, sc
+    return q, r, v, sc
+
+
+def _pad_descriptors(runs, cap: int):
+    """Descriptor operands padded on the query axis (padded rows run 0
+    descriptors, so the kernel never issues a DMA for them)."""
+    nrun, dstart, doff, dlen = _run_descriptors(runs, cap)
+    return (pad_to(nrun, 0, _BQ), pad_to(dstart, 0, _BQ),
+            pad_to(doff, 0, _BQ), pad_to(dlen, 0, _BQ))
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "interpret"))
 def lmi_filter_range(queries, rows, valid, embeddings, metric: str = "euclidean",
-                     interpret: bool | None = None, scales=None):
+                     interpret: bool | None = None, scales=None, runs=None):
     """Fused gather + dequant + distance over the candidate lists:
     -> (Q, C) f32.
 
     queries (Q, d); rows/valid (Q, C) into embeddings (M, d) in any
     store dtype (+ optional (M,) int8 scales). Invalid slots get +3.4e38.
+    ``runs``: optional `lmi.BucketRuns` — switches the gather to the
+    per-run descriptor DMA path (one variable-length DMA chain per
+    visited bucket; bit-identical output, only the copy schedule
+    changes).
     """
     if interpret is None:
         interpret = should_interpret()
     n_q, c = rows.shape
     emb = _as_store_dtype(embeddings)
     bc = _pick_bc(queries.shape[1], emb.dtype.itemsize)
-    qp, rp, vp, segr, segc, scp = _pad_inputs(queries, rows, valid, bc, scales)
-    out = lmi_filter_range_pallas(
-        qp, rp, vp, segr, segc, emb, scp,
-        metric=metric, bq=_BQ, bc=bc, interpret=interpret,
-    )
+    qp, rp, vp, scp = _pad_inputs(queries, rows, valid, bc, scales)
+    if runs is not None:
+        nrun, dstart, doff, dlen = _pad_descriptors(runs, c)
+        out = lmi_filter_range_desc_pallas(
+            qp, vp, nrun, dstart, doff, dlen, emb, scp,
+            metric=metric, bq=_BQ, bc=bc, interpret=interpret,
+        )
+    else:
+        segr, segc = _segment_metadata(rp, vp)
+        out = lmi_filter_range_pallas(
+            qp, rp, vp, segr, segc, emb, scp,
+            metric=metric, bq=_BQ, bc=bc, interpret=interpret,
+        )
     return out[:n_q, :c]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric", "interpret"))
 def lmi_filter_topk(queries, rows, valid, embeddings, k: int, metric: str = "euclidean",
-                    interpret: bool | None = None, scales=None):
+                    interpret: bool | None = None, scales=None, runs=None):
     """Fused gather + dequant + distance + streaming top-k:
     -> (dist, slot) (Q, k).
 
     ``slot`` indexes the candidate axis of ``rows``; exhausted slots
     (fewer than k valid candidates) hold dist=+3.4e38, slot=-1.
-    Distances are ascending per row.
+    Distances are ascending per row. ``runs``: optional `lmi.BucketRuns`
+    for the per-run descriptor gather (see `lmi_filter_range`).
     """
     if interpret is None:
         interpret = should_interpret()
     n_q, c = rows.shape
     emb = _as_store_dtype(embeddings)
     bc = _pick_bc(queries.shape[1], emb.dtype.itemsize)
-    qp, rp, vp, segr, segc, scp = _pad_inputs(queries, rows, valid, bc, scales)
+    qp, rp, vp, scp = _pad_inputs(queries, rows, valid, bc, scales)
     kpad = round_up(k, 8)
-    dist, slot = lmi_filter_topk_pallas(
-        qp, rp, vp, segr, segc, emb, scp,
-        metric=metric, k=k, kpad=kpad, bq=_BQ, bc=bc, interpret=interpret,
-    )
+    if runs is not None:
+        nrun, dstart, doff, dlen = _pad_descriptors(runs, c)
+        dist, slot = lmi_filter_topk_desc_pallas(
+            qp, vp, nrun, dstart, doff, dlen, emb, scp,
+            metric=metric, k=k, kpad=kpad, bq=_BQ, bc=bc, interpret=interpret,
+        )
+    else:
+        segr, segc = _segment_metadata(rp, vp)
+        dist, slot = lmi_filter_topk_pallas(
+            qp, rp, vp, segr, segc, emb, scp,
+            metric=metric, k=k, kpad=kpad, bq=_BQ, bc=bc, interpret=interpret,
+        )
     return dist[:n_q, :k], slot[:n_q, :k]
+
+
+# ---------------------------------------------------- measured DMA accounting
+
+
+def gather_dma_stats(rows, valid, d: int, itemsize: int = 4, runs=None) -> dict:
+    """MEASURED gather DMA-issue counts — a host-side numpy replay of the
+    kernel's three copy disciplines over the real rows/valid/runs a query
+    batch produced (the counting twin of `beam_eval.segment_stats`; used
+    by benchmarks/query_latency.py to assert the descriptor-DMA win from
+    run metadata rather than a model).
+
+    Replays exactly what each gather would issue over the padded
+    (Q', C') grid with the tile width `_pick_bc(d, itemsize)`:
+
+      * ``row_dmas``   — the naive per-row fallback: one DMA per slot;
+      * ``seg_dmas``   — segment mode: 1 DMA per contiguous all-valid
+        SEG group, SEG per broken group (`_segment_metadata`);
+      * ``desc_dmas``  — descriptor mode (requires ``runs``): per
+        candidate tile, per run, popcount(intersection length)
+        (`kernel._desc_gather`'s binary chunk decomposition).
+
+    Returns the counts plus ``gather_bytes`` (identical for all modes —
+    every discipline moves each candidate row once: C' * d * itemsize
+    per query row of the padded grid).
+    """
+    rows = np.asarray(rows)
+    valid = np.asarray(valid, np.int64)
+    bc = _pick_bc(d, itemsize)
+    qp = round_up(rows.shape[0], _BQ)
+    cp = round_up(rows.shape[1], bc)
+    r = np.zeros((qp, cp), np.int64)
+    v = np.zeros((qp, cp), np.int64)
+    r[: rows.shape[0], : rows.shape[1]] = rows
+    v[: rows.shape[0], : rows.shape[1]] = valid
+
+    r3 = r.reshape(qp, cp // SEG, SEG)
+    v3 = v.reshape(qp, cp // SEG, SEG)
+    contig = np.all(r3 == r3[..., :1] + np.arange(SEG), axis=-1)
+    contig &= np.all(v3 != 0, axis=-1)
+    seg_dmas = int(contig.sum()) + int((~contig).sum()) * SEG
+    out = {
+        "tile_bc": bc,
+        "n_tiles": cp // bc,
+        "row_dmas": qp * cp,
+        "seg_dmas": seg_dmas,
+        "gather_bytes": qp * cp * d * itemsize,
+    }
+    if runs is not None:
+        starts = np.asarray(runs.starts, np.int64)
+        lengths = np.asarray(runs.lengths, np.int64)
+        off = np.cumsum(lengths, axis=1) - lengths
+        eff = np.clip(rows.shape[1] - off, 0, lengths)  # cap-clipped (Q, R)
+        bases = np.arange(cp // bc, dtype=np.int64) * bc  # (T,)
+        lo = np.maximum(off[:, :, None], bases[None, None, :])
+        hi = np.minimum((off + eff)[:, :, None], bases[None, None, :] + bc)
+        clen = np.maximum(hi - lo, 0)  # (Q, R, T) intersection lengths
+        bits = (clen[..., None] >> np.arange(bc.bit_length())) & 1
+        out["desc_dmas"] = int(bits.sum())
+        out["n_runs"] = int((eff > 0).sum())
+        out["dma_reduction_desc_vs_seg"] = (
+            seg_dmas / out["desc_dmas"] if out["desc_dmas"] else float("inf")
+        )
+        out["dma_reduction_desc_vs_row"] = (
+            out["row_dmas"] / out["desc_dmas"] if out["desc_dmas"] else float("inf")
+        )
+    return out

@@ -10,6 +10,12 @@ or int8; ``scales`` carries the per-row int8 dequant scales. Dequant
 happens on the gathered block (the kernel's in-VMEM dequant, spelled in
 HBM-resident jnp), so both implementations see bit-identical candidate
 values and parity tests are tight.
+
+This oracle is gather-strategy agnostic: the kernel's two HBM->VMEM
+modes — the SEG-windowed segment copies and the per-run descriptor DMAs
+of `ops.lmi_filter_range(..., runs=...)` — land the same candidate tile
+(uncovered slots are invalid and masked to +BIG either way), so one
+reference covers both, pipelined double-buffering included.
 """
 from __future__ import annotations
 

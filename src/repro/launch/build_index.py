@@ -83,6 +83,12 @@ def main():
                     help="default beam node-evaluation mode recorded in meta.json "
                          "(how pruned beam levels read node models; see "
                          "docs/architecture.md)")
+    ap.add_argument("--prebuilt-planes", action="store_true",
+                    help="materialize the canonical node-score planes once "
+                         "at build time and save them next to the index "
+                         "(keyed on index revision + temperature schedule); "
+                         "serving then skips the per-batch canonicalization "
+                         "read of the raw level params (docs/index_format.md)")
     ap.add_argument("--calibrate", action="store_true",
                     help="fit per-level temperatures + a beam width schedule on a "
                          "calibration slice of the build set (repro.core.calibrate) "
@@ -163,15 +169,23 @@ def main():
         store_dtype=args.store_dtype, beam_width=beam_width,
         beam_widths=beam_widths, temperatures=temperatures,
         calibration=calibration, node_eval=args.node_eval,
+        prebuilt_planes=args.prebuilt_planes,
         build_seconds=t_build, embed_seconds=t_embed,
     )
+    if args.prebuilt_planes:
+        from repro.core import planes as planes_lib
+
+        pl = planes_lib.from_lmi(index, temperatures)
+        print(f"prebuilt planes: {pl.nbytes() / 2**20:.1f} MB "
+              f"(revision {pl.revision}, {len(pl.levels)} pruned levels)")
     print(f"saved to {args.out}")
 
 
 def save_index(directory: str, index: lmi.LMI, *, n_sections: int, cutoff: float,
                seed: int = 0, store_dtype: str = "float32",
                beam_width=None, beam_widths=None, temperatures=None,
-               calibration=None, node_eval: str = "gather", **extra_meta) -> None:
+               calibration=None, node_eval: str = "gather",
+               prebuilt_planes: bool = False, **extra_meta) -> None:
     """Persist a built LMI (atomic npz + meta.json, format 2 — the schema
     is specified in docs/index_format.md).
 
@@ -179,6 +193,13 @@ def save_index(directory: str, index: lmi.LMI, *, n_sections: int, cutoff: float
     ``calibration`` provenance — `repro.core.calibrate.Calibration.to_meta`)
     are optional: when absent, loaders fall back to the scalar
     ``beam_width`` and temperature 1.0 (the pre-calibration defaults).
+
+    With ``prebuilt_planes=True`` the canonical node-score planes
+    (`repro.core.planes.IndexPlanes`) are materialized once here and saved
+    as a second checkpoint under ``<dir>/planes/``, keyed on the index
+    revision and the temperature schedule (meta ``prebuilt_planes`` dict).
+    Legacy checkpoints simply lack the key — loaders fall back to
+    per-batch canonicalization, so the format stays backward compatible.
     """
     os.makedirs(directory, exist_ok=True)
     state = {
@@ -207,6 +228,16 @@ def save_index(directory: str, index: lmi.LMI, *, n_sections: int, cutoff: float
         meta["temperatures"] = [float(t) for t in temperatures]
     if calibration is not None:
         meta["calibration"] = calibration
+    if prebuilt_planes:
+        from repro.core import planes as planes_lib
+
+        planes = planes_lib.from_lmi(index, temperatures)
+        ckpt.save(os.path.join(directory, "planes"), 0,
+                  {"levels": planes.levels})
+        meta["prebuilt_planes"] = dict(
+            revision=planes.revision,
+            temperatures=[float(t) for t in planes.temperatures],
+        )
     with open(os.path.join(directory, "meta.json"), "w") as f:
         json.dump(meta, f, indent=1)
 
@@ -295,6 +326,37 @@ def load_index(directory: str) -> lmi.LMI:
         sorted_ids=state["sorted_ids"],
         sorted_embeddings=state["sorted_embeddings"],
         max_bucket_size=int(max_bucket),
+    )
+
+
+def load_planes(directory: str, index: lmi.LMI):
+    """Restore the prebuilt node-score planes saved next to an index, or
+    None when the checkpoint predates (or was built without)
+    ``--prebuilt-planes`` — the loader's legacy default is per-batch
+    canonicalization, so absence is not an error.
+
+    The meta ``prebuilt_planes`` key records the revision and temperature
+    schedule the planes were folded with; both become the restored
+    `IndexPlanes`' static metadata so `planes.validate` can reject them
+    against a mutated index or a mismatched serving schedule.
+    """
+    with open(os.path.join(directory, "meta.json")) as f:
+        meta = json.load(f)
+    info = meta.get("prebuilt_planes")
+    if not info:
+        return None
+    from repro.core import planes as planes_lib
+
+    temps = tuple(float(t) for t in info["temperatures"])
+    shapes = jax.eval_shape(lambda: planes_lib.from_lmi(index, temps))
+    template = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    state = ckpt.restore(os.path.join(directory, "planes"),
+                         {"levels": template.levels})
+    return planes_lib.IndexPlanes(
+        temperatures=temps,
+        levels=tuple(state["levels"]),
+        revision=int(info["revision"]),
     )
 
 

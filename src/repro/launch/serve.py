@@ -20,7 +20,10 @@ build's meta.json calibration keys (``beam_widths`` schedule over the
 scalar ``beam_width``; missing keys mean exact enumeration, temperature
 1.0, per-pair gather — docs/index_format.md). ``--beam`` accepts a
 scalar or a comma schedule ("64,16", one width per pruned level —
-docs/beam_search.md).
+docs/beam_search.md). Indexes built with ``--prebuilt-planes`` serve the
+segmented node evaluation from the saved canonical planes (no per-batch
+canonicalization); the planes are refolded at startup if the serving
+temperature schedule differs from the one they were saved with.
 """
 from __future__ import annotations
 
@@ -35,8 +38,8 @@ import numpy as np
 
 from repro.core import filtering, lmi
 from repro.core import store as store_lib
-from repro.launch.build_index import (load_index, parse_beam, parse_temperatures,
-                                      serving_defaults)
+from repro.launch.build_index import (load_index, load_planes, parse_beam,
+                                      parse_temperatures, serving_defaults)
 
 
 def main():
@@ -80,6 +83,18 @@ def main():
     temperatures = (defaults["temperatures"] if args.temperatures is None
                     else parse_temperatures(args.temperatures))
     node_eval = args.node_eval or defaults["node_eval"]
+    # prebuilt planes (saved by build_index --prebuilt-planes) skip the
+    # per-batch canonicalization read; only usable when the serving
+    # temperature schedule matches the one they were folded with
+    planes = load_planes(args.index, index)
+    if planes is not None:
+        temps_meta = lmi.normalize_temperatures(temperatures, index.depth)
+        if planes.temperatures != temps_meta:
+            print(f"prebuilt planes folded with temperatures "
+                  f"{planes.temperatures} != serving {temps_meta}; refolding")
+            from repro.core import planes as planes_lib
+
+            planes = planes_lib.from_lmi(index, temperatures)
     beam_str = ("exact" if beam is None
                 else ",".join(map(str, beam)) if isinstance(beam, tuple) else beam)
     temp_str = ("1.0" if temperatures is None
@@ -87,7 +102,9 @@ def main():
     print(f"index: {index.n_objects} objects, {index.n_leaves} buckets "
           f"(depth {index.depth}, arities {'x'.join(map(str, index.arities))}), "
           f"dim {index.dim}, store dtype {store_dtype}, "
-          f"beam {beam_str}, temperatures {temp_str}, node eval {node_eval}")
+          f"beam {beam_str}, temperatures {temp_str}, node eval {node_eval}"
+          + (f", prebuilt planes {planes.nbytes() / 2**20:.1f} MB"
+             if planes is not None else ""))
 
     # queries: perturbed database objects (realistic near-duplicate load)
     rng = np.random.default_rng(args.seed)
@@ -106,11 +123,20 @@ def main():
         # jit the wrapper: sharded_knn rebuilds its shard_map closure per
         # call, so without this every batch would re-trace and the warmup
         # batch would absorb nothing
+        # rebind planes to the sharded store's revision (shard_index built
+        # a fresh store; its revision is the sharded analog of
+        # index_revision, so validate against that)
+        sharded_planes = planes
+        if sharded_planes is not None:
+            import dataclasses as _dc
+
+            sharded_planes = _dc.replace(
+                sharded_planes, revision=sharded.store.revision)
         fn = jax.jit(lambda q: sharded_knn(
             sharded, q, k=args.k, mesh=mesh, stop_condition=args.stop,
             metric=args.metric, max_radius=args.radius, beam_width=beam,
             node_eval=node_eval, use_kernel=args.use_kernel,
-            temperatures=temperatures,
+            temperatures=temperatures, planes=sharded_planes,
         ))
     else:
         store = store_lib.from_lmi(index, store_dtype)
@@ -119,7 +145,7 @@ def main():
             index, q, k=args.k, stop_condition=args.stop, metric=args.metric,
             max_radius=args.radius, store=store, beam_width=beam,
             node_eval=node_eval, use_kernel=args.use_kernel,
-            temperatures=temperatures,
+            temperatures=temperatures, planes=planes,
         )
 
     # Every batch runs at the fixed (--batch, d) shape: the ragged tail is

@@ -246,3 +246,84 @@ def test_sharded_knn_fused_matches_unfused(small_lmi, protein_embeddings, metric
     # ~1e-3 (same bound as the single-device e2e tests)
     np.testing.assert_allclose(np.asarray(d_k)[fin], np.asarray(d_ref)[fin],
                                rtol=1e-4, atol=E2E_ATOL if metric == "euclidean" else 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# descriptor-grid gather (ISSUE 6): per-run variable-length DMAs
+
+
+def _runs_case(Q, R, M, d, cap, max_len=12, seed=11):
+    """Candidate layout as `_search_core` emits it: per query a list of
+    contiguous (start, length) bucket runs, concatenated into the first
+    sum(lengths) slots of a (Q, cap) row/valid pair. Zero-length runs and
+    all-empty queries come free from the 0 draw; lengths are clipped at
+    cap exactly like `_run_descriptors` clips them."""
+    rng = np.random.default_rng(seed)
+    emb = jnp.asarray(rng.normal(size=(M, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(Q, d)).astype(np.float32))
+    starts = rng.integers(0, M - max_len, size=(Q, R)).astype(np.int32)
+    lengths = rng.integers(0, max_len + 1, size=(Q, R)).astype(np.int32)
+    rows = np.zeros((Q, cap), np.int32)
+    valid = np.zeros((Q, cap), bool)
+    for i in range(Q):
+        pos = 0
+        for r in range(R):
+            n = min(int(lengths[i, r]), cap - pos)
+            rows[i, pos:pos + n] = np.arange(starts[i, r], starts[i, r] + n)
+            valid[i, pos:pos + n] = True
+            pos += n
+    runs = lmi.BucketRuns(starts=jnp.asarray(starts),
+                          lengths=jnp.asarray(lengths))
+    return q, jnp.asarray(rows), jnp.asarray(valid), emb, runs
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "sq_euclidean", "cosine"])
+@pytest.mark.parametrize(
+    "Q,R,M,d,cap",
+    [
+        (8, 24, 512, 32, 128),   # aligned cap
+        (5, 9, 300, 16, 37),     # ragged everything, R < cap
+        (6, 40, 800, 45, 130),   # cap spans two tiles, paper dim
+    ],
+)
+def test_descriptor_range_matches_row_gather(Q, R, M, d, cap, metric):
+    """The per-run descriptor gather must be bit-identical to the
+    row-gather path: it lands the same candidate tile in VMEM (uncovered
+    slots differ only where valid is False, and those are masked +BIG)."""
+    q, rows, valid, emb, runs = _runs_case(Q, R, M, d, cap)
+    got = lf_ops.lmi_filter_range(q, rows, valid, emb, metric=metric,
+                                  runs=runs)
+    want = lf_ops.lmi_filter_range(q, rows, valid, emb, metric=metric)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and against the jnp oracle, independently of either kernel
+    oracle = lf_ref.lmi_filter_ref(q, rows, valid, emb, metric=metric)
+    g, w = np.asarray(got), np.asarray(oracle)
+    np.testing.assert_array_equal(g >= 1e37, w >= 1e37)
+    fin = w < 1e37
+    np.testing.assert_allclose(g[fin], w[fin], rtol=TOL[metric], atol=TOL[metric])
+
+
+@pytest.mark.parametrize("k", [1, 7, 30])
+def test_descriptor_topk_matches_row_gather(k):
+    q, rows, valid, emb, runs = _runs_case(7, 30, 600, 24, 200)
+    gd, gi = lf_ops.lmi_filter_topk(q, rows, valid, emb, k, runs=runs)
+    wd, wi = lf_ops.lmi_filter_topk(q, rows, valid, emb, k)
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_descriptor_dma_stats_reduction():
+    """`gather_dma_stats` replays the three gather strategies on the same
+    candidate layout; the descriptor grid must issue far fewer DMAs than
+    the fixed SEG-8 segment path on long contiguous runs."""
+    q, rows, valid, emb, runs = _runs_case(8, 24, 2048, 32, 256, max_len=48)
+    stats = lf_ops.gather_dma_stats(rows, valid, 32, runs=runs)
+    assert stats["desc_dmas"] > 0
+    assert stats["desc_dmas"] < stats["seg_dmas"] < stats["row_dmas"]
+    assert stats["dma_reduction_desc_vs_seg"] > 1.0
+    # n_runs counts runs that survive the cap clip (offsets past cap are
+    # dropped), matching what the kernel actually visits
+    lengths = np.asarray(runs.lengths).astype(np.int64)
+    off = np.cumsum(lengths, axis=1) - lengths
+    eff = np.clip(256 - off, 0, lengths)
+    assert stats["n_runs"] == int(np.sum(eff > 0))

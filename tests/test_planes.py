@@ -1,0 +1,141 @@
+"""Prebuilt canonical node-score planes (ISSUE 6).
+
+Materializing `family_planes` once at build/load (`repro.core.planes`)
+must be invisible to search results: the segmented beam consumes the same
+canonical arrays either way, so answers are bit-identical — only the
+per-batch canonicalization read disappears. Staleness is a correctness
+hazard (planes of revision r against an index mutated to r+1 would score
+against dead centroids), so `validate` raises and `refresh` rebuilds,
+mirroring the stale-CandidateStore protocol of `repro.core.store`.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import filtering, lmi
+from repro.core import planes as planes_lib
+
+MODELS = ("kmeans", "gmm", "kmeans+logreg")
+
+
+@pytest.fixture(scope="module", params=MODELS)
+def model_index(request, key, protein_embeddings):
+    return lmi.build(key, protein_embeddings, arities=(4, 4, 4),
+                     model_type=request.param)
+
+
+def test_from_lmi_shapes(model_index):
+    planes = planes_lib.from_lmi(model_index)
+    assert planes.depth == model_index.depth
+    assert len(planes.levels) == model_index.depth - 1
+    assert planes.revision == 0
+    assert planes.nbytes() > 0
+    for i in range(1, model_index.depth):
+        lv = planes.level_planes(i)
+        n_nodes = int(np.prod(model_index.arities[:i]))
+        for m in lv.mats:
+            assert m.shape == (n_nodes, model_index.arities[i], model_index.dim)
+        for v in lv.vecs:
+            assert v.shape == (n_nodes, model_index.arities[i])
+
+
+@pytest.mark.parametrize("temps", [None, (1.0, 0.7, 0.5)])
+def test_search_with_planes_bit_identical(model_index, protein_embeddings,
+                                          temps):
+    """Acceptance: leaf-set parity unchanged — prebuilt planes feed the
+    exact arrays the per-batch canonicalization would have built, so the
+    segmented beam search is bit-identical with and without them."""
+    q = protein_embeddings[:8]
+    planes = planes_lib.from_lmi(model_index, temps)
+    kw = dict(node_eval="segmented", beam_width=4, temperatures=temps)
+    res_ref = lmi.search(model_index, q, **kw)
+    res_pl = lmi.search(model_index, q, planes=planes, **kw)
+    np.testing.assert_array_equal(np.asarray(res_ref.candidate_ids),
+                                  np.asarray(res_pl.candidate_ids))
+    np.testing.assert_array_equal(np.asarray(res_ref.valid),
+                                  np.asarray(res_pl.valid))
+    ids_ref, dd_ref = filtering.knn_query(model_index, q, k=7, **kw)
+    ids_pl, dd_pl = filtering.knn_query(model_index, q, k=7, planes=planes,
+                                        **kw)
+    np.testing.assert_array_equal(np.asarray(ids_ref), np.asarray(ids_pl))
+    np.testing.assert_array_equal(np.asarray(dd_ref), np.asarray(dd_pl))
+
+
+def test_search_with_planes_kernel_path(model_index, protein_embeddings):
+    """Same bit-identity through the Pallas kernels (segmented beam_eval
+    + fused candidate filter)."""
+    q = protein_embeddings[:8]
+    planes = planes_lib.from_lmi(model_index)
+    kw = dict(node_eval="segmented", beam_width=4, use_kernel=True)
+    ids_ref, d_ref = filtering.knn_query(model_index, q, k=7, **kw)
+    ids_pl, d_pl = filtering.knn_query(model_index, q, k=7, planes=planes,
+                                       **kw)
+    np.testing.assert_array_equal(np.asarray(ids_ref), np.asarray(ids_pl))
+    np.testing.assert_array_equal(np.asarray(d_ref), np.asarray(d_pl))
+
+
+def test_stale_planes_rejected_and_refreshed(key, protein_embeddings):
+    """Regression: `lmi.insert` bumps index_revision, which must invalidate
+    prebuilt planes (the level models were refit); `planes.refresh` is the
+    recovery path, mirroring `store.refresh`."""
+    idx = lmi.build(key, protein_embeddings[:400], arities=(4, 4))
+    planes = planes_lib.from_lmi(idx)
+    assert planes.revision == idx.index_revision
+    idx2 = lmi.insert(idx, protein_embeddings[400:450])
+    assert idx2.index_revision != idx.index_revision
+    with pytest.raises(ValueError, match="stale IndexPlanes"):
+        lmi.search(idx2, protein_embeddings[:4], node_eval="segmented",
+                   beam_width=4, planes=planes)
+    fresh = planes_lib.refresh(idx2, planes)
+    assert fresh.revision == idx2.index_revision
+    r1 = lmi.search(idx2, protein_embeddings[:4], node_eval="segmented",
+                    beam_width=4, planes=fresh)
+    r2 = lmi.search(idx2, protein_embeddings[:4], node_eval="segmented",
+                    beam_width=4)
+    np.testing.assert_array_equal(np.asarray(r1.candidate_ids),
+                                  np.asarray(r2.candidate_ids))
+
+
+def test_temperature_mismatch_rejected(model_index):
+    planes = planes_lib.from_lmi(model_index, (1.0, 0.7, 0.5))
+    with pytest.raises(ValueError, match="temperatures"):
+        planes_lib.validate(model_index, planes, (1.0, 1.0, 1.0))
+
+
+def test_save_load_roundtrip(tmp_path, model_index):
+    """`build_index --prebuilt-planes` writes a second checkpoint under
+    <dir>/planes/ keyed by the meta prebuilt_planes dict; `load_planes`
+    restores it bit-exactly. Checkpoints without the key load None."""
+    from repro.launch.build_index import load_index, load_planes, save_index
+
+    out = str(tmp_path / "idx")
+    save_index(out, model_index, n_sections=10, cutoff=50.0,
+               temperatures=(1.0, 0.7, 0.5), prebuilt_planes=True)
+    loaded = load_index(out)
+    planes = load_planes(out, loaded)
+    assert planes is not None
+    assert planes.temperatures == (1.0, 0.7, 0.5)
+    want = planes_lib.from_lmi(model_index, (1.0, 0.7, 0.5))
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        planes.levels, want.levels)
+
+    out2 = str(tmp_path / "idx_legacy")
+    save_index(out2, model_index, n_sections=10, cutoff=50.0)
+    assert load_planes(out2, load_index(out2)) is None
+
+
+def test_planes_path_zero_host_sync(small_lmi, protein_embeddings):
+    """The planes fast path must not reintroduce device->host syncs: the
+    revision/temperature validation is static metadata, the level planes
+    are traced pytree leaves."""
+    q = jax.device_put(jnp.asarray(protein_embeddings[:8], jnp.float32))
+    planes = planes_lib.from_lmi(small_lmi)
+    kw = dict(node_eval="segmented", beam_width=4, planes=planes)
+    filtering.knn_query(small_lmi, q, k=5, **kw)  # warmup compile
+    lmi.search(small_lmi, q, **kw)
+    with jax.transfer_guard_device_to_host("disallow"):
+        filtering.knn_query(small_lmi, q, k=5, **kw)
+        lmi.search(small_lmi, q, **kw)
