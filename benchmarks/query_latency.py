@@ -59,6 +59,13 @@ RADIUS = 0.3
 RADIUS_SCALE = 0.7  # fig5 P90 calibration for Euclidean
 STOP = 0.01
 INT8_MIN_RECALL = 0.95  # ISSUE 2 acceptance bound
+# ISSUE 7 sanity bound: a sub-f32 store must never be grossly *slower*
+# than the f32 store on the same path. The bf16 store once ran ~10x
+# slower than f32 (the interpret-mode DMA emulation fell into a
+# per-element bfloat16 conversion path; fixed by moving bf16 bytes as
+# int16 — ops._as_store_dtype), and nothing bounded it. The factor
+# leaves room for timer noise on shared CI runners, not for a relapse.
+QUANT_MAX_SLOWDOWN_VS_F32 = 3.0
 # ISSUE 6 acceptance bound: the per-run descriptor gather must issue at
 # least this many times fewer DMAs than the fixed SEG-8 segment path,
 # measured (gather_dma_stats replay) on the real 20k run metadata
@@ -234,6 +241,15 @@ def main() -> None:
     assert int8_recall >= INT8_MIN_RECALL, (
         f"int8 store recall@{K} {int8_recall:.3f} < acceptance bound {INT8_MIN_RECALL}"
     )
+    f32_us = results["store_sweep"]["float32"]["us_per_query"]
+    for dtype in ("bfloat16", "int8"):
+        slowdown = results["store_sweep"][dtype]["us_per_query"] / f32_us
+        results["store_sweep"][dtype]["slowdown_vs_f32"] = slowdown
+        assert slowdown <= QUANT_MAX_SLOWDOWN_VS_F32, (
+            f"{dtype} store runs {slowdown:.1f}x slower than float32 "
+            f"(bound {QUANT_MAX_SLOWDOWN_VS_F32}x) — the store-sweep anomaly "
+            "is back (see ops._as_store_dtype)"
+        )
 
     out = "BENCH_query_latency.json"
     with open(out, "w") as fh:

@@ -22,6 +22,8 @@ from benchmarks import (
     model_comparison,
     query_latency,
     roofline_table,
+    serving_stages,
+    serving_throughput,
     table1_build,
     table2_range,
     table3_knn,
@@ -41,6 +43,8 @@ SECTIONS = {
     "roofline": roofline_table.main,
     "query_latency": query_latency.main,
     "depth_beam": depth_beam.main,
+    "serving_stages": serving_stages.main,
+    "serving_throughput": serving_throughput.main,
 }
 
 

@@ -1,0 +1,122 @@
+"""Per-stage serving microbenchmark (ISSUE 7): where a served batch spends.
+
+Splits the query path the way the `repro.serving` harness pipelines it
+and times each stage in isolation at the serving batch shape:
+
+  * **rank**    — leaf ranking + candidate row extraction
+                  (`lmi.search_rows`: node-model forward passes, bucket
+                  ordering, stop-condition cut, CSR slot walk);
+  * **gather_filter** — candidate gather + distance + top-k
+                  (`filtering.filter_topk` over precomputed rows/valid/
+                  runs — the stage the fused Pallas kernel owns);
+  * **host_stage**    — host->device staging of one query batch
+                  (`jax.device_put`, the submit-side transfer the stager
+                  overlaps under compute);
+  * **host_drain**    — device->host readback of one answer ((B, k) ids
+                  + distances, the one sync point the harness keeps
+                  behind the overlap window).
+
+The end-to-end engine call (`filtering.knn_query`) is timed alongside;
+stage shares are reported against it. The staging/drain numbers are what
+justify (or cap) the overlap win: on a single-host CPU backend they are
+small vs compute, so the continuous-batching win comes from batch
+occupancy, not transfer hiding — docs/serving.md walks through the
+arithmetic, and the JSON records the shares so a real-TPU run (PCIe
+staging, larger batches) can show its different split.
+
+Writes BENCH_serving_stages.json. Scale via REPRO_BENCH_{DB,QUERIES}.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import filtering, lmi
+from repro.core import store as store_lib
+
+REPS = 20
+K = 30
+STOP = 0.01
+BATCH = 32
+
+
+def _timed(fn, reps=REPS):
+    jax.block_until_ready(fn())  # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main() -> None:
+    index, _ = common.built_index()
+    emb = common.embeddings()
+    qids = common.query_ids()
+    q = np.asarray(emb)[qids][:BATCH].astype(np.float32)
+    if q.shape[0] < BATCH:
+        q = np.concatenate([q, np.broadcast_to(q[:1], (BATCH - q.shape[0], q.shape[1]))])
+    store = store_lib.from_lmi(index, "float32")
+
+    # --- stage inputs: one ranked batch, frozen, so gather_filter times
+    # only its own work
+    rank_fn = jax.jit(lambda x: lmi.search_rows(index, x, stop_condition=STOP))
+    res = lmi.search(index, jnp.asarray(q), stop_condition=STOP)
+    _, rows, valid = rank_fn(jnp.asarray(q))
+    rows, valid = jax.block_until_ready((rows, valid))
+    filter_fn = jax.jit(lambda x, r, v: filtering.filter_topk(
+        store, x, r, v, K, metric="euclidean", runs=res.runs))
+    engine_fn = jax.jit(lambda x: filtering.knn_query(
+        index, x, K, STOP, store=store))
+
+    q_dev = jax.device_put(jnp.asarray(q))
+    out_ids, out_d = jax.block_until_ready(engine_fn(q_dev))
+
+    stages = {
+        "rank": lambda: rank_fn(q_dev),
+        "gather_filter": lambda: filter_fn(q_dev, rows, valid),
+        "host_stage": lambda: jax.device_put(jnp.asarray(q)),
+        "host_drain": lambda: (np.asarray(out_ids), np.asarray(out_d)),
+        "end_to_end": lambda: engine_fn(q_dev),
+    }
+
+    results: dict = {
+        "config": {
+            "db_size": index.n_objects, "batch": BATCH, "k": K,
+            "stop_condition": STOP, "dim": int(q.shape[1]),
+            "backend": jax.default_backend(), "reps": REPS,
+        },
+        "stages": {},
+    }
+    print("stage,us_per_query,share_of_end_to_end")
+    e2e = _timed(stages["end_to_end"])
+    for name, fn in stages.items():
+        sec = e2e if name == "end_to_end" else _timed(fn)
+        us_q = sec / BATCH * 1e6
+        results["stages"][name] = {
+            "us_per_query": us_q,
+            "share_of_end_to_end": sec / e2e,
+        }
+        print(f"{name},{us_q:.1f},{sec / e2e:.3f}")
+
+    # the overlap window can hide at most the transfer stages; occupancy
+    # is where the continuous-batching throughput win lives (docs/serving.md)
+    xfer = (results["stages"]["host_stage"]["us_per_query"]
+            + results["stages"]["host_drain"]["us_per_query"])
+    results["transfer_share_of_end_to_end"] = xfer / results["stages"]["end_to_end"]["us_per_query"]
+    print(f"# transfer (stage+drain) share of end-to-end: "
+          f"{results['transfer_share_of_end_to_end']:.3f}")
+
+    out = "BENCH_serving_stages.json"
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -244,6 +244,7 @@ def sharded_knn(
     interpret: Optional[bool] = None,
     temperatures: "lmi_lib.Temperatures" = None,
     planes=None,
+    shard_ok: Optional[Array] = None,
 ):
     """Distributed kNN: queries sharded over ``query_axes``, DB buckets over
     ``shard_axis``. Exact vs. the single-device result (for the same
@@ -280,6 +281,18 @@ def sharded_knn(
     on the single-device path (it is the same `filtering.filter_topk`
     call) — and, with ``node_eval="segmented"``, the beam node
     evaluation through the beam_eval Pallas kernel.
+
+    ``shard_ok`` — degraded-recall fault tolerance (ISSUE 7,
+    docs/serving.md): a replicated (S,) float mask (1.0 live, 0.0
+    failed — `repro.distributed.fault_tolerance.ShardHealth.mask`). A
+    failed shard's local top-k is masked to +BIG *before* the global
+    all_gather merge, so its candidates simply never reach the answer:
+    the merged result is exact over the live shards' buckets (recall
+    degrades by the failed shards' candidate share; slots only a failed
+    shard could fill come back id -1 / +inf, the standard not-found
+    contract). A *traced* operand — flipping a shard's health never
+    recompiles the serving plan. None == all live (bitwise the
+    pre-shard_ok plan).
     """
     if n_objects is None:
         n_objects = sharded.n_objects or int(jnp.sum(sharded.global_sizes))
@@ -311,9 +324,12 @@ def sharded_knn(
     store_revision = sharded.store.revision
     has_scales = sharded.store.scales is not None
     radius = _BIG if max_radius is None else jnp.float32(max_radius * radius_scale)
+    if shard_ok is None:
+        shard_ok = jnp.ones((sharded.n_shards,), jnp.float32)
+    shard_ok = jnp.asarray(shard_ok, jnp.float32)
 
-    def local_fn(queries_l, radius_l, data, scales, ids, offsets, levels, gsizes,
-                 planes_l):
+    def local_fn(queries_l, radius_l, shard_ok_l, data, scales, ids, offsets,
+                 levels, gsizes, planes_l):
         # shard_map passes block-local arrays with a size-1 shard dim
         local_store = store_lib.CandidateStore(
             dtype=store_dtype,
@@ -337,6 +353,11 @@ def sharded_knn(
         )
         idx = jnp.maximum(top_slot, 0)
         local_ids = jnp.take_along_axis(local_store.ids[rows], idx, axis=1)
+        # degraded-recall fault tolerance: a failed shard's candidates are
+        # pushed past the not-found threshold before the merge, so the
+        # collective still runs (no hang) but contributes nothing
+        ok = shard_ok_l[jax.lax.axis_index(shard_axis)]
+        local_d = jnp.where(ok > 0.0, local_d, _BIG)
         # global merge: gather every shard's top-k, re-rank
         all_d = jax.lax.all_gather(local_d, shard_axis)  # (S, Q, k)
         all_ids = jax.lax.all_gather(local_ids, shard_axis)
@@ -366,13 +387,14 @@ def sharded_knn(
     fn = _shard_map(
         local_fn,
         mesh,
-        (qspec, rep, shard_spec_emb, scale_spec, shard_spec_ids, shard_spec_off,
-         rep, rep, planes_spec),
+        (qspec, rep, rep, shard_spec_emb, scale_spec, shard_spec_ids,
+         shard_spec_off, rep, rep, planes_spec),
         (qspec, qspec),
     )
     return fn(
         jnp.asarray(queries, jnp.float32),
         radius,
+        shard_ok,
         sharded.store.data,
         sharded.store.scales,
         sharded.store.ids,

@@ -21,6 +21,17 @@ What actually fails at scale and what we do about it:
     training loop checks `should_checkpoint(step)` every step; a
     preemption signal forces an immediate checkpoint at the next step
     boundary.
+  * **Query-path shard failure** — a served index is bucket-sharded
+    over the model axis (`repro.core.distributed_lmi`); a dead or
+    straggling shard must degrade the answer, not hang the batch.
+    `ShardHealth` keeps the live/failed mask the serving harness feeds
+    to `sharded_knn(shard_ok=...)` (a failed shard's candidates are
+    masked out of the global top-k merge — the merged answer loses that
+    shard's recall share and the response is flagged degraded,
+    docs/serving.md) and folds `StepTimer` straggler detection over the
+    per-batch serve times, mirroring the training-loop policy: flag,
+    and after `patience` consecutive flags report that a re-mesh /
+    shard-eviction decision is due.
 """
 from __future__ import annotations
 
@@ -94,6 +105,73 @@ class StepTimer:
         self.mean += self.alpha * d
         self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
         return dt, straggler
+
+
+class ShardHealth:
+    """Live/failed mask over the query path's bucket shards.
+
+    The mask rides into `repro.core.distributed_lmi.sharded_knn` as the
+    ``shard_ok`` operand — a *traced* (S,) float array, so flipping a
+    shard's health never recompiles the serving plan. Straggler
+    accounting reuses `StepTimer` over per-batch serve wall times with
+    the training loop's patience policy (`note_straggler` semantics).
+    """
+
+    def __init__(self, n_shards: int, patience: int = 3,
+                 timer: Optional[StepTimer] = None):
+        self.n_shards = n_shards
+        self.patience = patience
+        self.timer = timer or StepTimer()
+        self._failed: set[int] = set()
+        self._strikes = 0
+        self.straggler_events = 0
+
+    def mark_failed(self, shard: int) -> None:
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range [0, {self.n_shards})")
+        self._failed.add(shard)
+
+    def mark_live(self, shard: int) -> None:
+        self._failed.discard(shard)
+
+    @property
+    def failed(self) -> tuple[int, ...]:
+        return tuple(sorted(self._failed))
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self._failed)
+
+    @property
+    def n_live(self) -> int:
+        return self.n_shards - len(self._failed)
+
+    def mask(self) -> np.ndarray:
+        """(S,) f32 — 1.0 live, 0.0 failed (the `sharded_knn` ``shard_ok``
+        operand)."""
+        m = np.ones(self.n_shards, np.float32)
+        for s in self._failed:
+            m[s] = 0.0
+        return m
+
+    def observe_batch(self, dt: float) -> tuple[bool, bool]:
+        """Fold one serve-batch wall time into the straggler tracker.
+
+        Returns (is_straggler, remesh_due): ``remesh_due`` goes True
+        after ``patience`` consecutive straggler batches — the signal
+        that the operator policy (evict the slow shard / rebuild the
+        mesh via `elastic_mesh`) should run. Attribution of a straggle
+        to a specific shard needs per-shard timing telemetry that a
+        single-host batch cannot observe, so eviction itself stays an
+        explicit `mark_failed` call.
+        """
+        _, straggler = self.timer.observe(dt)
+        if straggler:
+            self.straggler_events += 1
+            self._strikes += 1
+        else:
+            self._strikes = 0
+        return straggler, self._strikes >= self.patience
 
 
 @dataclasses.dataclass

@@ -186,7 +186,15 @@ def _desc_gather(nrun_ref, dstart_ref, doff_ref, dlen_ref, emb_ref, cand_scr,
 
 def _dequant(cand, scale_ref):
     """Widen the gathered tile to f32 in VMEM; int8 stores multiply by the
-    per-row scale tile. (bq, bc, d) store-dtype -> (bq, bc, d) f32."""
+    per-row scale tile. (bq, bc, d) store-dtype -> (bq, bc, d) f32.
+
+    bf16 stores arrive bit-cast as int16 (the wire dtype — see
+    `ops._as_store_dtype`): the DMA engine moves raw 2-byte lanes either
+    way, but int16 copies avoid the interpreter's per-element bf16
+    conversion fallback (the ~10x bf16 store-sweep pathology in
+    BENCH_query_latency.json); the bitcast back to bf16 here is free."""
+    if cand.dtype == jnp.int16:
+        cand = jax.lax.bitcast_convert_type(cand, jnp.bfloat16)
     c = cand.astype(jnp.float32)
     if scale_ref is not None:
         c = c * scale_ref[...][..., None]

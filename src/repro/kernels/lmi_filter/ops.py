@@ -71,9 +71,18 @@ def _pick_bc(d: int, itemsize: int) -> int:
 
 
 def _as_store_dtype(embeddings):
+    """The store in its kernel wire dtype. bf16 is bit-cast to int16 —
+    the copies move identical bytes (the bitcast is free under jit) but
+    int16 sidesteps the interpret-mode DMA emulation's per-element
+    bfloat16 conversion fallback, which made bf16 stores ~10x *slower*
+    than f32 despite half the bytes (the BENCH_query_latency.json
+    store-sweep anomaly; bounded there so it can't silently regress).
+    `kernel._dequant` bit-casts the gathered tile back before widening."""
     emb = jnp.asarray(embeddings)
     if emb.dtype not in [jnp.dtype(t) for t in _STORE_DTYPES]:
         emb = emb.astype(jnp.float32)
+    if emb.dtype == jnp.bfloat16:
+        emb = jax.lax.bitcast_convert_type(emb, jnp.int16)
     return emb
 
 

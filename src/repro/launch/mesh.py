@@ -15,10 +15,70 @@ gradient all-reduces (DCN-friendly).
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
 
 from repro.compat import make_mesh as make_mesh_compat
+
+# --------------------------------------------------------------- XLA presets
+#
+# Opt-in compiler-flag bundles for the serving/launch CLIs (--xla-preset).
+# These are the production latency-hiding recipes (MaxText-style launcher
+# blocks): the scheduler overlap flags hide collective latency behind
+# compute, the pipelined-collective flags matter for the sharded query
+# path's all_gather merge, and the combine thresholds keep small per-batch
+# collectives from being fused into bandwidth-hostile mega-ops. The flags
+# are spelled xla_gpu_* (XLA's historical naming for the SPMD backend
+# knobs); CPU/TPU jaxlibs accept and ignore the ones that don't apply, so
+# a preset is safe everywhere and a no-op where irrelevant — which is why
+# they are opt-in rather than default (measure, don't assume; see
+# docs/serving.md).
+XLA_PRESETS: dict[str, tuple[str, ...]] = {
+    "latency-hiding": (
+        "--xla_gpu_enable_latency_hiding_scheduler=true",
+        "--xla_gpu_enable_highest_priority_async_stream=true",
+        "--xla_gpu_enable_while_loop_double_buffering=true",
+    ),
+    "async-collectives": (
+        "--xla_gpu_enable_pipelined_all_gather=true",
+        "--xla_gpu_enable_pipelined_reduce_scatter=true",
+        "--xla_gpu_enable_pipelined_all_reduce=true",
+        "--xla_gpu_all_reduce_combine_threshold_bytes=134217728",
+        "--xla_gpu_all_gather_combine_threshold_bytes=1073741824",
+        "--xla_gpu_reduce_scatter_combine_threshold_bytes=33554432",
+    ),
+}
+# "serving" = union: the sharded query path both dispatches async batches
+# (latency hiding) and merges per-shard top-k via all_gather (collectives).
+XLA_PRESETS["serving"] = (
+    XLA_PRESETS["latency-hiding"] + XLA_PRESETS["async-collectives"]
+)
+
+
+def apply_xla_preset(name: str | None) -> str | None:
+    """Append the named preset's flags to ``XLA_FLAGS`` (env) and return
+    the applied flag string (None for ``name`` in (None, "", "none")).
+
+    Must run before the first jax backend touch — the launchers call it
+    straight after argparse, before importing anything that initialises
+    devices. Flags already present in ``XLA_FLAGS`` are not duplicated,
+    so re-applying (or user-set flags) win by coming first.
+    """
+    if not name or name == "none":
+        return None
+    try:
+        flags = XLA_PRESETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown XLA preset {name!r}; choose from {sorted(XLA_PRESETS)}"
+        ) from None
+    existing = os.environ.get("XLA_FLAGS", "")
+    fresh = [f for f in flags if f not in existing]
+    applied = " ".join(fresh)
+    os.environ["XLA_FLAGS"] = (existing + " " + applied).strip()
+    return applied
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -5,14 +5,25 @@ LMI index (the paper's online stage).
       --k 30 --stop 0.01 --store-dtype int8 --beam 16
 
 Loads the index (repro.launch.build_index format, any depth), generates
-(or embeds) query structures, and answers kNN / range queries in
-batches, reporting latency percentiles. Every batch is padded to the
-fixed ``--batch`` shape (padding rows are masked out of the answers), so
-the ragged final batch never triggers a recompile, and a warmup batch
-absorbs compile time before the timed loop — the reported median/p99
-are steady-state serving latency. `--sharded N` runs the bucket-sharded
-search path on an N-way host mesh (requires XLA_FLAGS device-count
-override); both paths honor `--metric`, `--radius`, `--store-dtype`,
+(or embeds) query structures, and answers kNN / range queries through
+the continuous-batching `repro.serving.ServingHarness` (ISSUE 7):
+requests land in an admission queue, the assembler dispatches on fill or
+on the ``--max-wait-ms`` deadline (partial batches padded to the fixed
+``--batch`` shape — one compiled plan, no tail recompile), and the
+stager keeps up to ``--in-flight`` batches overlapped host<->device.
+``--serving serial`` collapses the pipeline to the old synchronous batch
+loop (wait 0, depth 1) — bit-identical answers, the harness's regression
+baseline. A warmup batch absorbs compile time before the timed stream,
+so the reported QPS / p50 / p99 are steady-state serving numbers.
+
+`--sharded N` runs the bucket-sharded search path on an N-way host mesh
+(requires XLA_FLAGS device-count override); ``--kill-shard S`` then
+serves with shard S masked failed — answers merge from the live shards
+only (degraded recall, flagged; docs/serving.md) instead of hanging.
+``--xla-preset`` applies an opt-in latency-hiding / async-collective
+compiler flag bundle before backend init (`repro.launch.mesh`).
+
+Both paths honor `--metric`, `--radius`, `--store-dtype`,
 `--beam`, `--temperatures` and `--node-eval` — the candidate store is
 materialized at the requested precision at startup (`repro.core.store`),
 and the beam / temperatures / node-evaluation mode default to the
@@ -38,8 +49,11 @@ import numpy as np
 
 from repro.core import filtering, lmi
 from repro.core import store as store_lib
+from repro.distributed.fault_tolerance import ShardHealth
 from repro.launch.build_index import (load_index, load_planes, parse_beam,
                                       parse_temperatures, serving_defaults)
+from repro.launch.mesh import XLA_PRESETS, apply_xla_preset
+from repro.serving import ServingHarness
 
 
 def main():
@@ -72,7 +86,32 @@ def main():
                          "segmented beam node evaluation)")
     ap.add_argument("--sharded", type=int, default=0)
     ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--serving", choices=("continuous", "serial"), default="continuous",
+                    help="'continuous': admission queue + fill-or-deadline batches "
+                         "+ overlapped staging (the ServingHarness); 'serial': the "
+                         "synchronous batch loop (wait 0, pipeline depth 1 — "
+                         "identical answers, the regression baseline)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="continuous batching deadline: a partial batch dispatches "
+                         "once its oldest request has waited this long (0 = "
+                         "dispatch whatever is queued on every poll)")
+    ap.add_argument("--in-flight", type=int, default=2,
+                    help="overlap window: max batches in flight host<->device "
+                         "(2 = double buffer; 1 = fully synchronous)")
+    ap.add_argument("--kill-shard", type=int, default=None,
+                    help="mark this shard failed before serving (requires "
+                         "--sharded): answers merge from live shards only — "
+                         "degraded recall, flagged, no hang")
+    ap.add_argument("--xla-preset", choices=sorted(XLA_PRESETS) + ["none"],
+                    default=None,
+                    help="opt-in XLA flag bundle applied before backend init "
+                         "(repro.launch.mesh.XLA_PRESETS; printed at startup)")
     args = ap.parse_args()
+
+    # must precede the first jax backend touch (load_index puts arrays)
+    applied = apply_xla_preset(args.xla_preset)
+    if applied:
+        print(f"XLA preset '{args.xla_preset}': {applied}")
 
     index = load_index(args.index)
     with open(os.path.join(args.index, "meta.json")) as f:
@@ -112,6 +151,12 @@ def main():
     queries = np.asarray(index.sorted_embeddings)[ids]
     queries = np.clip(queries + rng.normal(scale=0.01, size=queries.shape).astype(np.float32), 0, 1)
 
+    health = ShardHealth(n_shards=args.sharded or 1)
+    if args.kill_shard is not None:
+        if not args.sharded:
+            ap.error("--kill-shard requires --sharded")
+        health.mark_failed(args.kill_shard)
+
     if args.sharded:
         from repro.core.distributed_lmi import shard_index, sharded_knn
 
@@ -132,12 +177,15 @@ def main():
 
             sharded_planes = _dc.replace(
                 sharded_planes, revision=sharded.store.revision)
-        fn = jax.jit(lambda q: sharded_knn(
+        # shard_ok rides in as a traced operand: health flips (kill/revive)
+        # change only the mask VALUES, never the compiled plan
+        sharded_fn = jax.jit(lambda q, ok: sharded_knn(
             sharded, q, k=args.k, mesh=mesh, stop_condition=args.stop,
             metric=args.metric, max_radius=args.radius, beam_width=beam,
             node_eval=node_eval, use_kernel=args.use_kernel,
-            temperatures=temperatures, planes=sharded_planes,
+            temperatures=temperatures, planes=sharded_planes, shard_ok=ok,
         ))
+        fn = lambda q: sharded_fn(q, jnp.asarray(health.mask()))
     else:
         store = store_lib.from_lmi(index, store_dtype)
         print(f"candidate store: {store.nbytes() / 2**20:.1f} MB")
@@ -148,40 +196,55 @@ def main():
             temperatures=temperatures, planes=planes,
         )
 
-    # Every batch runs at the fixed (--batch, d) shape: the ragged tail is
-    # padded with repeats of row 0 and its outputs dropped, so one compiled
-    # plan serves the whole stream (no tail-shape recompile).
+    # Every batch runs at the fixed (--batch, d) shape: partial and tail
+    # batches are padded with repeats of row 0 (repro.serving.pad_batch)
+    # and their padding outputs dropped, so one compiled plan serves the
+    # whole stream (no tail-shape recompile).
     bs = args.batch
+    serial = args.serving == "serial"
+    harness = ServingHarness(
+        fn, batch_size=bs,
+        max_wait_ms=0.0 if serial else args.max_wait_ms,
+        max_in_flight=1 if serial else args.in_flight,
+        shard_health=health,
+    )
+    if health.degraded:
+        print(f"DEGRADED serve: shard(s) {health.failed} masked failed — "
+              f"answers merge live shards only ({health.n_live}/{health.n_shards})")
 
-    def run_batch(q_np):
-        n = q_np.shape[0]
-        if n < bs:
-            q_np = np.concatenate([q_np, np.broadcast_to(q_np[:1], (bs - n, q_np.shape[1]))])
-        out_ids, out_d = fn(jnp.asarray(q_np))
-        jax.block_until_ready(out_d)
-        return np.asarray(out_ids)[:n], np.asarray(out_d)[:n]
-
-    # warmup: compile outside the timed loop so median/p99 are steady-state
+    # warmup: compile outside the timed stream so QPS/p50/p99 are steady-state
     t0 = time.perf_counter()
-    run_batch(queries[: min(bs, args.n_queries)])
+    jax.block_until_ready(fn(jnp.asarray(
+        np.broadcast_to(queries[:1], (bs, queries.shape[1])))))
     t_warm = time.perf_counter() - t0
 
-    lat = []
-    first_ids = None
-    for s in range(0, args.n_queries, bs):
-        q = queries[s : s + bs]
-        t0 = time.perf_counter()
-        out_ids, out_d = run_batch(q)
-        # the padded tail still executes the full bs-query plan: divide by
-        # the work actually done so the tail doesn't distort the percentiles
-        lat.append((time.perf_counter() - t0) / bs)
-        if first_ids is None:
-            first_ids = out_ids[0]
-    lat = np.asarray(lat) * 1e3
-    print(f"answered {args.n_queries} queries (k={args.k}, stop={args.stop})")
+    # pre-enqueued stream: every request admitted up front, harness drains
+    # it — under --serving serial this reproduces the old synchronous batch
+    # loop answer-for-answer (tests/test_serving.py); open/closed-loop load
+    # generation lives in benchmarks/serving_throughput.py
+    t0 = time.perf_counter()
+    for q in queries:
+        harness.submit(q)
+    responses = harness.run_until_drained()
+    wall = time.perf_counter() - t0
+    stats = harness.stats()
+
+    # per-query share of each batch's service time — comparable across
+    # serving modes and with the pre-harness loop's per-query numbers
+    lat = np.asarray([r.t_done - r.t_dispatch for r in responses]) / bs * 1e3
+    responses.sort(key=lambda r: r.rid)
+    print(f"answered {stats.n_requests} queries (k={args.k}, stop={args.stop}, "
+          f"serving={args.serving}, wait={harness.assembler.max_wait_ms:g}ms, "
+          f"in-flight={harness.stager.max_in_flight})")
+    print(f"throughput: {stats.n_requests / wall:.1f} QPS over {stats.n_batches} batches "
+          f"(occupancy {stats.mean_occupancy:.2f}, "
+          f"dispatch fill/deadline/flush {stats.n_fill}/{stats.n_deadline}/{stats.n_flush})")
     print(f"latency/query: median={np.median(lat):.2f}ms p99={np.percentile(lat, 99):.2f}ms "
           f"(warmup batch incl. compile: {t_warm * 1e3:.0f}ms, excluded)")
-    print("sample answer ids[0]:", first_ids[:10])
+    if any(r.degraded for r in responses):
+        print(f"degraded answers: {sum(r.degraded for r in responses)}/{len(responses)} "
+              f"flagged (failed shards {health.failed})")
+    print("sample answer ids[0]:", responses[0].ids[:10])
 
 
 if __name__ == "__main__":

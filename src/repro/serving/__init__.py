@@ -1,0 +1,26 @@
+"""Production serving harness: the async request path over the query engine.
+
+The paper's online stage is a per-query pipeline; `repro.launch.serve`
+drove it as a synchronous batch loop. This package turns it into a
+continuous-batching server (ISSUE 7, docs/serving.md):
+
+  * `queue`   — admission queue + dynamic batch assembler (requests
+    accumulate until the fixed batch shape fills or a deadline expires;
+    partial batches padded exactly like the serial loop, so there is one
+    compiled shape);
+  * `stager`  — overlapped host<->device staging (batch j+1 staged via
+    `jax.device_put` while batch j computes; batch j-1 drained without a
+    hot-path sync; donated buffers off-CPU);
+  * `harness` — the event loop tying them to an engine fn, with open- and
+    closed-loop drivers, per-batch straggler tracking
+    (`repro.distributed.fault_tolerance.StepTimer`) and degraded-recall
+    flagging for sharded serving with failed shards.
+"""
+from repro.serving.harness import Response, ServingHarness  # noqa: F401
+from repro.serving.queue import (  # noqa: F401
+    AdmissionQueue,
+    BatchAssembler,
+    Request,
+    pad_batch,
+)
+from repro.serving.stager import DeviceStager  # noqa: F401

@@ -1,0 +1,251 @@
+"""The serving event loop (stage 3): queue -> assembler -> stager -> engine.
+
+`ServingHarness` owns one engine fn (anything shaped
+``(batch, d) f32 -> (ids (batch, k), distances (batch, k))`` — the
+single-device `filtering.knn_query` closure or the sharded
+`sharded_knn` closure from `repro.launch.serve`) and serves request
+streams through the continuous-batching pipeline:
+
+  admit -> assemble (fill-or-deadline) -> stage+dispatch (overlapped)
+        -> drain (behind the overlap window) -> respond
+
+Two degenerate settings recover the old serial behavior exactly
+(tested): ``max_wait_ms=0, max_in_flight=1`` over a pre-enqueued stream
+dispatches consecutive full batches and blocks on each — bit-identical
+to the `repro.launch.serve` batch loop this harness replaced.
+
+Fault tolerance (ISSUE 7): per-batch wall times feed a
+`repro.distributed.fault_tolerance.ShardHealth` tracker (StepTimer
+straggler flags + patience); for sharded engines the health mask rides
+into `sharded_knn(shard_ok=...)` so a failed shard yields a
+degraded-recall merged answer instead of a hung batch — responses carry
+the ``degraded`` flag (semantics in docs/serving.md).
+
+The harness never reads a device value on the submit path
+(``guard_submits=True`` enforces it with
+``jax.transfer_guard_device_to_host("disallow")`` — the zero-host-sync
+regression mode the tests run).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import numpy as np
+
+from repro.distributed.fault_tolerance import ShardHealth
+from repro.serving.queue import AdmissionQueue, BatchAssembler
+from repro.serving.stager import BatchResult, DeviceStager
+
+# event-loop idle tick: the longest the loop sleeps with work pending but
+# no deadline in sight (open-loop gaps between arrivals)
+_IDLE_TICK_S = 0.5e-3
+
+
+class Response(NamedTuple):
+    rid: int
+    ids: np.ndarray  # (k,) answer ids (-1 == not found)
+    distances: np.ndarray  # (k,)
+    t_arrival: float
+    t_dispatch: float
+    t_done: float
+    degraded: bool  # answered with >= 1 failed shard masked out
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_arrival
+
+
+class HarnessStats(NamedTuple):
+    n_requests: int
+    n_batches: int
+    mean_occupancy: float  # real requests per dispatched batch / batch_size
+    n_fill: int  # fill-triggered dispatches
+    n_deadline: int  # deadline-triggered dispatches
+    n_flush: int  # end-of-stream flush dispatches
+    straggler_events: int
+    batch_ms_mean: float
+
+
+class ServingHarness:
+    def __init__(
+        self,
+        engine_fn: Callable,
+        batch_size: int,
+        max_wait_ms: float = 0.0,
+        max_in_flight: int = 2,
+        clock=time.monotonic,
+        sleep=time.sleep,
+        guard_submits: bool = False,
+        donate: Optional[bool] = None,
+        shard_health: Optional[ShardHealth] = None,
+    ):
+        self.batch_size = batch_size
+        self.clock = clock
+        self.sleep = sleep
+        self.guard_submits = guard_submits
+        self.queue = AdmissionQueue()
+        self.assembler = BatchAssembler(batch_size, max_wait_ms, clock=clock)
+        self.stager = DeviceStager(engine_fn, max_in_flight, donate=donate, clock=clock)
+        self.health = shard_health or ShardHealth(n_shards=1)
+        self.responses: list[Response] = []
+        self._occupancy: list[int] = []
+        self._batch_ms: list[float] = []
+
+    # ------------------------------------------------------------ admission
+
+    def submit(self, query: np.ndarray, t_arrival: Optional[float] = None) -> int:
+        """Admit one query; returns its rid. ``t_arrival`` defaults to now
+        (drivers pass the generator's schedule time)."""
+        t = self.clock() if t_arrival is None else t_arrival
+        return self.queue.put(query, t)
+
+    # ------------------------------------------------------------- pipeline
+
+    def _guard(self):
+        return (jax.transfer_guard_device_to_host("disallow")
+                if self.guard_submits else contextlib.nullcontext())
+
+    def _try_dispatch(self, flush: bool) -> bool:
+        """One assembler poll -> stager submit; True if a batch left."""
+        if self.stager.full:
+            return False
+        batch_reqs = self.assembler.poll(self.queue, now=self.clock(), flush=flush)
+        if batch_reqs is None:
+            return False
+        with self._guard():
+            q, n_valid = self.assembler.assemble(batch_reqs)
+            now = self.clock()
+            for r in batch_reqs:
+                r.t_dispatch = now
+            self.stager.submit(q, batch_reqs, n_valid)
+        self._occupancy.append(n_valid)
+        return True
+
+    def _retire(self, result: BatchResult) -> None:
+        dt = result.t_done - result.t_submit
+        self._batch_ms.append(dt * 1e3)
+        self.health.observe_batch(dt)
+        degraded = self.health.degraded
+        for i, r in enumerate(result.requests):
+            r.t_done = result.t_done
+            self.responses.append(Response(
+                rid=r.rid, ids=result.ids[i], distances=result.distances[i],
+                t_arrival=r.t_arrival, t_dispatch=r.t_dispatch,
+                t_done=result.t_done, degraded=degraded,
+            ))
+
+    def _drain_ready(self) -> bool:
+        """Retire finished batches without blocking; True if any retired."""
+        any_done = False
+        while self.stager.oldest_ready():
+            self._retire(self.stager.drain())
+            any_done = True
+        return any_done
+
+    def pump(self, flush: bool = False) -> bool:
+        """One event-loop step: retire finished work, dispatch what the
+        policy allows, and if the pipeline is saturated block on the
+        oldest batch (that wait IS the overlap window — batches behind
+        it keep computing). Returns True if anything progressed."""
+        progressed = self._drain_ready()
+        while self._try_dispatch(flush):
+            progressed = True
+        if not progressed and self.stager.full:
+            self._retire(self.stager.drain())  # blocking
+            while self._try_dispatch(flush):
+                pass
+            return True
+        return progressed
+
+    def run_until_drained(self) -> list[Response]:
+        """Serve everything already admitted (plus anything admitted
+        meanwhile) to completion — the pre-enqueued-stream driver."""
+        while len(self.queue) or len(self.stager):
+            if not self.pump(flush=True) and len(self.stager):
+                self._retire(self.stager.drain())
+        return self.responses
+
+    # ------------------------------------------------------------- drivers
+
+    def serve_open_loop(self, queries: np.ndarray, arrival_s: np.ndarray) -> list[Response]:
+        """Open-loop generator: admit query i at ``arrival_s[i]`` (seconds
+        from start, e.g. Poisson arrivals) regardless of completions —
+        offered load is fixed; the measured completion rate is the
+        sustained throughput. Runs on the harness clock (real serving),
+        sleeping only when there is truly nothing to do."""
+        order = np.argsort(np.asarray(arrival_s), kind="stable")
+        arrivals = [(float(arrival_s[i]), np.asarray(queries[i])) for i in order]
+        t0 = self.clock()
+        i = 0
+        while i < len(arrivals) or len(self.queue) or len(self.stager):
+            now = self.clock() - t0
+            while i < len(arrivals) and arrivals[i][0] <= now:
+                self.submit(arrivals[i][1], t_arrival=t0 + arrivals[i][0])
+                i += 1
+            flush = i >= len(arrivals)
+            if self.pump(flush=flush):
+                continue
+            # idle: sleep to the next wake-up — an arrival or a deadline
+            waits = [_IDLE_TICK_S]
+            if i < len(arrivals):
+                waits.append(arrivals[i][0] - (self.clock() - t0))
+            dl = self.assembler.deadline_in(self.queue)
+            if dl is not None:
+                waits.append(dl)
+            wait = min(w for w in waits if w is not None)
+            if wait > 0:
+                self.sleep(min(wait, _IDLE_TICK_S * 8))
+        return self.responses
+
+    def serve_closed_loop(self, queries: np.ndarray, n_clients: int,
+                          n_requests: int) -> list[Response]:
+        """Closed-loop generator: ``n_clients`` concurrent clients, each
+        with one outstanding request — a completion immediately triggers
+        that client's next submit (queries cycled round-robin). This is
+        the saturation driver: sustained QPS at the concurrency the
+        client count buys."""
+        n_done_target = n_requests
+        issued = 0
+        queries = np.asarray(queries)
+
+        def issue(n):
+            nonlocal issued
+            for _ in range(n):
+                if issued < n_done_target:
+                    self.submit(queries[issued % len(queries)])
+                    issued += 1
+
+        issue(n_clients)
+        served = 0
+        while served < n_done_target:
+            before = len(self.responses)
+            self.pump(flush=True)
+            if len(self.responses) == before and len(self.stager):
+                self._retire(self.stager.drain())
+            newly = len(self.responses) - before
+            served += newly
+            issue(newly)  # each completion frees its client to re-submit
+        return self.responses
+
+    # --------------------------------------------------------------- stats
+
+    @property
+    def degraded(self) -> bool:
+        return self.health.degraded
+
+    def stats(self) -> HarnessStats:
+        occ = np.asarray(self._occupancy, np.float64)
+        bm = np.asarray(self._batch_ms, np.float64)
+        return HarnessStats(
+            n_requests=len(self.responses),
+            n_batches=len(self._occupancy),
+            mean_occupancy=float(occ.mean() / self.batch_size) if occ.size else 0.0,
+            n_fill=self.assembler.n_fill,
+            n_deadline=self.assembler.n_deadline,
+            n_flush=self.assembler.n_flush,
+            straggler_events=self.health.straggler_events,
+            batch_ms_mean=float(bm.mean()) if bm.size else 0.0,
+        )

@@ -1,0 +1,147 @@
+"""Admission queue + dynamic batch assembler (stage 1 of the harness).
+
+Requests land in an `AdmissionQueue` (FIFO, thread-safe — real frontends
+enqueue from client threads; the benchmark drivers enqueue from the
+event loop). The `BatchAssembler` decides *when* a batch leaves the
+queue:
+
+  * **fill-triggered** — the queue holds >= ``batch_size`` requests:
+    dispatch a full batch immediately;
+  * **deadline-triggered** — the oldest queued request has waited
+    ``max_wait_ms``: dispatch whatever is queued, padded to the fixed
+    shape (`pad_batch` — repeats of row 0, exactly the serial loop's
+    tail padding, so the engine sees ONE compiled shape either way);
+  * ``max_wait_ms=0`` — dispatch whatever is queued the moment the
+    assembler is polled. Over a pre-enqueued request stream this
+    degenerates bit-identically to the serial batch loop: consecutive
+    ``batch_size`` chunks in arrival order plus one padded ragged tail
+    (regression-tested in tests/test_serving.py).
+
+Time is injected (``clock``), never read from the wall directly, so the
+dispatch policy is testable with a fake clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One query riding through the harness (timestamps in `clock` seconds)."""
+
+    rid: int
+    query: np.ndarray  # (d,) f32
+    t_arrival: float
+    t_dispatch: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+class AdmissionQueue:
+    """FIFO request queue with a lock around the mutation points.
+
+    The harness's event loop is single-threaded, but admission is the
+    natural boundary where real client threads would push — keeping it
+    thread-safe costs one uncontended lock acquire per operation.
+    """
+
+    def __init__(self):
+        self._q: deque[Request] = deque()
+        self._lock = threading.Lock()
+        self._next_rid = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def put(self, query: np.ndarray, t_arrival: float) -> int:
+        """Admit one query; returns its request id (admission order)."""
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._q.append(Request(rid=rid, query=np.asarray(query), t_arrival=t_arrival))
+            return rid
+
+    def oldest_arrival(self) -> Optional[float]:
+        with self._lock:
+            return self._q[0].t_arrival if self._q else None
+
+    def pop_up_to(self, n: int) -> list[Request]:
+        """Dequeue the oldest <= n requests (arrival order)."""
+        with self._lock:
+            take = min(n, len(self._q))
+            return [self._q.popleft() for _ in range(take)]
+
+
+def pad_batch(queries: np.ndarray, batch_size: int) -> np.ndarray:
+    """Pad a ragged (n, d) batch to the fixed (batch_size, d) shape with
+    repeats of row 0 — the serial loop's exact tail padding
+    (`repro.launch.serve`), so partial deadline-triggered batches reuse
+    the one compiled plan and padding outputs are simply dropped."""
+    n = queries.shape[0]
+    if n == batch_size:
+        return queries
+    if n > batch_size or n == 0:
+        raise ValueError(f"batch of {n} does not fit shape {batch_size}")
+    return np.concatenate(
+        [queries, np.broadcast_to(queries[:1], (batch_size - n, queries.shape[1]))]
+    )
+
+
+class BatchAssembler:
+    """Fill-or-deadline dispatch policy over an `AdmissionQueue`."""
+
+    def __init__(self, batch_size: int, max_wait_ms: float = 0.0,
+                 clock=time.monotonic):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        if max_wait_ms < 0:
+            raise ValueError("max_wait_ms must be >= 0")
+        self.batch_size = batch_size
+        self.max_wait_ms = max_wait_ms
+        self.clock = clock
+        # dispatch-cause counters (reported by the harness stats)
+        self.n_fill = 0
+        self.n_deadline = 0
+        self.n_flush = 0
+
+    def deadline_in(self, queue: AdmissionQueue, now: Optional[float] = None) -> Optional[float]:
+        """Seconds until the oldest queued request's deadline (<= 0 ==
+        overdue), or None for an empty queue. The event loop sleeps at
+        most this long between polls."""
+        oldest = queue.oldest_arrival()
+        if oldest is None:
+            return None
+        now = self.clock() if now is None else now
+        return oldest + self.max_wait_ms / 1e3 - now
+
+    def poll(self, queue: AdmissionQueue, now: Optional[float] = None,
+             flush: bool = False) -> Optional[list[Request]]:
+        """The next batch to dispatch, or None if the policy says wait.
+
+        ``flush=True`` (end of stream / shutdown): a non-empty queue
+        dispatches regardless of the deadline, so the tail never
+        starves.
+        """
+        if len(queue) >= self.batch_size:
+            self.n_fill += 1
+            return queue.pop_up_to(self.batch_size)
+        if len(queue) == 0:
+            return None
+        if flush:
+            self.n_flush += 1
+            return queue.pop_up_to(self.batch_size)
+        deadline = self.deadline_in(queue, now)
+        if deadline is not None and deadline <= 0:
+            self.n_deadline += 1
+            return queue.pop_up_to(self.batch_size)
+        return None
+
+    def assemble(self, requests: list[Request]) -> tuple[np.ndarray, int]:
+        """(padded (batch_size, d) f32 batch, n_valid) from a dispatch."""
+        q = np.stack([r.query for r in requests]).astype(np.float32, copy=False)
+        return pad_batch(q, self.batch_size), len(requests)

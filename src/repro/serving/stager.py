@@ -1,0 +1,121 @@
+"""Overlapped host<->device staging (stage 2 of the harness).
+
+JAX dispatch is asynchronous: a jitted call returns futures while the
+computation runs on the device (or XLA:CPU's runtime threads). The
+`DeviceStager` exploits that with a depth-limited in-flight pipeline:
+
+  * ``submit`` stages the next batch onto the device (`jax.device_put`)
+    and dispatches the engine — it NEVER reads a device value back, so
+    while batch ``j`` computes, batch ``j+1`` is already staged and
+    queued behind it (regression-tested with
+    ``jax.transfer_guard_device_to_host("disallow")`` around the submit
+    path);
+  * ``drain`` retires the *oldest* in-flight batch — the only
+    device->host sync point, taken either when its results are already
+    ready (``is_ready`` poll, no blocking) or when the pipeline is full
+    and the caller must wait anyway;
+  * off-CPU the engine is wrapped with ``donate_argnums=(0,)`` so the
+    staged query buffer is donated to the computation (no copy of the
+    hot-path operand); XLA:CPU ignores donation, so it is off by
+    default there to avoid the per-compile warning.
+
+The pipeline depth (``max_in_flight``) bounds result staleness and
+memory: 2 gives the classic double buffer (stage j+1 under compute j,
+drain j-1 behind both); 1 degenerates to the fully synchronous serial
+loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.queue import Request
+
+
+class InFlight(NamedTuple):
+    requests: list[Request]
+    n_valid: int
+    out_ids: jax.Array  # (batch, k) — future until drained
+    out_d: jax.Array  # (batch, k)
+    t_submit: float
+
+
+class BatchResult(NamedTuple):
+    requests: list[Request]
+    ids: np.ndarray  # (n_valid, k) — padding rows already dropped
+    distances: np.ndarray  # (n_valid, k)
+    t_submit: float
+    t_done: float
+
+
+def _is_ready(arr) -> bool:
+    """True when a device value can be read without blocking. Older jax
+    arrays without ``is_ready`` report False — the caller then only
+    drains when it is prepared to block."""
+    fn = getattr(arr, "is_ready", None)
+    return bool(fn()) if fn is not None else False
+
+
+class DeviceStager:
+    """Depth-limited in-flight pipeline over ``engine_fn(queries) ->
+    (ids, distances)``."""
+
+    def __init__(self, engine_fn: Callable, max_in_flight: int = 2,
+                 donate: Optional[bool] = None, clock=time.monotonic):
+        if max_in_flight < 1:
+            raise ValueError("max_in_flight must be >= 1")
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        self.max_in_flight = max_in_flight
+        self.donate = donate
+        self.clock = clock
+        self._fn = jax.jit(engine_fn, donate_argnums=(0,)) if donate else engine_fn
+        self._inflight: list[InFlight] = []
+
+    def __len__(self) -> int:
+        return len(self._inflight)
+
+    @property
+    def full(self) -> bool:
+        return len(self._inflight) >= self.max_in_flight
+
+    def submit(self, batch: np.ndarray, requests: list[Request], n_valid: int) -> None:
+        """Stage ``batch`` host->device and dispatch the engine. No
+        device->host transfer happens here — the returned arrays stay
+        futures until `drain`."""
+        if self.full:
+            raise RuntimeError(
+                f"pipeline full ({len(self._inflight)}/{self.max_in_flight}): drain first"
+            )
+        staged = jax.device_put(jnp.asarray(batch, jnp.float32))
+        out_ids, out_d = self._fn(staged)
+        self._inflight.append(
+            InFlight(requests, n_valid, out_ids, out_d, t_submit=self.clock())
+        )
+
+    def oldest_ready(self) -> bool:
+        """Non-blocking: the oldest in-flight batch has finished computing."""
+        return bool(self._inflight) and _is_ready(self._inflight[0].out_d)
+
+    def drain(self) -> Optional[BatchResult]:
+        """Retire the oldest in-flight batch (blocking if still computing);
+        None when nothing is in flight. The np.asarray reads are the one
+        device->host sync of the pipeline, and they land on a batch that
+        was dispatched >= ``max_in_flight - 1`` submits ago — behind the
+        overlap window, off the hot path."""
+        if not self._inflight:
+            return None
+        ent = self._inflight.pop(0)
+        ids = np.asarray(ent.out_ids)[: ent.n_valid]
+        d = np.asarray(ent.out_d)[: ent.n_valid]
+        return BatchResult(ent.requests, ids, d, ent.t_submit, t_done=self.clock())
+
+    def drain_all(self) -> list[BatchResult]:
+        out = []
+        while self._inflight:
+            out.append(self.drain())
+        return out

@@ -1,0 +1,377 @@
+"""Continuous-batching serving harness (ISSUE 7).
+
+The dispatch policy is tested on a fake clock (time is injected
+throughout `repro.serving`, never read from the wall), the pipeline on a
+deterministic fake engine that echoes each query's identity back, and
+the end-to-end contract against the real query engine: with wait 0 /
+depth 1 over a pre-enqueued stream the harness must be bit-identical to
+the serial batch loop it replaced, and the continuous settings must
+return the same answers under any scheduling. Submit-path host syncs
+are a regression, enforced with transfer_guard. The degraded-recall
+shard masking is covered at the ShardHealth unit level and end-to-end
+via a fake-device subprocess (same pattern as test_distributed_lmi).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import filtering
+from repro.distributed.fault_tolerance import ShardHealth, StepTimer
+from repro.launch.mesh import XLA_PRESETS, apply_xla_preset
+from repro.serving import (AdmissionQueue, BatchAssembler, DeviceStager,
+                           ServingHarness, pad_batch)
+
+K = 5
+D = 6
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+    def sleep(self, dt: float) -> None:
+        self.t += dt
+
+
+def _echo_engine():
+    """Engine whose answer row i encodes queries[i]'s identity: the query
+    vector is filled with its request id / 1000."""
+    return jax.jit(lambda q: (
+        jnp.round(q[:, :1] * 1000).astype(jnp.int32) + jnp.arange(K)[None, :] * 0,
+        jnp.broadcast_to(q[:, :1], (q.shape[0], K)),
+    ))
+
+
+def _query_for(rid: int) -> np.ndarray:
+    return np.full((D,), rid / 1000.0, np.float32)
+
+
+# ---------------------------------------------------------------- assembler
+
+
+def test_assembler_fill_dispatch():
+    clock = FakeClock()
+    q = AdmissionQueue()
+    asm = BatchAssembler(batch_size=4, max_wait_ms=100.0, clock=clock)
+    for i in range(9):
+        q.put(_query_for(i), t_arrival=clock())
+    batch = asm.poll(q, now=clock())
+    assert [r.rid for r in batch] == [0, 1, 2, 3]  # full batch, oldest first
+    batch = asm.poll(q, now=clock())
+    assert [r.rid for r in batch] == [4, 5, 6, 7]
+    # one left: below fill and before the deadline -> wait
+    assert asm.poll(q, now=clock()) is None
+    assert (asm.n_fill, asm.n_deadline) == (2, 0)
+    assert len(q) == 1
+
+
+def test_assembler_deadline_dispatch():
+    clock = FakeClock()
+    q = AdmissionQueue()
+    asm = BatchAssembler(batch_size=4, max_wait_ms=100.0, clock=clock)
+    q.put(_query_for(0), t_arrival=clock())
+    clock.advance(0.050)
+    q.put(_query_for(1), t_arrival=clock())
+    assert asm.poll(q, now=clock()) is None  # oldest has waited only 50ms
+    assert asm.deadline_in(q, now=clock()) == pytest.approx(0.050)
+    clock.advance(0.051)  # oldest past its 100ms deadline
+    batch = asm.poll(q, now=clock())
+    assert [r.rid for r in batch] == [0, 1]  # partial batch, both queued
+    assert (asm.n_fill, asm.n_deadline) == (0, 1)
+    assert len(q) == 0
+
+
+def test_assembler_flush_beats_deadline():
+    clock = FakeClock()
+    q = AdmissionQueue()
+    asm = BatchAssembler(batch_size=4, max_wait_ms=1000.0, clock=clock)
+    q.put(_query_for(0), t_arrival=clock())
+    assert asm.poll(q, now=clock()) is None
+    batch = asm.poll(q, now=clock(), flush=True)  # end of stream: no starving tail
+    assert [r.rid for r in batch] == [0]
+    assert asm.n_flush == 1
+
+
+def test_assembler_wait_zero_dispatches_whatever_is_queued():
+    clock = FakeClock()
+    q = AdmissionQueue()
+    asm = BatchAssembler(batch_size=4, max_wait_ms=0.0, clock=clock)
+    q.put(_query_for(0), t_arrival=clock())
+    q.put(_query_for(1), t_arrival=clock())
+    batch = asm.poll(q, now=clock())
+    assert [r.rid for r in batch] == [0, 1]  # no waiting at wait=0
+
+
+def test_pad_batch_matches_serve_tail_padding():
+    rng = np.random.default_rng(0)
+    q = rng.random((3, D)).astype(np.float32)
+    bs = 8
+    # the serial serve loop's exact padding expression
+    ref = np.concatenate([q, np.broadcast_to(q[:1], (bs - 3, D))])
+    np.testing.assert_array_equal(pad_batch(q, bs), ref)
+    np.testing.assert_array_equal(pad_batch(ref, bs), ref)  # full == identity
+    with pytest.raises(ValueError):
+        pad_batch(rng.random((9, D)).astype(np.float32), bs)
+    with pytest.raises(ValueError):
+        pad_batch(q[:0], bs)
+
+
+# ------------------------------------------------------------------- stager
+
+
+def test_stager_depth_limit_and_fifo_drain():
+    engine = _echo_engine()
+    stager = DeviceStager(engine, max_in_flight=2, donate=False)
+    from repro.serving.queue import Request
+
+    def mk(rid):
+        q = np.broadcast_to(_query_for(rid)[None], (3, D))
+        return q, [Request(rid=rid, query=_query_for(rid), t_arrival=0.0)]
+
+    for rid in (0, 1):
+        q, reqs = mk(rid)
+        stager.submit(q, reqs, n_valid=1)
+    assert stager.full and len(stager) == 2
+    with pytest.raises(RuntimeError):
+        stager.submit(*mk(2), n_valid=1)
+    first = stager.drain()
+    assert first.requests[0].rid == 0  # FIFO
+    assert first.ids.shape == (1, K)  # padding rows dropped
+    assert int(first.ids[0, 0]) == 0
+    second = stager.drain()
+    assert second.requests[0].rid == 1 and int(second.ids[0, 0]) == 1
+    assert stager.drain() is None
+
+
+# ------------------------------------------------------------------ harness
+
+
+def test_harness_routes_answers_to_requests():
+    clock = FakeClock()
+    h = ServingHarness(_echo_engine(), batch_size=4, max_wait_ms=0.0,
+                       clock=clock, sleep=clock.sleep)
+    rids = [h.submit(_query_for(i)) for i in range(11)]
+    responses = h.run_until_drained()
+    assert sorted(r.rid for r in responses) == rids
+    for r in responses:
+        assert int(r.ids[0]) == r.rid  # each response carries its own answer
+    stats = h.stats()
+    assert stats.n_requests == 11
+    assert stats.n_batches == 3  # 4 + 4 + padded 3
+    assert stats.mean_occupancy == pytest.approx(11 / 12)
+
+
+def test_serial_degenerate_bit_identical_to_serial_loop(small_lmi, protein_embeddings):
+    """wait=0 + depth=1 over a pre-enqueued stream IS the old serve loop:
+    same batches, same padding, bitwise-equal answers."""
+    bs, k = 8, 7
+    q = np.asarray(protein_embeddings[:27], np.float32)  # ragged tail of 3
+    engine = jax.jit(lambda x: filtering.knn_query(
+        small_lmi, x, k=k, stop_condition=0.1))
+
+    # the pre-harness serial batch loop, verbatim semantics
+    ref_ids, ref_d = [], []
+    for s in range(0, len(q), bs):
+        qb = q[s : s + bs]
+        n = qb.shape[0]
+        if n < bs:
+            qb = np.concatenate([qb, np.broadcast_to(qb[:1], (bs - n, qb.shape[1]))])
+        out_ids, out_d = engine(jnp.asarray(qb))
+        ref_ids.append(np.asarray(out_ids)[:n])
+        ref_d.append(np.asarray(out_d)[:n])
+    ref_ids, ref_d = np.concatenate(ref_ids), np.concatenate(ref_d)
+
+    h = ServingHarness(engine, batch_size=bs, max_wait_ms=0.0, max_in_flight=1)
+    for row in q:
+        h.submit(row)
+    responses = sorted(h.run_until_drained(), key=lambda r: r.rid)
+    got_ids = np.stack([r.ids for r in responses])
+    got_d = np.stack([r.distances for r in responses])
+    np.testing.assert_array_equal(got_ids, ref_ids)
+    np.testing.assert_array_equal(got_d, ref_d)  # bitwise: same compiled plan
+
+
+def test_continuous_same_answers_as_serial(small_lmi, protein_embeddings):
+    bs, k = 8, 7
+    q = np.asarray(protein_embeddings[:21], np.float32)
+    engine = jax.jit(lambda x: filtering.knn_query(
+        small_lmi, x, k=k, stop_condition=0.1))
+    answers = {}
+    for wait_ms, depth in ((0.0, 1), (5.0, 2)):
+        h = ServingHarness(engine, batch_size=bs, max_wait_ms=wait_ms,
+                           max_in_flight=depth, guard_submits=True)
+        for row in q:
+            h.submit(row)
+        rs = sorted(h.run_until_drained(), key=lambda r: r.rid)
+        answers[(wait_ms, depth)] = np.stack([r.ids for r in rs])
+    np.testing.assert_array_equal(answers[(0.0, 1)], answers[(5.0, 2)])
+
+
+def test_guarded_submits_no_host_sync():
+    """The submit path must never read a device value: staging + dispatch
+    under transfer_guard_device_to_host('disallow') must not raise."""
+    h = ServingHarness(_echo_engine(), batch_size=4, max_wait_ms=0.0,
+                       guard_submits=True)
+    for i in range(9):
+        h.submit(_query_for(i))
+    responses = h.run_until_drained()
+    assert len(responses) == 9
+
+
+def test_open_loop_deadline_dispatch_under_light_load():
+    """Arrivals far slower than fill: every batch must leave on the
+    deadline (or final flush), not wait for fill."""
+    clock = FakeClock()
+    h = ServingHarness(_echo_engine(), batch_size=32, max_wait_ms=10.0,
+                       clock=clock, sleep=clock.sleep)
+    arrivals = np.arange(6) * 0.02  # 20ms apart, deadline 10ms
+    responses = h.serve_open_loop(np.stack([_query_for(i) for i in range(6)]),
+                                  arrivals)
+    assert len(responses) == 6
+    stats = h.stats()
+    assert stats.n_fill == 0
+    assert stats.n_deadline >= 5  # each request dispatched alone at its deadline
+    for r in responses:
+        assert int(r.ids[0]) == r.rid
+
+
+def test_closed_loop_saturates_batches():
+    clock = FakeClock()
+    h = ServingHarness(_echo_engine(), batch_size=4, max_wait_ms=50.0,
+                       clock=clock, sleep=clock.sleep)
+    queries = np.stack([_query_for(i) for i in range(4)])
+    responses = h.serve_closed_loop(queries, n_clients=8, n_requests=24)
+    assert len(responses) == 24
+    assert h.stats().mean_occupancy == 1.0  # 8 clients keep every 4-batch full
+
+
+# --------------------------------------------------------------- ShardHealth
+
+
+def test_shard_health_mask_and_degraded():
+    health = ShardHealth(n_shards=4)
+    assert not health.degraded and health.n_live == 4
+    np.testing.assert_array_equal(health.mask(), np.ones(4, np.float32))
+    health.mark_failed(2)
+    assert health.degraded and health.failed == (2,) and health.n_live == 3
+    np.testing.assert_array_equal(health.mask(), [1.0, 1.0, 0.0, 1.0])
+    health.mark_live(2)
+    assert not health.degraded
+    with pytest.raises(ValueError):
+        health.mark_failed(4)
+
+
+def test_shard_health_straggler_strikes():
+    health = ShardHealth(n_shards=2, patience=3,
+                         timer=StepTimer(warmup=2, k_sigma=6.0))
+    for _ in range(10):
+        straggler, due = health.observe_batch(0.010)
+        assert not straggler and not due
+    # three consecutive escalating spikes (the EWMA chases each one, so a
+    # *repeated* level stops flagging — an escalation keeps striking)
+    dues = [health.observe_batch(dt)[1] for dt in (0.1, 1.0, 10.0)]
+    assert health.straggler_events == 3
+    assert dues == [False, False, True]  # re-mesh due on the 3rd strike
+    health.observe_batch(health.timer.mean)  # normal batch resets strikes
+    assert health.observe_batch(0.5)[1] is False
+
+
+def test_harness_flags_degraded_responses():
+    health = ShardHealth(n_shards=2)
+    health.mark_failed(1)
+    h = ServingHarness(_echo_engine(), batch_size=4, max_wait_ms=0.0,
+                       shard_health=health)
+    h.submit(_query_for(0))
+    responses = h.run_until_drained()
+    assert h.degraded and all(r.degraded for r in responses)
+
+
+# --------------------------------------------------------------- XLA presets
+
+
+def test_apply_xla_preset_appends_without_duplicates(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+    applied = apply_xla_preset("latency-hiding")
+    assert applied and "latency_hiding_scheduler" in applied
+    flags = os.environ["XLA_FLAGS"]
+    assert flags.startswith("--xla_force_host_platform_device_count=1")
+    # idempotent: re-applying adds nothing
+    assert apply_xla_preset("latency-hiding") == ""
+    assert os.environ["XLA_FLAGS"] == flags
+    assert apply_xla_preset(None) is None and apply_xla_preset("none") is None
+    with pytest.raises(ValueError):
+        apply_xla_preset("nope")
+    # the serving preset is the union of the two component bundles
+    assert set(XLA_PRESETS["serving"]) == (
+        set(XLA_PRESETS["latency-hiding"]) | set(XLA_PRESETS["async-collectives"]))
+
+
+# ------------------------------------------------- degraded sharded serving
+
+_SUBPROCESS_PROG = r"""
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.data.proteins import generate_dataset, ProteinGenConfig
+from repro.core.embedding import EmbeddingConfig, embed_dataset
+from repro.core import lmi, filtering
+from repro.core.distributed_lmi import shard_index, sharded_knn
+from repro.distributed.fault_tolerance import ShardHealth
+
+ds = generate_dataset(0, ProteinGenConfig(n_proteins=500, n_families=20, max_length=120))
+emb = embed_dataset(jnp.asarray(ds.coords), jnp.asarray(ds.lengths), EmbeddingConfig())
+index = lmi.build(jax.random.PRNGKey(0), emb, arities=(4, 4))
+q = emb[:8]
+ids_ref, _ = filtering.knn_query(index, q, k=9, stop_condition=0.1)
+ids_ref = np.asarray(ids_ref)
+mesh = jax.make_mesh((1, 2), ("data", "model"))
+sharded = shard_index(index, n_shards=2)
+health = ShardHealth(n_shards=2)
+
+# all shards live: the mask is a no-op (exact)
+ids_live, _ = sharded_knn(sharded, q, k=9, mesh=mesh, stop_condition=0.1,
+                          shard_ok=jnp.asarray(health.mask()))
+assert (np.asarray(ids_live) == ids_ref).all(), "live mask changed answers"
+
+# kill shard 1: must COMPLETE (no hang) with answers drawn only from
+# shard 0's buckets — degraded recall, not a wrong merge
+health.mark_failed(1)
+ids_deg, d_deg = sharded_knn(sharded, q, k=9, mesh=mesh, stop_condition=0.1,
+                             shard_ok=jnp.asarray(health.mask()))
+ids_deg, d_deg = np.asarray(ids_deg), np.asarray(d_deg)
+off0 = np.asarray(sharded.store.offsets[0])
+own0 = set(np.asarray(sharded.store.ids[0])[: int(off0[-1])].tolist())
+for row in ids_deg:
+    for v in row:
+        assert v == -1 or int(v) in own0, f"id {v} leaked from the dead shard"
+assert np.isinf(d_deg[ids_deg == -1]).all(), "not-found slots must be +inf"
+overlap = (ids_deg == ids_ref).mean()
+assert overlap < 1.0, "killing a shard should cost recall on this workload"
+print(f"OK overlap={overlap:.3f}")
+"""
+
+
+@pytest.mark.slow
+def test_killed_shard_degrades_instead_of_hanging():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_PROG],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
