@@ -2,58 +2,86 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run table2     # one section
+  PYTHONPATH=src python -m benchmarks.run query_latency db=50000
+  PYTHONPATH=src python -m benchmarks.run db=100000 queries=256
+
+``key=value`` arguments are sweep knobs: they set the matching
+REPRO_BENCH_* env var (db -> REPRO_BENCH_DB, queries ->
+REPRO_BENCH_QUERIES) before any benchmark module loads, so the shared
+fixtures in `benchmarks.common` — which read the env once at import —
+pick them up. The acceptance runs (ISSUE 8: the integer-domain compute
+sweep at 20k) use the defaults.
 
 Ground truth (the Q-distance panel) is computed once and shared by all
 sections via benchmarks.common caches.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
-from benchmarks import (
-    depth_beam,
-    fig2_recall,
-    fig3_buckets,
-    fig5_filtering,
-    fig6_lengths,
-    ablation_cutoff,
-    fig7_answer_size,
-    model_comparison,
-    query_latency,
-    roofline_table,
-    serving_stages,
-    serving_throughput,
-    table1_build,
-    table2_range,
-    table3_knn,
-)
-
-SECTIONS = {
-    "table1": table1_build.main,
-    "fig2": fig2_recall.main,
-    "fig3": fig3_buckets.main,
-    "fig5": fig5_filtering.main,
-    "table2": table2_range.main,
-    "table3": table3_knn.main,
-    "fig6": fig6_lengths.main,
-    "fig7": fig7_answer_size.main,
-    "model_comparison": model_comparison.main,
-    "ablation_cutoff": ablation_cutoff.main,
-    "roofline": roofline_table.main,
-    "query_latency": query_latency.main,
-    "depth_beam": depth_beam.main,
-    "serving_stages": serving_stages.main,
-    "serving_throughput": serving_throughput.main,
+KNOBS = {
+    "db": "REPRO_BENCH_DB",
+    "queries": "REPRO_BENCH_QUERIES",
 }
 
 
 def main() -> None:
-    wanted = sys.argv[1:] or list(SECTIONS)
-    for name in wanted:
-        fn = SECTIONS.get(name)
+    wanted = []
+    for arg in sys.argv[1:]:
+        if "=" in arg:
+            key, value = arg.split("=", 1)
+            env = KNOBS.get(key)
+            if env is None:
+                print(f"unknown knob {key!r}; have {list(KNOBS)}")
+                return
+            os.environ[env] = value
+        else:
+            wanted.append(arg)
+
+    # deferred so the knobs above land before benchmarks.common reads
+    # REPRO_BENCH_* at import
+    from benchmarks import (
+        depth_beam,
+        fig2_recall,
+        fig3_buckets,
+        fig5_filtering,
+        fig6_lengths,
+        ablation_cutoff,
+        fig7_answer_size,
+        model_comparison,
+        query_latency,
+        roofline_table,
+        serving_stages,
+        serving_throughput,
+        table1_build,
+        table2_range,
+        table3_knn,
+    )
+
+    sections = {
+        "table1": table1_build.main,
+        "fig2": fig2_recall.main,
+        "fig3": fig3_buckets.main,
+        "fig5": fig5_filtering.main,
+        "table2": table2_range.main,
+        "table3": table3_knn.main,
+        "fig6": fig6_lengths.main,
+        "fig7": fig7_answer_size.main,
+        "model_comparison": model_comparison.main,
+        "ablation_cutoff": ablation_cutoff.main,
+        "roofline": roofline_table.main,
+        "query_latency": query_latency.main,
+        "depth_beam": depth_beam.main,
+        "serving_stages": serving_stages.main,
+        "serving_throughput": serving_throughput.main,
+    }
+
+    for name in wanted or list(sections):
+        fn = sections.get(name)
         if fn is None:
-            print(f"unknown section {name!r}; have {list(SECTIONS)}")
+            print(f"unknown section {name!r}; have {list(sections)}")
             continue
         print(f"\n===== {name} =====")
         t0 = time.time()

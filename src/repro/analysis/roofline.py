@@ -202,6 +202,94 @@ def from_compiled(
     )
 
 
+# TPU-generation-agnostic defaults for the filter-stage model (a v5e-ish
+# mid-range part; pass explicit hw numbers for a specific chip). int8 MXU
+# throughput is 2x bf16 and 4x f32 on every recent TPU generation; the
+# VPU term uses a conservative elementwise-op rate.
+_FILTER_HW = dict(
+    peak_bf16_flops=197e12,
+    peak_f32_flops=49e12,
+    peak_int8_ops=394e12,
+    vpu_ops=5e12,
+    hbm_bw=819e9,
+)
+
+
+def filter_stage_model(n_queries: int, cap: int, d: int, k: int = 30,
+                       store_itemsize: int = 1,
+                       compute_dtype: str = "float32",
+                       scale_granularity: str = "row",
+                       runs_per_query: float = 8.0,
+                       quantized: bool = True,
+                       hw: Optional[dict] = None) -> dict:
+    """Arithmetic-intensity model of the fused filter stage for a
+    quantized store — the int8-MXU counterpart of `gather_dma_model`
+    (which models DMA *issues*; this models the byte/FLOP balance).
+
+    Three terms per query batch:
+
+      * ``t_hbm``: candidate gather bytes (`Q*C*d*itemsize`) plus the
+        scale-delivery bytes — a `(Q, C)` f32 plane for per-row scales,
+        ~``runs*4`` per-run scalars for per-bucket scales on the
+        descriptor path — plus, on the integer-domain path, the `(Q, C)`
+        i32 prebuilt-norm plane; over HBM bandwidth.
+      * ``t_mxu``: the `2*Q*C*d` MAC contraction at the compute dtype's
+        MXU rate — int8 x int8 -> int32 runs at 4x the f32 rate.
+      * ``t_vpu``: the elementwise work between DMA landing and the dot.
+        The f32 path traverses the whole `(bq, bc, d)` tile three times
+        (widen + scale multiply, square for |c|^2, reduce) — `3*Q*C*d`
+        ops on the critical path, since the contraction consumes the
+        widened tile. The integer path touches only the `(bq, bc)`
+        epilogue (`~6*Q*C` ops) plus the `(bq, d)` query norm.
+
+    Per-tile execution is gather-wait -> elementwise -> contraction with
+    the *next* tile's DMA prefetched behind it (kernel docstring), so the
+    steady-state bound is ``max(t_hbm, t_vpu + t_mxu)``. The model's
+    headline outputs: ``us_per_query`` from that bound,
+    ``arithmetic_intensity`` (contraction FLOPs per HBM byte), and
+    ``t_compute`` (the VPU + MXU critical path the integer domain
+    actually shrinks — the tentpole's "the compute and VMEM side never
+    got the 4x"). VMEM budget per tile element: ``2*itemsize + 4`` bytes
+    on the f32 path vs ``2*itemsize`` integer-domain (`ops._pick_bc`).
+    """
+    hw = {**_FILTER_HW, **(hw or {})}
+    q, c = float(n_queries), float(cap)
+    gather = q * c * d * store_itemsize
+    scale_bytes = 0.0
+    if quantized:
+        scale_bytes = (q * runs_per_query * 4.0 if scale_granularity == "bucket"
+                       else q * c * 4.0)
+    norm_bytes = q * c * 4.0 if compute_dtype == "int8" else 0.0
+    out_bytes = q * k * 8.0  # (Q, k) f32 dist + i32 slot
+    hbm = gather + scale_bytes + norm_bytes + q * d * 4.0 + out_bytes
+    flops = 2.0 * q * c * d
+    if compute_dtype == "int8":
+        t_mxu = flops / hw["peak_int8_ops"]
+        vpu = 6.0 * q * c + q * d  # scale epilogue + query norm
+    else:
+        t_mxu = flops / hw["peak_f32_flops"]
+        vpu = 3.0 * q * c * d  # widen*scale, square, reduce — full tile
+    t_hbm = hbm / hw["hbm_bw"]
+    t_vpu = vpu / hw["vpu_ops"]
+    t_compute = t_vpu + t_mxu
+    t = max(t_hbm, t_compute)
+    return dict(
+        hbm_bytes=int(hbm),
+        gather_bytes=int(gather),
+        scale_plane_bytes=int(scale_bytes),
+        norm_plane_bytes=int(norm_bytes),
+        contraction_flops=int(flops),
+        arithmetic_intensity=flops / hbm,
+        t_hbm_s=t_hbm,
+        t_mxu_s=t_mxu,
+        t_vpu_s=t_vpu,
+        t_compute_s=t_compute,
+        bound="hbm" if t_hbm >= t_compute else "compute",
+        us_per_query=t / q * 1e6,
+        vmem_bytes_per_tile_element=2 * store_itemsize + (0 if compute_dtype == "int8" else 4),
+    )
+
+
 def gather_dma_model(n_queries: int, cap: int, d: int, itemsize: int = 4,
                      mean_run: float = 32.0, runs_per_query: float = 8.0,
                      bc: int = 256, seg: int = 8) -> dict:

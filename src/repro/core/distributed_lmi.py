@@ -110,16 +110,20 @@ class ShardedLMI:
         return self.store.scales
 
 
-def shard_index(index: lmi_lib.LMI, n_shards: int, store_dtype: str = "float32") -> ShardedLMI:
+def shard_index(index: lmi_lib.LMI, n_shards: int, store_dtype: str = "float32",
+                scale_granularity: str = "row") -> ShardedLMI:
     """Split a built LMI into ``n_shards`` bucket-owned blocks (host-side).
 
     Depth-agnostic: leaf ownership is ``leaf_id % n_shards`` over the
     mixed-radix leaf ids, whatever the level count. ``store_dtype``:
     candidate-store precision. "float32" (exact), "bfloat16" (2x
-    smaller; <1e-2 relative distance error) or "int8" (4x smaller;
-    per-row absmax scales — the billion-scale memory lever; recall
-    impact measured in tests/test_distributed_lmi.py). The quantization
-    contract lives in `repro.core.store.quantize`.
+    smaller; <1e-2 relative distance error), "int8" (4x smaller;
+    absmax scales — the billion-scale memory lever; recall impact
+    measured in tests/test_distributed_lmi.py) or "float8_e4m3fn" (4x
+    smaller at better tail accuracy for heavy-outlier rows).
+    ``scale_granularity``: "row" or "bucket" per-shard quantization
+    scales (per-bucket shrinks the scales leaf ~bucket_size-fold). The
+    quantization contract lives in `repro.core.store.quantize`.
     """
     offsets = np.asarray(index.bucket_offsets, np.int64)
     sizes = offsets[1:] - offsets[:-1]
@@ -152,7 +156,8 @@ def shard_index(index: lmi_lib.LMI, n_shards: int, store_dtype: str = "float32")
         levels=index.levels,
         global_sizes=jnp.asarray(sizes, jnp.int32),
         store=store_lib.make_store(
-            sh_emb, sh_ids, sh_off, store_dtype, revision=index.index_revision
+            sh_emb, sh_ids, sh_off, store_dtype, revision=index.index_revision,
+            scale_granularity=scale_granularity,
         ),
         n_objects=index.n_objects,
         max_bucket_size=index.max_bucket_size or int(sizes.max()),
@@ -245,6 +250,7 @@ def sharded_knn(
     temperatures: "lmi_lib.Temperatures" = None,
     planes=None,
     shard_ok: Optional[Array] = None,
+    compute_dtype: str = "float32",
 ):
     """Distributed kNN: queries sharded over ``query_axes``, DB buckets over
     ``shard_axis``. Exact vs. the single-device result (for the same
@@ -281,6 +287,11 @@ def sharded_knn(
     on the single-device path (it is the same `filtering.filter_topk`
     call) — and, with ``node_eval="segmented"``, the beam node
     evaluation through the beam_eval Pallas kernel.
+    ``compute_dtype="int8"`` additionally runs each shard's filter
+    contraction in the integer domain when the store is int8 with
+    prebuilt norms (see `filtering.filter_range`; other stores fall
+    back to f32 compute) — the replicated setting is static, so every
+    shard compiles the same plan.
 
     ``shard_ok`` — degraded-recall fault tolerance (ISSUE 7,
     docs/serving.md): a replicated (S,) float mask (1.0 live, 0.0
@@ -323,13 +334,15 @@ def sharded_knn(
     store_dtype = sharded.store.dtype
     store_revision = sharded.store.revision
     has_scales = sharded.store.scales is not None
+    has_norms = sharded.store.norms is not None
+    scale_granularity = sharded.store.scale_granularity
     radius = _BIG if max_radius is None else jnp.float32(max_radius * radius_scale)
     if shard_ok is None:
         shard_ok = jnp.ones((sharded.n_shards,), jnp.float32)
     shard_ok = jnp.asarray(shard_ok, jnp.float32)
 
-    def local_fn(queries_l, radius_l, shard_ok_l, data, scales, ids, offsets,
-                 levels, gsizes, planes_l):
+    def local_fn(queries_l, radius_l, shard_ok_l, data, scales, norms, ids,
+                 offsets, levels, gsizes, planes_l):
         # shard_map passes block-local arrays with a size-1 shard dim
         local_store = store_lib.CandidateStore(
             dtype=store_dtype,
@@ -337,7 +350,9 @@ def sharded_knn(
             ids=ids[0],
             offsets=offsets[0],
             scales=scales[0] if has_scales else None,
+            norms=norms[0] if has_norms else None,
             revision=store_revision,
+            scale_granularity=scale_granularity,
         )
         rows, valid, runs = _local_candidates(
             sharded.model_type, levels, sharded.arities, gsizes,
@@ -350,6 +365,7 @@ def sharded_knn(
         local_d, top_slot = filtering.filter_topk(
             local_store, queries_l, rows, valid, kk, metric=metric,
             use_kernel=use_kernel, interpret=interpret, runs=runs,
+            compute_dtype=compute_dtype,
         )
         idx = jnp.maximum(top_slot, 0)
         local_ids = jnp.take_along_axis(local_store.ids[rows], idx, axis=1)
@@ -381,14 +397,15 @@ def sharded_knn(
     shard_spec_ids = P(shard_axis, None)
     shard_spec_emb = P(shard_axis, None, None)
     scale_spec = None if not has_scales else P(shard_axis, None)
+    norm_spec = None if not has_norms else P(shard_axis, None)
     rep = P()
 
     planes_spec = None if planes is None else rep
     fn = _shard_map(
         local_fn,
         mesh,
-        (qspec, rep, rep, shard_spec_emb, scale_spec, shard_spec_ids,
-         shard_spec_off, rep, rep, planes_spec),
+        (qspec, rep, rep, shard_spec_emb, scale_spec, norm_spec,
+         shard_spec_ids, shard_spec_off, rep, rep, planes_spec),
         (qspec, qspec),
     )
     return fn(
@@ -397,6 +414,7 @@ def sharded_knn(
         shard_ok,
         sharded.store.data,
         sharded.store.scales,
+        sharded.store.norms,
         sharded.store.ids,
         sharded.store.offsets,
         sharded.levels,

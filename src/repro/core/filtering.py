@@ -79,42 +79,89 @@ class FilterResult(NamedTuple):
 # --------------------------------------------- the one filtering entry point
 
 
+def _effective_compute(store, compute_dtype: str) -> str:
+    """The compute dtype the filter actually runs. The integer domain
+    needs exact int8 rows plus the store's prebuilt integer norms
+    (`store.quantize` materializes them for int8); every other store —
+    f32/bf16/fp8, or an int8 store deserialized without norms (format-1
+    indexes) — falls back to the f32 path. Static resolution: both
+    inputs are trace-time constants, so the fallback costs nothing."""
+    if compute_dtype == "int8" and store.dtype == "int8" and store.norms is not None:
+        return "int8"
+    return "float32"
+
+
+def _quant_kwargs(store, runs, compute: str) -> dict:
+    """The kernel wrapper's quantization operands, resolved from the
+    store: per-bucket scale granularity rides as raw bucket scalars when
+    the descriptor gather (``runs``) can consume them per run, and is
+    expanded to per-row scales otherwise; the int-domain path adds the
+    prebuilt norms."""
+    kw = {"compute_dtype": compute}
+    if store.scales is not None:
+        if store.scale_granularity == "bucket" and runs is not None:
+            kw["bucket_scales"] = store.scales
+            kw["offsets"] = store.offsets
+        else:
+            kw["scales"] = store_lib.row_scales(store)
+    if compute == "int8":
+        kw["norms"] = store.norms
+    return kw
+
+
 def filter_range(store, queries, rows, valid, *, metric: str = "euclidean",
                  use_kernel: bool = False, interpret: Optional[bool] = None,
-                 runs=None):
+                 runs=None, compute_dtype: str = "float32"):
     """(Q, C) f32 distances of each query to its candidate rows of
     ``store`` — THE shared filtering primitive (single-device + sharded).
     Invalid slots get +3.4e38. ``runs``: optional `lmi.BucketRuns` gather
     metadata — the kernel backend then gathers candidates with one
     variable-length DMA chain per bucket run (descriptor grid) instead of
     rediscovering fixed-width segments from the rows; the oracle ignores
-    it (distances depend only on rows/valid)."""
+    it (distances depend only on rows/valid). ``compute_dtype="int8"``
+    (int8 stores with prebuilt norms; others fall back to f32 — see
+    `_effective_compute`): the integer-domain contraction — queries are
+    quantized to symmetric int8 on device and the kernel never widens the
+    candidate tile (`kernels.lmi_filter` module docstring); the oracle
+    backend mirrors it with `lf_ref.lmi_filter_int_ref`."""
     if interpret is None:
         interpret = should_interpret()
+    compute = _effective_compute(store, compute_dtype)
     if use_kernel:
         return lf_ops.lmi_filter_range(queries, rows, valid, store.data, metric=metric,
-                                       interpret=interpret, scales=store.scales,
-                                       runs=runs)
+                                       interpret=interpret, runs=runs,
+                                       **_quant_kwargs(store, runs, compute))
+    if compute == "int8":
+        return lf_ref.lmi_filter_int_ref(queries, rows, valid, store.data,
+                                         store_lib.row_scales(store), store.norms,
+                                         metric=metric)
     return lf_ref.lmi_filter_ref(queries, rows, valid, store.data, metric=metric,
-                                 scales=store.scales)
+                                 scales=store_lib.row_scales(store))
 
 
 def filter_topk(store, queries, rows, valid, k: int, *, metric: str = "euclidean",
                 use_kernel: bool = False, interpret: Optional[bool] = None,
-                runs=None):
+                runs=None, compute_dtype: str = "float32"):
     """Top-k smallest candidate distances over ``store``: -> (dist (Q, k)
     ascending, slot (Q, k) into the candidate axis). The sharded path
     calls this per shard on its block-local store. ``runs``: optional
-    `lmi.BucketRuns` for the kernel's per-run descriptor gather (see
-    `filter_range`)."""
+    `lmi.BucketRuns` for the kernel's per-run descriptor gather;
+    ``compute_dtype``: the contraction domain (see `filter_range`)."""
     if interpret is None:
         interpret = should_interpret()
+    compute = _effective_compute(store, compute_dtype)
     if use_kernel:
         return lf_ops.lmi_filter_topk(queries, rows, valid, store.data, k, metric=metric,
-                                      interpret=interpret, scales=store.scales,
-                                      runs=runs)
+                                      interpret=interpret, runs=runs,
+                                      **_quant_kwargs(store, runs, compute))
+    if compute == "int8":
+        d = lf_ref.lmi_filter_int_ref(queries, rows, valid, store.data,
+                                      store_lib.row_scales(store), store.norms,
+                                      metric=metric)
+        neg, slot = jax.lax.top_k(-d, k)
+        return -neg, slot.astype(jnp.int32)
     return lf_ref.lmi_filter_topk_ref(queries, rows, valid, store.data, k, metric=metric,
-                                      scales=store.scales)
+                                      scales=store_lib.row_scales(store))
 
 
 # ------------------------------------------------------- jitted query plans
@@ -125,12 +172,13 @@ def filter_topk(store, queries, rows, valid, k: int, *, metric: str = "euclidean
     static_argnames=(
         "stop_count", "cap", "metric", "mode", "k", "use_kernel", "interpret",
         "bucket_topk", "beam_width", "node_eval", "temperatures",
+        "compute_dtype",
     ),
 )
 def _query_impl(
     index, store, queries, radius, *, stop_count, cap, metric, mode, k,
     use_kernel, interpret, bucket_topk, beam_width=None, node_eval="gather",
-    temperatures=None, planes=None,
+    temperatures=None, planes=None, compute_dtype="float32",
 ):
     """One compiled plan for the whole query: search -> filter -> predicate.
 
@@ -152,7 +200,8 @@ def _query_impl(
     )
     if mode == "range":
         d = filter_range(store, queries, rows, valid, metric=metric,
-                         use_kernel=use_kernel, interpret=interpret, runs=runs)
+                         use_kernel=use_kernel, interpret=interpret, runs=runs,
+                         compute_dtype=compute_dtype)
         mask = d <= radius
         return jnp.where(mask, cand_ids, -1), d, mask
     # ---- kNN: top-k then range-limit (equivalent to limit-then-top-k,
@@ -163,7 +212,7 @@ def _query_impl(
     kk = min(k, cap)
     top_d, top_slot = filter_topk(store, queries, rows, valid, kk, metric=metric,
                                   use_kernel=use_kernel, interpret=interpret,
-                                  runs=runs)
+                                  runs=runs, compute_dtype=compute_dtype)
     if kk < k:
         top_d = jnp.pad(top_d, ((0, 0), (0, k - kk)), constant_values=_BIG)
         top_slot = jnp.pad(top_slot, ((0, 0), (0, k - kk)), constant_values=-1)
@@ -220,6 +269,7 @@ def range_query(
     node_eval: str = "gather",
     temperatures: "lmi_lib.Temperatures" = None,
     planes=None,
+    compute_dtype: str = "float32",
 ) -> FilterResult:
     """End-to-end LMI range query (paper Table 2).
 
@@ -233,7 +283,9 @@ def range_query(
     ``temperatures`` the per-level score calibration
     (`repro.core.calibrate`, docs/beam_search.md); ``planes`` optional
     prebuilt node planes for the segmented beam (`repro.core.planes` —
-    validated against the index revision and temperature schedule).
+    validated against the index revision and temperature schedule);
+    ``compute_dtype`` the filter contraction domain ("float32" /
+    "int8" — the integer-domain path for int8 stores, `filter_range`).
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
@@ -245,7 +297,7 @@ def range_query(
         stop_count=stop_count, cap=cap, metric=metric, mode="range", k=0,
         use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
         beam_width=widths, node_eval=node_eval, temperatures=temps,
-        planes=_planes_for(index, planes, temps),
+        planes=_planes_for(index, planes, temps), compute_dtype=compute_dtype,
     )
     return FilterResult(ids=ids, distances=d, mask=mask)
 
@@ -267,6 +319,7 @@ def knn_query(
     node_eval: str = "gather",
     temperatures: "lmi_lib.Temperatures" = None,
     planes=None,
+    compute_dtype: str = "float32",
 ) -> tuple[Array, Array]:
     """kNN over the candidate set (paper Table 3: 30NN with max radius).
 
@@ -278,7 +331,9 @@ def knn_query(
     ``node_eval`` how the beam's pruned levels read node models
     ("gather" / "segmented"); ``temperatures`` the per-level score
     calibration (`repro.core.calibrate`); ``planes`` optional prebuilt
-    node planes for the segmented beam (`repro.core.planes`).
+    node planes for the segmented beam (`repro.core.planes`);
+    ``compute_dtype`` the filter contraction domain ("float32" /
+    "int8" — the integer-domain path for int8 stores, `filter_range`).
     """
     q = jnp.asarray(queries, jnp.float32)
     stop_count, cap = lmi_lib.query_plan_params(index, stop_condition, candidate_cap)
@@ -291,7 +346,7 @@ def knn_query(
         stop_count=stop_count, cap=cap, metric=metric, mode="knn", k=int(k),
         use_kernel=use_kernel, interpret=interpret, bucket_topk=bucket_topk,
         beam_width=widths, node_eval=node_eval, temperatures=temps,
-        planes=_planes_for(index, planes, temps),
+        planes=_planes_for(index, planes, temps), compute_dtype=compute_dtype,
     )
     return ids, d
 

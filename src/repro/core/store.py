@@ -6,12 +6,25 @@ pytree shared by the single-device (`repro.core.filtering`) and
 bucket-sharded (`repro.core.distributed_lmi`) paths:
 
   * ``data``     — the bucket-sorted embedding matrix, stored in
-    ``float32`` (exact), ``bfloat16`` (2x smaller) or ``int8`` (4x
-    smaller, per-row absmax scales) — the memory lever that decides how
-    many database rows fit per chip (cf. Tian et al. 2022, "A Learned
-    Index for Exact Similarity Search in Metric Spaces": compact
-    per-partition stores are what make memory-bound filtering scale);
-  * ``scales``   — per-row dequantization scales (int8 only);
+    ``float32`` (exact), ``bfloat16`` (2x smaller), ``int8`` (4x
+    smaller, symmetric absmax scales) or ``float8_e4m3fn`` (4x smaller,
+    absmax/448 scales — better tail accuracy than int8 for
+    heavy-outlier rows: fp8 keeps ~3 bits of mantissa at every binade
+    instead of spending all resolution at the row's absmax) — the
+    memory lever that decides how many database rows fit per chip (cf.
+    Tian et al. 2022, "A Learned Index for Exact Similarity Search in
+    Metric Spaces": compact per-partition stores are what make
+    memory-bound filtering scale);
+  * ``scales``   — dequantization scales for the quantized dtypes, at
+    ``scale_granularity`` "row" (one per row, shape (..., R)) or
+    "bucket" (one per CSR bucket, shape (..., L) — the scales leaf
+    shrinks ~bucket_size-fold and the kernel's per-slot scale plane
+    collapses to one scalar per bucket *run*);
+  * ``norms``    — int8 only: the integer row norms ``sum(q_r^2)``
+    (int32, exact), prebuilt at quantize time so the integer-domain
+    filter path (`compute_dtype="int8"`) never has to touch the
+    (bq, bc, d) tile to recover |c|^2 — the ``cn`` term of the norm
+    decomposition becomes a per-row constant;
   * ``ids``      — CSR row -> original object id;
   * ``offsets``  — CSR bucket offsets (bucket ``b`` owns rows
     ``offsets[b]:offsets[b+1]``), which is what makes each query's
@@ -23,11 +36,13 @@ CandidateStore whose leaves carry a leading shard axis and are split by
 ``shard_map`` — the sharded query path reuses the exact same filtering
 entry points as the single-device one (see ``filtering.filter_topk``).
 
-Quantization contract (int8): symmetric per-row absmax — row ``r`` is
-stored as ``round(x / s_r)`` with ``s_r = max|x_r| / 127``; dequant is
-``q * s_r``, applied *after* the gather (in VMEM inside the fused
-kernel, or on the gathered (Q, C, d) block in the jnp oracle), so the
-HBM-resident store stays 1 byte/dim.
+Quantization contract (int8 / float8_e4m3fn): symmetric absmax — the
+rows of scale group ``g`` (a single row, or a whole CSR bucket) are
+stored as ``round(x / s_g)`` (int8) or ``fp8(x / s_g)`` with
+``s_g = max|x_g| / qmax`` (qmax = 127 for int8, 448 = the e4m3fn max
+normal for fp8); dequant is ``q * s_g``, applied *after* the gather (in
+VMEM inside the fused kernel, or on the gathered (Q, C, d) block in the
+jnp oracle), so the HBM-resident store stays 1 byte/dim.
 """
 from __future__ import annotations
 
@@ -39,29 +54,61 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
-STORE_DTYPES = ("float32", "bfloat16", "int8")
+STORE_DTYPES = ("float32", "bfloat16", "int8", "float8_e4m3fn")
+
+# dtypes that carry scales (and, for int8, prebuilt integer norms)
+QUANTIZED_DTYPES = ("int8", "float8_e4m3fn")
+
+SCALE_GRANULARITIES = ("row", "bucket")
 
 _JNP_DTYPE = {
     "float32": jnp.float32,
     "bfloat16": jnp.bfloat16,
     "int8": jnp.int8,
+    "float8_e4m3fn": jnp.float8_e4m3fn,
 }
+
+# symmetric-quantization range: values map to [-qmax, qmax]
+_QMAX = {"int8": 127.0, "float8_e4m3fn": 448.0}
+
+
+def validate_dtype(dtype: str, *, flag: str = "store dtype") -> str:
+    """Fail fast on an unknown store dtype with the full menu — CLI entry
+    points call this *before* fitting models, so a typo'd --store-dtype
+    costs seconds, not a finished build ending in a KeyError."""
+    if dtype not in STORE_DTYPES:
+        raise ValueError(f"{flag} must be one of {STORE_DTYPES}, got {dtype!r}")
+    return dtype
+
+
+def validate_granularity(granularity: str) -> str:
+    if granularity not in SCALE_GRANULARITIES:
+        raise ValueError(
+            f"scale granularity must be one of {SCALE_GRANULARITIES}, "
+            f"got {granularity!r}"
+        )
+    return granularity
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class CandidateStore:
-    """Pytree candidate store; ``dtype`` is static so jitted query plans
-    specialize per precision (and never branch on device data)."""
+    """Pytree candidate store; ``dtype`` / ``scale_granularity`` are
+    static so jitted query plans specialize per precision (and never
+    branch on device data)."""
 
     dtype: str = dataclasses.field(metadata=dict(static=True))
     data: Array  # (..., R, d) store-dtype embedding rows, bucket-sorted
     ids: Array  # (..., R) int32 original object ids
     offsets: Array  # (..., L + 1) int32 CSR bucket offsets
-    scales: Optional[Array] = None  # (..., R) float32 dequant scales (int8)
+    scales: Optional[Array] = None  # (..., R) or (..., L) f32 dequant scales
+    norms: Optional[Array] = None  # (..., R) int32 integer row norms (int8)
     # index_revision of the LMI this store was materialized from; filtering
     # rejects a store whose revision lags the index (stale after `lmi.insert`)
     revision: int = dataclasses.field(default=0, metadata=dict(static=True))
+    # "row" (scales indexed by CSR row) or "bucket" (by CSR bucket)
+    scale_granularity: str = dataclasses.field(
+        default="row", metadata=dict(static=True))
 
     @property
     def n_rows(self) -> int:
@@ -80,6 +127,8 @@ class CandidateStore:
         n = self.data.size * self.data.dtype.itemsize
         if self.scales is not None:
             n += self.scales.size * self.scales.dtype.itemsize
+        if self.norms is not None:
+            n += self.norms.size * self.norms.dtype.itemsize
         if include_metadata:
             n += self.ids.size * self.ids.dtype.itemsize
             n += self.offsets.size * self.offsets.dtype.itemsize
@@ -94,45 +143,104 @@ class CandidateStore:
             ids=self.ids[index],
             offsets=self.offsets[index],
             scales=None if self.scales is None else self.scales[index],
+            norms=None if self.norms is None else self.norms[index],
             revision=self.revision,
+            scale_granularity=self.scale_granularity,
         )
 
 
-def quantize(embeddings: Array, dtype: str) -> tuple[Array, Optional[Array]]:
-    """(data, scales) of ``embeddings`` in the requested store precision.
+def _bucket_ids(offsets: Array, n_rows: int) -> Array:
+    """(R,) int32 bucket id of every CSR row. Empty buckets produce
+    duplicate offsets; side='right' - 1 lands each row in the *last*
+    bucket starting at/before it, which is the unique non-empty one."""
+    L = offsets.shape[0] - 1
+    rb = jnp.searchsorted(offsets, jnp.arange(n_rows), side="right") - 1
+    return jnp.clip(rb, 0, L - 1).astype(jnp.int32)
+
+
+def _quantize_2d(x: Array, dtype: str, granularity: str,
+                 offsets: Optional[Array]):
+    """One (R, d) slab -> (data, scales, norms); vmapped over leading dims."""
+    qmax = _QMAX[dtype]
+    absmax = jnp.max(jnp.abs(x), axis=-1)  # (R,)
+    if granularity == "row":
+        scales = (jnp.maximum(absmax, 1e-12) / qmax).astype(jnp.float32)
+        row_s = scales
+    else:
+        L = offsets.shape[0] - 1
+        rb = _bucket_ids(offsets, x.shape[0])
+        bmax = jax.ops.segment_max(absmax, rb, num_segments=L)
+        # empty buckets have no rows: segment_max yields -inf; clamp so the
+        # scales leaf stays finite (nothing ever dequantizes against them)
+        scales = (jnp.maximum(bmax, 1e-12) / qmax).astype(jnp.float32)
+        row_s = scales[rb]
+    scaled = x / row_s[:, None]
+    if dtype == "int8":
+        q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(jnp.int8)
+        qi = q.astype(jnp.int32)
+        norms = jnp.sum(qi * qi, axis=-1).astype(jnp.int32)  # exact, < 2^31
+    else:  # float8_e4m3fn: clip to the finite range, round on cast
+        q = jnp.clip(scaled, -qmax, qmax).astype(jnp.float8_e4m3fn)
+        norms = None
+    return q, scales, norms
+
+
+def quantize(
+    embeddings: Array,
+    dtype: str,
+    scale_granularity: str = "row",
+    offsets: Optional[Array] = None,
+) -> tuple[Array, Optional[Array], Optional[Array]]:
+    """(data, scales, norms) of ``embeddings`` in the requested store
+    precision.
+
+    ``scale_granularity="bucket"`` shares one scale across each CSR
+    bucket (``offsets`` required): the scales leaf shrinks from R to L
+    entries and — because kernel tiles arrive as bucket *runs* — the
+    per-slot dequant plane collapses to a per-run scalar. ``norms`` is
+    the int8 path's prebuilt integer row norm (None otherwise).
 
     Works on any (..., R, d) batch; pure jnp so it can run device-side
     (index build) or under vmap (per-shard stores).
     """
-    if dtype not in STORE_DTYPES:
-        raise ValueError(f"store dtype must be one of {STORE_DTYPES}, got {dtype!r}")
+    validate_dtype(dtype)
+    validate_granularity(scale_granularity)
     x = jnp.asarray(embeddings, jnp.float32)
     if dtype == "float32":
-        return x, None
+        return x, None, None
     if dtype == "bfloat16":
-        return x.astype(jnp.bfloat16), None
-    absmax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-12)  # (..., R)
-    scales = (absmax / 127.0).astype(jnp.float32)
-    q = jnp.clip(jnp.round(x / scales[..., None]), -127, 127).astype(jnp.int8)
-    return q, scales
+        return x.astype(jnp.bfloat16), None, None
+    if scale_granularity == "bucket":
+        if offsets is None:
+            raise ValueError("scale_granularity='bucket' requires CSR offsets")
+        offsets = jnp.asarray(offsets, jnp.int32)
+
+    fn = _quantize_2d
+    for _ in range(x.ndim - 2):  # lift over leading (shard/batch) dims
+        fn = jax.vmap(fn, in_axes=(0, None, None, 0 if offsets is not None else None))
+    return fn(x, dtype, scale_granularity, offsets)
 
 
 def make_store(
     embeddings: Array, ids: Array, offsets: Array, dtype: str = "float32",
-    revision: int = 0,
+    revision: int = 0, scale_granularity: str = "row",
 ) -> CandidateStore:
-    data, scales = quantize(embeddings, dtype)
+    offsets = jnp.asarray(offsets, jnp.int32)
+    data, scales, norms = quantize(embeddings, dtype, scale_granularity, offsets)
     return CandidateStore(
         dtype=dtype,
         data=data,
         ids=jnp.asarray(ids, jnp.int32),
-        offsets=jnp.asarray(offsets, jnp.int32),
+        offsets=offsets,
         scales=scales,
+        norms=norms,
         revision=revision,
+        scale_granularity=scale_granularity,
     )
 
 
-def from_lmi(index, dtype: str = "float32") -> CandidateStore:
+def from_lmi(index, dtype: str = "float32",
+             scale_granularity: str = "row") -> CandidateStore:
     """The store view of a built `repro.core.lmi.LMI` (f32 is zero-copy:
     the leaves alias the index's CSR arrays). Stamps the index's
     ``index_revision`` so `filtering` can detect staleness after
@@ -140,18 +248,40 @@ def from_lmi(index, dtype: str = "float32") -> CandidateStore:
     return make_store(
         index.sorted_embeddings, index.sorted_ids, index.bucket_offsets, dtype,
         revision=getattr(index, "index_revision", 0),
+        scale_granularity=scale_granularity,
     )
 
 
 def refresh(index, store: CandidateStore) -> CandidateStore:
-    """Re-materialize ``store`` (same precision) from the index's current
-    CSR arrays — the one-call fix after `lmi.insert` invalidates it.
+    """Re-materialize ``store`` (same precision + granularity) from the
+    index's current CSR arrays — the one-call fix after `lmi.insert`
+    invalidates it.
 
     Prebuilt node-score planes follow the same protocol: they carry the
     index revision they were built from, queries reject stale ones, and
     `repro.core.planes.refresh(index, planes)` is the matching one-call
     fix."""
-    return from_lmi(index, store.dtype)
+    return from_lmi(index, store.dtype, store.scale_granularity)
+
+
+def row_scales(store: CandidateStore) -> Optional[Array]:
+    """The store's dequant scales as a per-ROW view (..., R) regardless
+    of granularity — what every per-slot consumer (the oracle's gather,
+    the kernel's scale plane) indexes by CSR row. Bucket scales expand by
+    bucket size (`jnp.repeat` with a static total, so it jits); the
+    expansion is a transient jnp view, never a stored leaf."""
+    if store.scales is None:
+        return None
+    if store.scale_granularity == "row":
+        return store.scales
+
+    def expand(sc, off):
+        return jnp.repeat(sc, jnp.diff(off), total_repeat_length=store.n_rows)
+
+    fn = expand
+    for _ in range(store.scales.ndim - 1):
+        fn = jax.vmap(fn)
+    return fn(store.scales, store.offsets)
 
 
 def gather_dequant(data: Array, scales: Optional[Array], rows: Array) -> Array:
@@ -159,7 +289,8 @@ def gather_dequant(data: Array, scales: Optional[Array], rows: Array) -> Array:
 
     THE quantization contract in jnp form — the oracle
     (`kernels.lmi_filter.ref`) and `dequantize_rows` both call this, so
-    a contract change (e.g. per-bucket scales) lands in one place.
+    a contract change lands in one place. ``scales`` is the per-ROW view
+    (callers with a bucket-granular store expand via `row_scales`).
     Materializes the gathered block on purpose.
     """
     cand = jnp.asarray(data)[rows].astype(jnp.float32)
@@ -170,12 +301,13 @@ def gather_dequant(data: Array, scales: Optional[Array], rows: Array) -> Array:
 
 def dequantize_rows(store: CandidateStore, rows: Array) -> Array:
     """`gather_dequant` over a CandidateStore."""
-    return gather_dequant(store.data, store.scales, rows)
+    return gather_dequant(store.data, row_scales(store), rows)
 
 
 def dequantize(store: CandidateStore) -> Array:
     """The full store back in float32 (tests / round-trip checks)."""
     x = store.data.astype(jnp.float32)
-    if store.scales is not None:
-        x = x * store.scales[..., None]
+    scales = row_scales(store)
+    if scales is not None:
+        x = x * scales[..., None]
     return x

@@ -11,15 +11,36 @@ This kernel fuses the whole stage. Per `(query-block, candidate-tile)`
 grid step it
 
   1. DMAs the tile's candidate rows from the HBM-resident store straight
-     into a `(bq, bc, d)` VMEM scratch *in the store's dtype* (f32, bf16
-     or int8 — the DMA moves 4x fewer bytes on an int8 store),
-  2. dequantizes in VMEM: widen to f32 and, for int8 stores, multiply by
-     the per-row scales (gathered jnp-side into a `(bq, bc)` tile input —
-     16 bytes/row of extra traffic vs. `4d` for the row itself),
+     into a `(bq, bc, d)` VMEM scratch *in the store's wire dtype* (f32,
+     bf16, int8 or fp8 — the DMA moves 4x fewer bytes on a 1-byte
+     store),
+  2. recovers per-slot dequant scales — as a `(bq, bc)` f32 tile input
+     (per-row scales), or rebuilt in VMEM from one scalar per bucket
+     *run* (per-bucket scales on the descriptor path — the scale plane
+     never rides through HBM at all),
   3. computes squared-L2 via the norm decomposition
-     ``|c|^2 + |q|^2 - 2 c.q`` — the `c.q` term is one batched
-     `(bc, d) x (d,)` contraction per query row, MXU-eligible — or the
-     cosine distance from the same dot/norm pieces,
+     ``|c|^2 + |q|^2 - 2 c.q`` — or the cosine distance from the same
+     dot/norm pieces — on one of two compute paths:
+
+       * ``compute="float32"``: widen the tile to f32 in VMEM (multiply
+         by the scale plane), then a `(bc, d) x (d,)` f32 contraction
+         per query row;
+       * ``compute="int8"`` (int8 stores): the query block arrives
+         pre-quantized to symmetric int8, the contraction runs directly
+         on the *integer* tile — int8 x int8 -> int32 on the MXU
+         (`preferred_element_type=jnp.int32`) — and `|c|^2` comes from
+         the store's prebuilt integer row norms, so the f32 widen of
+         the whole `(bq, bc, d)` tile disappears from VMEM and the
+         scales (symmetric, they commute out of the dot) touch only the
+         `(bq, bc)` epilogue: ``d2 = s_c^2 cn - 2 s_c s_q qc + s_q^2
+         qn``. For cosine the scales cancel entirely. In interpret mode
+         the integer dot is evaluated through f32 arithmetic instead —
+         every operand is an integer below 2^24 (max |qc| <=
+         127*127*d), so f32 MACs are *exact* and the values are
+         bit-identical to the int32 MXU path; XLA:CPU has no fast int8
+         GEMM, the f32 route just picks the fast lowering for the same
+         math,
+
   4. either writes the `(bq, bc)` distance tile to the `(Q, C)` output
      (range mode) or folds it into a streaming per-query top-k
      accumulator held in VMEM (knn mode), emitted once after the last
@@ -88,6 +109,10 @@ _EPS = 1e-12
 METRICS = ("euclidean", "sq_euclidean", "cosine")
 
 SEG = 8  # gather segment width (f32 sublane quantum); see ops._segment_metadata
+
+# per-slot dequant scale delivery: no scales / a (Q, C) f32 plane input /
+# rebuilt in VMEM from per-run scalars (bucket granularity, descriptor path)
+SCALE_MODES = ("none", "plane", "run")
 
 
 def _seg_gather(rows_ref, segr_ref, segc_ref, emb_ref, cand_scr, sem, slot, action):
@@ -184,20 +209,42 @@ def _desc_gather(nrun_ref, dstart_ref, doff_ref, dlen_ref, emb_ref, cand_scr,
         jax.lax.fori_loop(0, nrun_ref[qbase + r], run_step, 0)
 
 
-def _dequant(cand, scale_ref):
-    """Widen the gathered tile to f32 in VMEM; int8 stores multiply by the
-    per-row scale tile. (bq, bc, d) store-dtype -> (bq, bc, d) f32.
+def _run_scale_plane(doff_ref, dlen_ref, dscale_ref, base, bc: int):
+    """(bq, bc) per-slot scale plane rebuilt from per-RUN scalars — the
+    bucket-granularity descriptor path's replacement for the (Q, C) f32
+    scale-plane input. Runs are disjoint slot intervals, so one masked
+    sum over the (static) descriptor axis recovers slot coverage; slots
+    no run covers get scale 0 (they are invalid and masked downstream).
+    The (bq, K, bc) compare intermediate is VPU work over the resident
+    descriptor block — no extra HBM traffic, which is the point: the
+    scale plane's ``Q*C*4`` bytes collapse to the ``~runs*4`` descriptor
+    bytes already on board."""
+    bq = doff_ref.shape[0]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (bq, bc), 1) + base  # global
+    doff = doff_ref[...]
+    dend = doff + dlen_ref[...]
+    cov = (slot[:, None, :] >= doff[:, :, None]) & (slot[:, None, :] < dend[:, :, None])
+    return jnp.sum(jnp.where(cov, dscale_ref[...][:, :, None], 0.0), axis=1)
 
-    bf16 stores arrive bit-cast as int16 (the wire dtype — see
-    `ops._as_store_dtype`): the DMA engine moves raw 2-byte lanes either
-    way, but int16 copies avoid the interpreter's per-element bf16
-    conversion fallback (the ~10x bf16 store-sweep pathology in
-    BENCH_query_latency.json); the bitcast back to bf16 here is free."""
-    if cand.dtype == jnp.int16:
+
+def _dequant(cand, scale_plane, store_dtype: str):
+    """Widen the gathered tile to f32 in VMEM; quantized stores multiply
+    by the per-slot scale plane. (bq, bc, d) wire-dtype -> (bq, bc, d)
+    f32.
+
+    bf16 stores arrive bit-cast as int16 and fp8 stores as int8 (the
+    wire dtypes — see `ops._as_store_dtype`): the DMA engine moves raw
+    bytes either way, but integer copies avoid the interpreter's
+    per-element float conversion fallback (the ~10x bf16 store-sweep
+    pathology in BENCH_query_latency.json); the bitcast back here is
+    free."""
+    if store_dtype == "bfloat16":
         cand = jax.lax.bitcast_convert_type(cand, jnp.bfloat16)
+    elif store_dtype == "float8_e4m3fn":
+        cand = jax.lax.bitcast_convert_type(cand, jnp.float8_e4m3fn)
     c = cand.astype(jnp.float32)
-    if scale_ref is not None:
-        c = c * scale_ref[...][..., None]
+    if scale_plane is not None:
+        c = c * scale_plane[..., None]
     return c
 
 
@@ -224,9 +271,59 @@ def _tile_distances(q, cand, valid, metric: str):
     return jnp.where(valid != 0, d, _BIG)
 
 
-def _unpack_refs(refs, quant: bool, desc: bool, n_out: int):
+def _tile_distances_int(qi, qscale, cand, norms, scale_plane, valid,
+                        metric: str, exact_f32: bool):
+    """Integer-domain (bq, bc) distances: the contraction runs on the raw
+    int8 tile, the f32 widen never happens, and the symmetric scales
+    touch only the (bq, bc) epilogue.
+
+    qi (bq, d) int8 pre-quantized queries, qscale (bq, 1) f32 per-query
+    scales, cand (bq, bc, d) int8, norms (bq, bc) int32 prebuilt integer
+    row norms (store-side constant — `store.quantize`), scale_plane
+    (bq, bc) f32 per-slot store scales, valid (bq, bc) int32.
+
+    ``exact_f32`` (interpret mode) evaluates the integer dot through f32
+    MACs: every partial sum is an integer with |.| <= 127*127*d < 2^24,
+    so the result is exactly the int32 value — same math, faster CPU
+    lowering. On TPU the int8 x int8 -> int32 form feeds the MXU's
+    integer pipeline.
+    """
+    dims = (((2,), (1,)), ((0,), (0,)))
+    if exact_f32:
+        qc = jax.lax.dot_general(
+            cand.astype(jnp.float32), qi.astype(jnp.float32), dims,
+            preferred_element_type=jnp.float32)
+    else:
+        qc = jax.lax.dot_general(
+            cand, qi, dims, preferred_element_type=jnp.int32
+        ).astype(jnp.float32)
+    qf = qi.astype(jnp.float32)
+    qn = jnp.sum(qf * qf, axis=-1)[:, None]  # (bq, 1) integer |q|^2, exact
+    cn = norms.astype(jnp.float32)  # (bq, bc) integer |c|^2, exact
+    if metric in ("euclidean", "sq_euclidean"):
+        # |s_c c - s_q q|^2 with the scales pulled out of each exact
+        # integer term; s_c varies per slot, s_q per query row
+        d = jnp.maximum(
+            scale_plane * scale_plane * cn
+            - 2.0 * (scale_plane * qscale) * qc
+            + (qscale * qscale) * qn,
+            0.0,
+        )
+        if metric == "euclidean":
+            d = jnp.sqrt(d)
+    elif metric == "cosine":
+        # scales cancel: cos = qc / sqrt(cn * qn) on the raw integers
+        den = jnp.sqrt(jnp.maximum(cn * qn, _EPS * _EPS))
+        d = 1.0 - qc / den
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return jnp.where(valid != 0, d, _BIG)
+
+
+def _unpack_refs(refs, scale_mode: str, intdom: bool, desc: bool, n_out: int):
     """Split the flat Pallas ref list into (gather closures over the
-    pipelining slot/action, valid, q, scale, emb, outs, scratch, sem).
+    pipelining slot/action, valid, q, qscale, norms, per-slot scale
+    plane, outs, scratch).
 
     The double-buffer protocol both kernel bodies run (docstring):
     warm-up start at j == 0, wait the current tile, prefetch tile j + 1
@@ -245,16 +342,22 @@ def _unpack_refs(refs, quant: bool, desc: bool, n_out: int):
         (rows_ref, rows_nxt, valid_ref, segr_ref, segc_ref, segr_nxt,
          segc_nxt, q_ref) = refs[:8]
         rest = refs[8:]
-    scale_ref = rest[0] if quant else None
-    rest = rest[1:] if quant else rest
+    scale_ref = dscale_ref = None
+    if scale_mode == "plane":
+        scale_ref, rest = rest[0], rest[1:]
+    elif scale_mode == "run":
+        dscale_ref, rest = rest[0], rest[1:]
+    qscale_ref = norm_ref = None
+    if intdom:
+        (qscale_ref, norm_ref), rest = rest[:2], rest[2:]
     emb_ref = rest[0]
     outs = rest[1 : 1 + n_out]
     scr = rest[1 + n_out :]
     cand_scr, sem = scr[0], scr[-1]
     mid_scr = scr[1:-1]
+    bq = q_ref.shape[0]
+    bc = cand_scr.shape[2]
     if desc:
-        bq = q_ref.shape[0]
-        bc = cand_scr.shape[2]
         qbase = pl.program_id(0) * bq
 
         def cur(action):
@@ -274,12 +377,20 @@ def _unpack_refs(refs, quant: bool, desc: bool, n_out: int):
             _seg_gather(rows_nxt, segr_nxt, segc_nxt, emb_ref, cand_scr, sem,
                         1 - slot, action)
 
-    return cur, nxt, slot, valid_ref, q_ref, scale_ref, outs, mid_scr, cand_scr
+    def scale_plane():
+        if scale_mode == "plane":
+            return scale_ref[...]
+        if scale_mode == "run":  # desc-only: rebuilt from per-run scalars
+            return _run_scale_plane(doff_ref, dlen_ref, dscale_ref, j * bc, bc)
+        return None
+
+    return (cur, nxt, slot, valid_ref, q_ref, qscale_ref, norm_ref,
+            scale_plane, outs, mid_scr, cand_scr)
 
 
-def _pipelined_tile(cur, nxt, slot, cand_scr, scale_ref, nj: int):
+def _pipelined_tile(cur, nxt, slot, cand_scr, nj: int):
     """Run the double-buffer handoff for this grid step and return the
-    dequantized (bq, bc, d) f32 candidate tile."""
+    raw (bq, bc, d) wire-dtype candidate tile."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -292,19 +403,37 @@ def _pipelined_tile(cur, nxt, slot, cand_scr, scale_ref, nj: int):
     def _prefetch():
         nxt("start")
 
-    return _dequant(cand_scr[slot], scale_ref)
+    return cand_scr[slot]
 
 
-def _range_kernel(*refs, metric, quant, desc, nj):
-    (cur, nxt, slot, valid_ref, q_ref, scale_ref, outs, _mid,
-     cand_scr) = _unpack_refs(refs, quant, desc, 1)
-    cand = _pipelined_tile(cur, nxt, slot, cand_scr, scale_ref, nj)
-    outs[0][...] = _tile_distances(q_ref[...], cand, valid_ref[...], metric)
+def _tile_body(refs, metric, scale_mode, intdom, exact, store_dtype, desc,
+               nj, n_out):
+    """Shared per-grid-step front half: pipeline the gather, pick the
+    compute path, return (distance tile, valid, outs, mid scratch)."""
+    (cur, nxt, slot, valid_ref, q_ref, qscale_ref, norm_ref, scale_plane,
+     outs, mid, cand_scr) = _unpack_refs(refs, scale_mode, intdom, desc, n_out)
+    cand = _pipelined_tile(cur, nxt, slot, cand_scr, nj)
+    if intdom:
+        d = _tile_distances_int(
+            q_ref[...], qscale_ref[...], cand, norm_ref[...], scale_plane(),
+            valid_ref[...], metric, exact)
+    else:
+        cand = _dequant(cand, scale_plane(), store_dtype)
+        d = _tile_distances(q_ref[...], cand, valid_ref[...], metric)
+    return d, outs, mid
 
 
-def _topk_kernel(*refs, metric, quant, desc, nj, k, bc):
-    (cur, nxt, slot, valid_ref, q_ref, scale_ref, outs, mid,
-     cand_scr) = _unpack_refs(refs, quant, desc, 2)
+def _range_kernel(*refs, metric, scale_mode, intdom, exact, store_dtype,
+                  desc, nj):
+    d, outs, _mid = _tile_body(refs, metric, scale_mode, intdom, exact,
+                               store_dtype, desc, nj, 1)
+    outs[0][...] = d
+
+
+def _topk_kernel(*refs, metric, scale_mode, intdom, exact, store_dtype,
+                 desc, nj, k, bc):
+    d, outs, mid = _tile_body(refs, metric, scale_mode, intdom, exact,
+                              store_dtype, desc, nj, 2)
     outd_ref, outi_ref = outs
     topd_scr, topi_scr = mid
     j = pl.program_id(1)
@@ -313,9 +442,6 @@ def _topk_kernel(*refs, metric, quant, desc, nj, k, bc):
     def _init():
         topd_scr[...] = jnp.full_like(topd_scr, _BIG)
         topi_scr[...] = jnp.full_like(topi_scr, -1)
-
-    cand = _pipelined_tile(cur, nxt, slot, cand_scr, scale_ref, nj)
-    d = _tile_distances(q_ref[...], cand, valid_ref[...], metric)  # (bq, bc)
 
     bq, kpad = topd_scr.shape
     n = kpad + bc
@@ -347,9 +473,25 @@ def _topk_kernel(*refs, metric, quant, desc, nj, k, bc):
         outi_ref[...] = topi_scr[...]
 
 
-def _seg_specs(bq: int, bc: int, d: int, nj: int, quant: bool):
+def _quant_specs(bq: int, bc: int, scale_mode: str, intdom: bool, desc: bool):
+    """The optional quantization operands' specs, shared by both gather
+    modes: the (Q, C) scale plane OR nothing (run mode's dscale rides
+    with the descriptor blocks), then the int-domain extras — (Q, 1)
+    per-query scales and the (Q, C) integer norm plane."""
+    idx = (lambda i, j, n: (i, j)) if desc else (lambda i, j: (i, j))
+    row = (lambda i, j, n: (i, 0)) if desc else (lambda i, j: (i, 0))
+    specs = []
+    if scale_mode == "plane":
+        specs.append(pl.BlockSpec((bq, bc), idx, memory_space=pltpu.VMEM))
+    if intdom:
+        specs.append(pl.BlockSpec((bq, 1), row, memory_space=pltpu.VMEM))  # qscale
+        specs.append(pl.BlockSpec((bq, bc), idx, memory_space=pltpu.VMEM))  # norms
+    return specs
+
+
+def _seg_specs(bq: int, bc: int, d: int, nj: int, scale_mode: str, intdom: bool):
     """Segment-mode in_specs: rows (cur + next tile), valid, seg metadata
-    (cur + next), query block, (int8) per-row scale tile, and the
+    (cur + next), query block, the quantization operands, and the
     HBM-resident store. The "next" duplicates make tile j + 1's gather
     metadata resident during step j (the prefetch's copy addresses)
     without widening any block — same (bq, bc)/(bq, bc // SEG) windows,
@@ -368,18 +510,19 @@ def _seg_specs(bq: int, bc: int, d: int, nj: int, quant: bool):
         pl.BlockSpec((bq, bc // SEG), nxt, memory_space=pltpu.VMEM),
         pl.BlockSpec((bq, d), lambda i, j: (i, 0), memory_space=pltpu.VMEM),  # q
     ]
-    if quant:
-        specs.append(pl.BlockSpec((bq, bc), cur, memory_space=pltpu.VMEM))
+    specs += _quant_specs(bq, bc, scale_mode, intdom, desc=False)
     specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
     return specs
 
 
-def _desc_specs(bq: int, bc: int, d: int, n_desc: int, quant: bool):
+def _desc_specs(bq: int, bc: int, d: int, n_desc: int, scale_mode: str,
+                intdom: bool):
     """Descriptor-mode in_specs (scalar-prefetch index_maps take the
     leading nrun ref): valid, the three (bq, K) descriptor blocks (whole
     per-query descriptor list resident for every candidate tile — no
     next-tile duplicates needed, the prefetch only shifts the window
-    base), query block, (int8) scale tile, HBM store."""
+    base), query block, optional per-run scales (bucket granularity),
+    the quantization operands, HBM store."""
     cur = lambda i, j, n: (i, j)  # trailing arg: the prefetched nrun ref
     row = lambda i, j, n: (i, 0)
     specs = [
@@ -389,8 +532,9 @@ def _desc_specs(bq: int, bc: int, d: int, n_desc: int, quant: bool):
         pl.BlockSpec((bq, n_desc), row, memory_space=pltpu.VMEM),  # dlen
         pl.BlockSpec((bq, d), row, memory_space=pltpu.VMEM),  # q
     ]
-    if quant:
-        specs.append(pl.BlockSpec((bq, bc), cur, memory_space=pltpu.VMEM))
+    if scale_mode == "run":
+        specs.append(pl.BlockSpec((bq, n_desc), row, memory_space=pltpu.VMEM))
+    specs += _quant_specs(bq, bc, scale_mode, intdom, desc=True)
     specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
     return specs
 
@@ -401,13 +545,32 @@ def _gather_scratch(bq: int, bc: int, d: int, dtype):
     return [pltpu.VMEM((2, bq, bc, d), dtype)], [pltpu.SemaphoreType.DMA((2,))]
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "bq", "bc", "interpret"))
+def _quant_args(scales, qscales, norms):
+    """The optional quantization operands, in ref order (plane-mode
+    scales or run-mode dscale first — the caller passes whichever fits
+    its scale_mode — then the int-domain extras)."""
+    args = ()
+    if scales is not None:
+        args += (scales,)
+    if qscales is not None:
+        args += (qscales, norms)
+    return args
+
+
+_STATICS = ("metric", "scale_mode", "intdom", "store_dtype", "bq", "bc",
+            "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=_STATICS)
 def lmi_filter_range_pallas(
     queries, rows, valid, seg_rows, seg_contig, embeddings, scales,
-    *, metric: str, bq: int, bc: int, interpret: bool,
+    qscales=None, norms=None, *, metric: str, scale_mode: str = "none",
+    intdom: bool = False, store_dtype: str = "float32", bq: int, bc: int,
+    interpret: bool,
 ):
     """queries (Q, d), rows/valid (Q, C), seg_* (Q, C // SEG), embeddings
-    (M, d) store-dtype [+ scales (Q, C) f32 for int8] -> (Q, C) f32.
+    (M, d) wire-dtype [+ scales (Q, C) f32 plane; + int-domain qscales
+    (Q, 1) f32 / norms (Q, C) i32] -> (Q, C) f32.
 
     Q % bq == 0, C % bc == 0, bc % SEG == 0 (ops.py pads). ``embeddings``
     stays in HBM/ANY and is gathered run-wise/row-wise per tile, double-
@@ -417,16 +580,17 @@ def lmi_filter_range_pallas(
     c_ = rows.shape[1]
     nj = c_ // bc
     grid = (q_ // bq, nj)
-    quant = scales is not None
     args = (rows, rows, valid, seg_rows, seg_contig, seg_rows, seg_contig, queries)
-    args += (scales,) if quant else ()
+    args += _quant_args(scales, qscales, norms)
     args += (embeddings,)
     vmem, sems = _gather_scratch(bq, bc, d, embeddings.dtype)
     return pl.pallas_call(
-        functools.partial(_range_kernel, metric=metric, quant=quant, desc=False, nj=nj),
+        functools.partial(_range_kernel, metric=metric, scale_mode=scale_mode,
+                          intdom=intdom, exact=interpret,
+                          store_dtype=store_dtype, desc=False, nj=nj),
         out_shape=jax.ShapeDtypeStruct((q_, c_), jnp.float32),
         grid=grid,
-        in_specs=_seg_specs(bq, bc, d, nj, quant),
+        in_specs=_seg_specs(bq, bc, d, nj, scale_mode, intdom),
         out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j), memory_space=pltpu.VMEM),
         scratch_shapes=vmem + sems,
         compiler_params=tpu_compiler_params(
@@ -436,10 +600,12 @@ def lmi_filter_range_pallas(
     )(*args)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "k", "kpad", "bq", "bc", "interpret"))
+@functools.partial(jax.jit, static_argnames=_STATICS + ("k", "kpad"))
 def lmi_filter_topk_pallas(
     queries, rows, valid, seg_rows, seg_contig, embeddings, scales,
-    *, metric: str, k: int, kpad: int, bq: int, bc: int, interpret: bool,
+    qscales=None, norms=None, *, metric: str, k: int, kpad: int,
+    scale_mode: str = "none", intdom: bool = False,
+    store_dtype: str = "float32", bq: int, bc: int, interpret: bool,
 ):
     """Streaming top-k variant: -> (dist (Q, kpad) f32, slot (Q, kpad) i32).
 
@@ -451,20 +617,20 @@ def lmi_filter_topk_pallas(
     c_ = rows.shape[1]
     nj = c_ // bc
     grid = (q_ // bq, nj)
-    quant = scales is not None
     args = (rows, rows, valid, seg_rows, seg_contig, seg_rows, seg_contig, queries)
-    args += (scales,) if quant else ()
+    args += _quant_args(scales, qscales, norms)
     args += (embeddings,)
     vmem, sems = _gather_scratch(bq, bc, d, embeddings.dtype)
     return pl.pallas_call(
-        functools.partial(_topk_kernel, metric=metric, quant=quant, desc=False,
-                          nj=nj, k=k, bc=bc),
+        functools.partial(_topk_kernel, metric=metric, scale_mode=scale_mode,
+                          intdom=intdom, exact=interpret,
+                          store_dtype=store_dtype, desc=False, nj=nj, k=k, bc=bc),
         out_shape=(
             jax.ShapeDtypeStruct((q_, kpad), jnp.float32),
             jax.ShapeDtypeStruct((q_, kpad), jnp.int32),
         ),
         grid=grid,
-        in_specs=_seg_specs(bq, bc, d, nj, quant),
+        in_specs=_seg_specs(bq, bc, d, nj, scale_mode, intdom),
         out_specs=(
             pl.BlockSpec((bq, kpad), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
             pl.BlockSpec((bq, kpad), lambda i, j: (i, 0), memory_space=pltpu.VMEM),
@@ -480,33 +646,38 @@ def lmi_filter_topk_pallas(
     )(*args)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "bq", "bc", "interpret"))
+@functools.partial(jax.jit, static_argnames=_STATICS)
 def lmi_filter_range_desc_pallas(
     queries, valid, nrun, dstart, doff, dlen, embeddings, scales,
-    *, metric: str, bq: int, bc: int, interpret: bool,
+    qscales=None, norms=None, *, metric: str, scale_mode: str = "none",
+    intdom: bool = False, store_dtype: str = "float32", bq: int, bc: int,
+    interpret: bool,
 ):
     """Descriptor-gather range variant: candidate rows come from per-run
     (start, slot-offset, length) descriptors (ops._run_descriptors)
     instead of a (Q, C) rows matrix. nrun (Q,) i32 rides as a
-    scalar-prefetch operand; dstart/doff/dlen are (Q, K)."""
+    scalar-prefetch operand; dstart/doff/dlen are (Q, K). With
+    ``scale_mode="run"`` the ``scales`` operand is the per-run (Q, K)
+    scalar array (bucket granularity) instead of a (Q, C) plane."""
     q_, d = queries.shape
     c_ = valid.shape[1]
     nj = c_ // bc
-    quant = scales is not None
     args = (nrun, valid, dstart, doff, dlen, queries)
-    args += (scales,) if quant else ()
+    args += _quant_args(scales, qscales, norms)
     args += (embeddings,)
     vmem, sems = _gather_scratch(bq, bc, d, embeddings.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(q_ // bq, nj),
-        in_specs=_desc_specs(bq, bc, d, dstart.shape[1], quant),
+        in_specs=_desc_specs(bq, bc, d, dstart.shape[1], scale_mode, intdom),
         out_specs=pl.BlockSpec((bq, bc), lambda i, j, n: (i, j),
                                memory_space=pltpu.VMEM),
         scratch_shapes=vmem + sems,
     )
     return pl.pallas_call(
-        functools.partial(_range_kernel, metric=metric, quant=quant, desc=True, nj=nj),
+        functools.partial(_range_kernel, metric=metric, scale_mode=scale_mode,
+                          intdom=intdom, exact=interpret,
+                          store_dtype=store_dtype, desc=True, nj=nj),
         out_shape=jax.ShapeDtypeStruct((q_, c_), jnp.float32),
         grid_spec=grid_spec,
         compiler_params=tpu_compiler_params(
@@ -516,25 +687,26 @@ def lmi_filter_range_desc_pallas(
     )(*args)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "k", "kpad", "bq", "bc", "interpret"))
+@functools.partial(jax.jit, static_argnames=_STATICS + ("k", "kpad"))
 def lmi_filter_topk_desc_pallas(
     queries, valid, nrun, dstart, doff, dlen, embeddings, scales,
-    *, metric: str, k: int, kpad: int, bq: int, bc: int, interpret: bool,
+    qscales=None, norms=None, *, metric: str, k: int, kpad: int,
+    scale_mode: str = "none", intdom: bool = False,
+    store_dtype: str = "float32", bq: int, bc: int, interpret: bool,
 ):
     """Descriptor-gather streaming top-k variant (see the range variant
     and `_desc_gather`)."""
     q_, d = queries.shape
     c_ = valid.shape[1]
     nj = c_ // bc
-    quant = scales is not None
     args = (nrun, valid, dstart, doff, dlen, queries)
-    args += (scales,) if quant else ()
+    args += _quant_args(scales, qscales, norms)
     args += (embeddings,)
     vmem, sems = _gather_scratch(bq, bc, d, embeddings.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(q_ // bq, nj),
-        in_specs=_desc_specs(bq, bc, d, dstart.shape[1], quant),
+        in_specs=_desc_specs(bq, bc, d, dstart.shape[1], scale_mode, intdom),
         out_specs=(
             pl.BlockSpec((bq, kpad), lambda i, j, n: (i, 0), memory_space=pltpu.VMEM),
             pl.BlockSpec((bq, kpad), lambda i, j, n: (i, 0), memory_space=pltpu.VMEM),
@@ -545,8 +717,9 @@ def lmi_filter_topk_desc_pallas(
         ] + sems,
     )
     return pl.pallas_call(
-        functools.partial(_topk_kernel, metric=metric, quant=quant, desc=True,
-                          nj=nj, k=k, bc=bc),
+        functools.partial(_topk_kernel, metric=metric, scale_mode=scale_mode,
+                          intdom=intdom, exact=interpret,
+                          store_dtype=store_dtype, desc=True, nj=nj, k=k, bc=bc),
         out_shape=(
             jax.ShapeDtypeStruct((q_, kpad), jnp.float32),
             jax.ShapeDtypeStruct((q_, kpad), jnp.int32),

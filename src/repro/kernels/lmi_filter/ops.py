@@ -4,7 +4,7 @@ Padding policy: queries/rows/valid are padded on the query and candidate
 axes (padded slots are invalid, so they come back as +_BIG and are
 sliced off). The embedding store is *never* padded, copied or widened —
 it is the HBM-resident database in its CandidateStore precision
-(f32/bf16/int8) and the kernel gathers rows from it in place, so the
+(f32/bf16/int8/fp8) and the kernel gathers rows from it in place, so the
 DMA bytes scale with the store dtype; the feature dim runs at its
 natural (possibly unaligned) width.
 
@@ -29,10 +29,26 @@ does; standalone callers may only have rows):
     / per-run) over real run metadata for the benchmark's measured
     DMA-issue counts.
 
+Quantized-store scale delivery mirrors the gather split. Per-ROW scales
+always ride as a `(Q, C)` f32 plane input (`scales[rows]`, masked).
+Per-BUCKET scales (`CandidateStore.scale_granularity == "bucket"`) on
+the descriptor path collapse to one scalar per run descriptor
+(``bucket_scales`` + ``offsets``): the kernel rebuilds the per-slot
+plane in VMEM from the resident descriptor block, so the plane's
+``Q*C*4`` bytes never cross HBM (`kernel._run_scale_plane`;
+`gather_dma_stats` reports both sides as measured bytes).
+
+``compute_dtype="int8"`` (int8 stores only) switches the distance
+contraction to the integer domain: the query batch is quantized here to
+symmetric int8 (per-query absmax — all jnp, zero host sync), the
+store's prebuilt integer row norms ride as a `(Q, C)` int32 plane, and
+the kernel never widens the candidate tile to f32
+(`kernel._tile_distances_int`). `_pick_bc` budgets shrink accordingly.
+
 Both forms feed the double-buffered gather: tile j + 1's copies are
 prefetched into the second VMEM slot while tile j computes, so
-`_pick_bc` budgets TWO store-dtype candidate slots plus the f32
-dequantized tile.
+`_pick_bc` budgets TWO store-dtype candidate slots plus (f32 compute
+only) the dequantized tile.
 """
 from __future__ import annotations
 
@@ -55,35 +71,58 @@ _VMEM_BUDGET = 4 * 1024 * 1024  # candidate scratch budget per tile, bytes
 
 _BQ = 8  # query rows per block (f32 sublane quantum)
 
-_STORE_DTYPES = (jnp.float32, jnp.bfloat16, jnp.int8)
+_STORE_DTYPES = (jnp.float32, jnp.bfloat16, jnp.int8, jnp.float8_e4m3fn)
+
+COMPUTE_DTYPES = ("float32", "int8")
 
 
-def _pick_bc(d: int, itemsize: int) -> int:
+def _pick_bc(d: int, itemsize: int, int_compute: bool = False) -> int:
     """Largest candidate-tile width whose VMEM working set fits: TWO
     (bq, bc, d) store-dtype gather slots (double buffering — tile j + 1
-    streams in while tile j computes) PLUS the f32 dequantized copy the
-    kernel widens the current slot into (quantized stores shrink the
-    DMA, not the compute tile)."""
+    streams in while tile j computes) PLUS, on the f32 compute path, the
+    f32 dequantized copy the kernel widens the current slot into
+    (quantized stores shrink the DMA, not the compute tile). The
+    integer-domain path never materializes that widened tile — its
+    per-element budget is the two int8 slots alone, 3x headroom at the
+    same width."""
+    per_el = 2 * itemsize + (0 if int_compute else 4)
     for bc in (512, 256, 128):
-        if _BQ * bc * d * (2 * itemsize + 4) <= _VMEM_BUDGET:
+        if _BQ * bc * d * per_el <= _VMEM_BUDGET:
             return bc
     return 128
 
 
 def _as_store_dtype(embeddings):
-    """The store in its kernel wire dtype. bf16 is bit-cast to int16 —
-    the copies move identical bytes (the bitcast is free under jit) but
-    int16 sidesteps the interpret-mode DMA emulation's per-element
-    bfloat16 conversion fallback, which made bf16 stores ~10x *slower*
-    than f32 despite half the bytes (the BENCH_query_latency.json
-    store-sweep anomaly; bounded there so it can't silently regress).
-    `kernel._dequant` bit-casts the gathered tile back before widening."""
+    """(wire array, canonical store-dtype name). Sub-f32 float stores are
+    bit-cast to a same-width integer wire dtype — bf16 -> int16, fp8
+    e4m3 -> int8: the copies move identical bytes (the bitcast is free
+    under jit) but integer copies sidestep the interpret-mode DMA
+    emulation's per-element float conversion fallback, which made bf16
+    stores ~10x *slower* than f32 despite half the bytes (the
+    BENCH_query_latency.json store-sweep anomaly; bounded there so it
+    can't silently regress). `kernel._dequant` bit-casts the gathered
+    tile back before widening — which is also why the kernel needs the
+    store dtype as a static string: an fp8 store and an int8 store are
+    indistinguishable on the wire."""
     emb = jnp.asarray(embeddings)
     if emb.dtype not in [jnp.dtype(t) for t in _STORE_DTYPES]:
         emb = emb.astype(jnp.float32)
+    name = emb.dtype.name
     if emb.dtype == jnp.bfloat16:
         emb = jax.lax.bitcast_convert_type(emb, jnp.int16)
-    return emb
+    elif emb.dtype == jnp.float8_e4m3fn:
+        emb = jax.lax.bitcast_convert_type(emb, jnp.int8)
+    return emb, name
+
+
+def _quantize_queries(q):
+    """Symmetric per-query int8 quantization of the (padded) query block:
+    -> (qi (Q, d) int8, s_q (Q, 1) f32) with q ~= s_q * qi. All jnp —
+    zero host sync; padded (all-zero) query rows get qi = 0."""
+    am = jnp.max(jnp.abs(q), axis=1, keepdims=True)
+    s = jnp.maximum(am, 1e-12) / 127.0
+    qi = jnp.clip(jnp.round(q / s), -127, 127).astype(jnp.int8)
+    return qi, s
 
 
 def _segment_metadata(rows, valid):
@@ -130,7 +169,7 @@ def _run_descriptors(runs, cap: int):
     return nrun, dstart, doff, dlen
 
 
-def _pad_inputs(queries, rows, valid, bc: int, scales):
+def _pad_inputs(queries, rows, valid, bc: int, scales, norms=None):
     q = pad_to(jnp.asarray(queries, jnp.float32), 0, _BQ)
     r = pad_to(jnp.asarray(rows, jnp.int32), 0, _BQ)
     r = pad_to(r, 1, bc)
@@ -139,7 +178,9 @@ def _pad_inputs(queries, rows, valid, bc: int, scales):
     # per-slot dequant scales ride as a (Q, C) tile input: 4 bytes/slot of
     # extra traffic vs. the d bytes/slot the int8 store saves
     sc = None if scales is None else jnp.where(v != 0, jnp.asarray(scales, jnp.float32)[r], 0.0)
-    return q, r, v, sc
+    # integer-domain compute: the store's prebuilt |row|^2 as an i32 plane
+    nm = None if norms is None else jnp.where(v != 0, jnp.asarray(norms, jnp.int32)[r], 0)
+    return q, r, v, sc, nm
 
 
 def _pad_descriptors(runs, cap: int):
@@ -150,70 +191,144 @@ def _pad_descriptors(runs, cap: int):
             pad_to(doff, 0, _BQ), pad_to(dlen, 0, _BQ))
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def _run_scales(dstart, bucket_scales, offsets):
+    """(Q, K) per-run dequant scales for bucket-granularity stores: each
+    descriptor is exactly one bucket's run, so its scale is the scale of
+    the bucket its CSR start row falls in. Zero-length (padded /
+    compacted-away) descriptors pick up an arbitrary bucket's scale;
+    the kernel's coverage mask gives them zero slots, so it never
+    matters. All jnp — zero host sync."""
+    off = jnp.asarray(offsets, jnp.int32)
+    sc = jnp.asarray(bucket_scales, jnp.float32)
+    bid = jnp.clip(jnp.searchsorted(off, dstart, side="right") - 1, 0, sc.shape[0] - 1)
+    return sc[bid]
+
+
+def _quant_plan(store_dtype: str, compute_dtype: str, scales, bucket_scales,
+                offsets, norms, runs):
+    """Resolve (scale_mode, needs_norms) and validate the operand combo.
+    Plane mode needs per-row ``scales``; run mode (descriptor path only)
+    needs ``bucket_scales`` + ``offsets``; the integer domain needs an
+    int8 store and its prebuilt ``norms``."""
+    quantized = store_dtype in ("int8", "float8_e4m3fn")
+    if compute_dtype not in COMPUTE_DTYPES:
+        raise ValueError(
+            f"unknown compute_dtype {compute_dtype!r}; expected one of {COMPUTE_DTYPES}")
+    if compute_dtype == "int8":
+        if store_dtype != "int8":
+            raise ValueError(
+                "compute_dtype='int8' needs an int8 store (integer-domain "
+                f"contraction over raw int8 rows); got a {store_dtype} store")
+        if norms is None:
+            raise ValueError(
+                "compute_dtype='int8' needs the store's prebuilt integer row "
+                "norms (CandidateStore.norms — rebuild the store with "
+                "store.quantize)")
+    if not quantized:
+        return "none", False
+    if runs is not None and bucket_scales is not None:
+        return "run", compute_dtype == "int8"
+    if scales is None:
+        raise ValueError(
+            f"a {store_dtype} store needs per-row scales (or bucket_scales + "
+            "offsets on the descriptor path)")
+    return "plane", compute_dtype == "int8"
+
+
+_OP_STATICS = ("metric", "interpret", "compute_dtype")
+
+
+@functools.partial(jax.jit, static_argnames=_OP_STATICS)
 def lmi_filter_range(queries, rows, valid, embeddings, metric: str = "euclidean",
-                     interpret: bool | None = None, scales=None, runs=None):
+                     interpret: bool | None = None, scales=None, runs=None,
+                     compute_dtype: str = "float32", norms=None,
+                     bucket_scales=None, offsets=None):
     """Fused gather + dequant + distance over the candidate lists:
     -> (Q, C) f32.
 
     queries (Q, d); rows/valid (Q, C) into embeddings (M, d) in any
-    store dtype (+ optional (M,) int8 scales). Invalid slots get +3.4e38.
+    store dtype (+ optional (M,) scales). Invalid slots get +3.4e38.
     ``runs``: optional `lmi.BucketRuns` — switches the gather to the
     per-run descriptor DMA path (one variable-length DMA chain per
     visited bucket; bit-identical output, only the copy schedule
-    changes).
+    changes). ``bucket_scales`` (L,) + ``offsets`` (L + 1,): per-bucket
+    scale granularity on the descriptor path (scales ride as one scalar
+    per run instead of a (Q, C) plane). ``compute_dtype="int8"`` with
+    ``norms`` (M,) i32: integer-domain contraction (module docstring).
     """
     if interpret is None:
         interpret = should_interpret()
     n_q, c = rows.shape
-    emb = _as_store_dtype(embeddings)
-    bc = _pick_bc(queries.shape[1], emb.dtype.itemsize)
-    qp, rp, vp, scp = _pad_inputs(queries, rows, valid, bc, scales)
+    emb, store_dtype = _as_store_dtype(embeddings)
+    scale_mode, intdom = _quant_plan(
+        store_dtype, compute_dtype, scales, bucket_scales, offsets, runs=runs,
+        norms=norms)
+    bc = _pick_bc(queries.shape[1], emb.dtype.itemsize, int_compute=intdom)
+    qp, rp, vp, scp, nmp = _pad_inputs(
+        queries, rows, valid, bc, scales if scale_mode == "plane" else None,
+        norms if intdom else None)
+    qsc = None
+    if intdom:
+        qp, qsc = _quantize_queries(qp)
+    kw = dict(metric=metric, scale_mode=scale_mode, intdom=intdom,
+              store_dtype=store_dtype, bq=_BQ, bc=bc, interpret=interpret)
     if runs is not None:
         nrun, dstart, doff, dlen = _pad_descriptors(runs, c)
+        sc_op = (scp if scale_mode == "plane"
+                 else _run_scales(dstart, bucket_scales, offsets)
+                 if scale_mode == "run" else None)
         out = lmi_filter_range_desc_pallas(
-            qp, vp, nrun, dstart, doff, dlen, emb, scp,
-            metric=metric, bq=_BQ, bc=bc, interpret=interpret,
-        )
+            qp, vp, nrun, dstart, doff, dlen, emb, sc_op, qsc, nmp, **kw)
     else:
         segr, segc = _segment_metadata(rp, vp)
         out = lmi_filter_range_pallas(
-            qp, rp, vp, segr, segc, emb, scp,
-            metric=metric, bq=_BQ, bc=bc, interpret=interpret,
-        )
+            qp, rp, vp, segr, segc, emb, scp, qsc, nmp, **kw)
     return out[:n_q, :c]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "metric", "interpret"))
+@functools.partial(jax.jit, static_argnames=_OP_STATICS + ("k",))
 def lmi_filter_topk(queries, rows, valid, embeddings, k: int, metric: str = "euclidean",
-                    interpret: bool | None = None, scales=None, runs=None):
+                    interpret: bool | None = None, scales=None, runs=None,
+                    compute_dtype: str = "float32", norms=None,
+                    bucket_scales=None, offsets=None):
     """Fused gather + dequant + distance + streaming top-k:
     -> (dist, slot) (Q, k).
 
     ``slot`` indexes the candidate axis of ``rows``; exhausted slots
     (fewer than k valid candidates) hold dist=+3.4e38, slot=-1.
     Distances are ascending per row. ``runs``: optional `lmi.BucketRuns`
-    for the per-run descriptor gather (see `lmi_filter_range`).
+    for the per-run descriptor gather; ``bucket_scales``/``offsets`` and
+    ``compute_dtype``/``norms`` as in `lmi_filter_range`.
     """
     if interpret is None:
         interpret = should_interpret()
     n_q, c = rows.shape
-    emb = _as_store_dtype(embeddings)
-    bc = _pick_bc(queries.shape[1], emb.dtype.itemsize)
-    qp, rp, vp, scp = _pad_inputs(queries, rows, valid, bc, scales)
+    emb, store_dtype = _as_store_dtype(embeddings)
+    scale_mode, intdom = _quant_plan(
+        store_dtype, compute_dtype, scales, bucket_scales, offsets, runs=runs,
+        norms=norms)
+    bc = _pick_bc(queries.shape[1], emb.dtype.itemsize, int_compute=intdom)
+    qp, rp, vp, scp, nmp = _pad_inputs(
+        queries, rows, valid, bc, scales if scale_mode == "plane" else None,
+        norms if intdom else None)
+    qsc = None
+    if intdom:
+        qp, qsc = _quantize_queries(qp)
     kpad = round_up(k, 8)
+    kw = dict(metric=metric, k=k, kpad=kpad, scale_mode=scale_mode,
+              intdom=intdom, store_dtype=store_dtype, bq=_BQ, bc=bc,
+              interpret=interpret)
     if runs is not None:
         nrun, dstart, doff, dlen = _pad_descriptors(runs, c)
+        sc_op = (scp if scale_mode == "plane"
+                 else _run_scales(dstart, bucket_scales, offsets)
+                 if scale_mode == "run" else None)
         dist, slot = lmi_filter_topk_desc_pallas(
-            qp, vp, nrun, dstart, doff, dlen, emb, scp,
-            metric=metric, k=k, kpad=kpad, bq=_BQ, bc=bc, interpret=interpret,
-        )
+            qp, vp, nrun, dstart, doff, dlen, emb, sc_op, qsc, nmp, **kw)
     else:
         segr, segc = _segment_metadata(rp, vp)
         dist, slot = lmi_filter_topk_pallas(
-            qp, rp, vp, segr, segc, emb, scp,
-            metric=metric, k=k, kpad=kpad, bq=_BQ, bc=bc, interpret=interpret,
-        )
+            qp, rp, vp, segr, segc, emb, scp, qsc, nmp, **kw)
     return dist[:n_q, :k], slot[:n_q, :k]
 
 
@@ -239,7 +354,13 @@ def gather_dma_stats(rows, valid, d: int, itemsize: int = 4, runs=None) -> dict:
 
     Returns the counts plus ``gather_bytes`` (identical for all modes —
     every discipline moves each candidate row once: C' * d * itemsize
-    per query row of the padded grid).
+    per query row of the padded grid) and the quantized stores' scale-
+    delivery bytes: ``scale_plane_bytes_row`` is the (Q', C') f32 plane
+    per-row granularity ships through the pipeline, and (with ``runs``)
+    ``scale_plane_bytes_bucket`` is the per-run f32 scalars bucket
+    granularity ships on the descriptor path instead — the per-bucket
+    win as a measured field. ``norm_plane_bytes`` is the (Q', C') i32
+    plane the integer-domain compute adds.
     """
     rows = np.asarray(rows)
     valid = np.asarray(valid, np.int64)
@@ -262,6 +383,8 @@ def gather_dma_stats(rows, valid, d: int, itemsize: int = 4, runs=None) -> dict:
         "row_dmas": qp * cp,
         "seg_dmas": seg_dmas,
         "gather_bytes": qp * cp * d * itemsize,
+        "scale_plane_bytes_row": qp * cp * 4,
+        "norm_plane_bytes": qp * cp * 4,
     }
     if runs is not None:
         starts = np.asarray(runs.starts, np.int64)
@@ -275,6 +398,11 @@ def gather_dma_stats(rows, valid, d: int, itemsize: int = 4, runs=None) -> dict:
         bits = (clen[..., None] >> np.arange(bc.bit_length())) & 1
         out["desc_dmas"] = int(bits.sum())
         out["n_runs"] = int((eff > 0).sum())
+        out["scale_plane_bytes_bucket"] = out["n_runs"] * 4
+        out["scale_bytes_reduction_bucket_vs_row"] = (
+            out["scale_plane_bytes_row"] / out["scale_plane_bytes_bucket"]
+            if out["scale_plane_bytes_bucket"] else float("inf")
+        )
         out["dma_reduction_desc_vs_seg"] = (
             seg_dmas / out["desc_dmas"] if out["desc_dmas"] else float("inf")
         )

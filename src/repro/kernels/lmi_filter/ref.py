@@ -60,3 +60,37 @@ def lmi_filter_topk_ref(queries, rows, valid, embeddings, k: int, metric: str = 
     d = lmi_filter_ref(queries, rows, valid, embeddings, metric=metric, scales=scales)
     neg, slot = jax.lax.top_k(-d, k)
     return -neg, slot.astype(jnp.int32)
+
+
+def lmi_filter_int_ref(queries, rows, valid, embeddings, scales, norms,
+                       metric: str = "euclidean"):
+    """Integer-domain oracle, mirroring `kernel._tile_distances_int` step
+    for step: the same symmetric query quantization as
+    `ops._quantize_queries`, the exact integer dot (every partial sum is
+    an integer < 2^24, so f32 MACs reproduce the int32 MXU result
+    bit-for-bit regardless of reduction order), the store's prebuilt
+    integer row norms for |c|^2, and the scales applied only in the
+    scalar epilogue. ``scales`` here is per-ROW (expand bucket
+    granularity with `store.row_scales` first); parity against the
+    kernel is tight because both sides run the identical decomposition.
+    """
+    from repro.kernels.lmi_filter.ops import _quantize_queries
+
+    qi, s_q = _quantize_queries(jnp.asarray(queries, jnp.float32))
+    rows = jnp.asarray(rows, jnp.int32)
+    cand = jnp.asarray(embeddings)[rows].astype(jnp.float32)  # (Q, C, d) int values
+    qc = jnp.sum(cand * qi.astype(jnp.float32)[:, None, :], axis=-1)  # exact
+    cn = jnp.asarray(norms, jnp.int32)[rows].astype(jnp.float32)
+    qn = jnp.sum(qi.astype(jnp.float32) ** 2, axis=-1)[:, None]
+    s_c = jnp.asarray(scales, jnp.float32)[rows]  # (Q, C)
+    if metric in ("euclidean", "sq_euclidean"):
+        d = jnp.maximum(
+            s_c * s_c * cn - 2.0 * (s_c * s_q) * qc + (s_q * s_q) * qn, 0.0)
+        if metric == "euclidean":
+            d = jnp.sqrt(d)
+    elif metric == "cosine":
+        den = jnp.sqrt(jnp.maximum(cn * qn, _EPS * _EPS))
+        d = 1.0 - qc / den
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return jnp.where(valid, d, _BIG)

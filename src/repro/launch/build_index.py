@@ -25,6 +25,7 @@ import numpy as np
 
 from repro import checkpoint as ckpt
 from repro.core import lmi
+from repro.core import store as store_lib
 from repro.core.embedding import EmbeddingConfig, embed_dataset
 from repro.data.proteins import ProteinGenConfig, generate_dataset
 
@@ -71,9 +72,19 @@ def main():
     ap.add_argument("--arities", type=str, default=None,
                     help='comma form of --arity, e.g. --arities 64,64,64 (overrides it)')
     ap.add_argument("--model", choices=("kmeans", "gmm", "kmeans+logreg"), default="kmeans")
-    ap.add_argument("--store-dtype", choices=("float32", "bfloat16", "int8"), default="float32",
+    ap.add_argument("--store-dtype", type=str, default="float32",
                     help="serving-time candidate-store precision recorded in meta.json "
-                         "(the store is re-materialized from the f32 CSR arrays at load)")
+                         f"(one of {', '.join(store_lib.STORE_DTYPES)}; the store is "
+                         "re-materialized from the f32 CSR arrays at load)")
+    ap.add_argument("--scale-granularity", type=str, default="row",
+                    help="quantization scale granularity recorded in meta.json: "
+                         "'row' (one absmax scale per CSR row) or 'bucket' (one "
+                         "per CSR bucket — ~bucket_size-fold smaller scales leaf, "
+                         "per-run scalar delivery in the filter kernel)")
+    ap.add_argument("--compute-dtype", choices=("float32", "int8"), default="float32",
+                    help="serving-time filter contraction domain recorded in "
+                         "meta.json ('int8' = the integer-domain path for int8 "
+                         "stores; other stores fall back to float32)")
     ap.add_argument("--beam", type=str, default=None,
                     help="default serving beam recorded in meta.json: a scalar "
                          "width, a comma schedule '64,16' (one width per pruned "
@@ -107,6 +118,11 @@ def main():
     ap.add_argument("--out", type=str, required=True)
     args = ap.parse_args()
     arities = parse_arities(args)
+    # fail fast on bad store knobs — before the dataset gen / model fit
+    # burns minutes (an unknown dtype used to surface as a KeyError deep
+    # in store.quantize, after the whole build)
+    store_lib.validate_dtype(args.store_dtype, flag="--store-dtype")
+    store_lib.validate_granularity(args.scale_granularity)
 
     t0 = time.time()
     ds = generate_dataset(args.seed, ProteinGenConfig(n_proteins=args.n_proteins, n_families=args.n_families))
@@ -130,12 +146,11 @@ def main():
     print(f"index structure: {index.memory_bytes() / 2**20:.1f} MB "
           f"(+data: {index.memory_bytes(include_data=True) / 2**20:.1f} MB)")
     if args.store_dtype != "float32":
-        from repro.core import store as store_lib
-
-        st = store_lib.from_lmi(index, args.store_dtype)
+        st = store_lib.from_lmi(index, args.store_dtype,
+                                scale_granularity=args.scale_granularity)
         f32_bytes = index.sorted_embeddings.size * 4
-        print(f"candidate store ({args.store_dtype}): "
-              f"{st.nbytes(include_metadata=False) / 2**20:.1f} MB "
+        print(f"candidate store ({args.store_dtype}, {args.scale_granularity} "
+              f"scales): {st.nbytes(include_metadata=False) / 2**20:.1f} MB "
               f"({f32_bytes / max(st.nbytes(include_metadata=False), 1):.1f}x smaller than f32)")
 
     beam = parse_beam(args.beam)
@@ -170,6 +185,8 @@ def main():
         beam_widths=beam_widths, temperatures=temperatures,
         calibration=calibration, node_eval=args.node_eval,
         prebuilt_planes=args.prebuilt_planes,
+        scale_granularity=args.scale_granularity,
+        compute_dtype=args.compute_dtype,
         build_seconds=t_build, embed_seconds=t_embed,
     )
     if args.prebuilt_planes:
@@ -185,7 +202,8 @@ def save_index(directory: str, index: lmi.LMI, *, n_sections: int, cutoff: float
                seed: int = 0, store_dtype: str = "float32",
                beam_width=None, beam_widths=None, temperatures=None,
                calibration=None, node_eval: str = "gather",
-               prebuilt_planes: bool = False, **extra_meta) -> None:
+               prebuilt_planes: bool = False, scale_granularity: str = "row",
+               compute_dtype: str = "float32", **extra_meta) -> None:
     """Persist a built LMI (atomic npz + meta.json, format 2 — the schema
     is specified in docs/index_format.md).
 
@@ -220,8 +238,13 @@ def save_index(directory: str, index: lmi.LMI, *, n_sections: int, cutoff: float
         node_eval=node_eval, seed=seed,
         **extra_meta,
     )
-    # optional calibration keys: only written when set, so uncalibrated
-    # builds keep the exact pre-calibration meta schema
+    # optional format-2 keys: only written when set / non-default, so
+    # older builds keep their exact meta schema (loaders default them —
+    # `serving_defaults`)
+    if scale_granularity != "row":
+        meta["scale_granularity"] = scale_granularity
+    if compute_dtype != "float32":
+        meta["compute_dtype"] = compute_dtype
     if beam_widths is not None:
         meta["beam_widths"] = list(beam_widths)
     if temperatures is not None:
@@ -262,6 +285,10 @@ def serving_defaults(meta: dict) -> dict:
         beam=beam,
         node_eval=meta.get("node_eval") or "gather",
         temperatures=tuple(float(t) for t in temps) if temps else None,
+        # quantization keys are optional format-2 additions: absent in
+        # older metas, defaulting to per-row scales / f32 compute
+        scale_granularity=meta.get("scale_granularity") or "row",
+        compute_dtype=meta.get("compute_dtype") or "float32",
     )
 
 

@@ -65,9 +65,20 @@ def main():
     ap.add_argument("--stop", type=float, default=0.01)
     ap.add_argument("--radius", type=float, default=None)
     ap.add_argument("--metric", choices=("euclidean", "cosine"), default="euclidean")
-    ap.add_argument("--store-dtype", choices=store_lib.STORE_DTYPES, default=None,
-                    help="candidate-store precision (default: the build's meta.json "
-                         "store_dtype, else float32)")
+    ap.add_argument("--store-dtype", type=str, default=None,
+                    help="candidate-store precision, one of "
+                         f"{', '.join(store_lib.STORE_DTYPES)} (default: the "
+                         "build's meta.json store_dtype, else float32)")
+    ap.add_argument("--scale-granularity", choices=store_lib.SCALE_GRANULARITIES,
+                    default=None,
+                    help="quantization scale granularity: 'row' or 'bucket' "
+                         "(default: the build's meta.json scale_granularity, "
+                         "else row)")
+    ap.add_argument("--compute-dtype", choices=("float32", "int8"), default=None,
+                    help="filter contraction domain: 'int8' runs the "
+                         "integer-domain path for int8 stores (other stores "
+                         "fall back to float32; default: the build's meta.json "
+                         "compute_dtype, else float32)")
     ap.add_argument("--beam", type=str, default=None,
                     help="beam for the leaf ranking: a scalar width or a comma "
                          "schedule '64,16' (one width per pruned level, the "
@@ -117,7 +128,13 @@ def main():
     with open(os.path.join(args.index, "meta.json")) as f:
         meta = json.load(f)
     defaults = serving_defaults(meta)
-    store_dtype = args.store_dtype or defaults["store_dtype"]
+    # fail fast with a clear error whether the dtype came from the flag
+    # or from a hand-edited meta.json
+    store_dtype = store_lib.validate_dtype(
+        args.store_dtype or defaults["store_dtype"], flag="--store-dtype")
+    scale_granularity = store_lib.validate_granularity(
+        args.scale_granularity or defaults["scale_granularity"])
+    compute_dtype = args.compute_dtype or defaults["compute_dtype"]
     beam = defaults["beam"] if args.beam is None else parse_beam(args.beam)
     temperatures = (defaults["temperatures"] if args.temperatures is None
                     else parse_temperatures(args.temperatures))
@@ -140,7 +157,8 @@ def main():
                 else ",".join(f"{t:g}" for t in temperatures))
     print(f"index: {index.n_objects} objects, {index.n_leaves} buckets "
           f"(depth {index.depth}, arities {'x'.join(map(str, index.arities))}), "
-          f"dim {index.dim}, store dtype {store_dtype}, "
+          f"dim {index.dim}, store dtype {store_dtype} "
+          f"({scale_granularity} scales, {compute_dtype} compute), "
           f"beam {beam_str}, temperatures {temp_str}, node eval {node_eval}"
           + (f", prebuilt planes {planes.nbytes() / 2**20:.1f} MB"
              if planes is not None else ""))
@@ -163,7 +181,8 @@ def main():
         from repro.compat import make_mesh
 
         mesh = make_mesh((1, args.sharded), ("data", "model"))
-        sharded = shard_index(index, args.sharded, store_dtype=store_dtype)
+        sharded = shard_index(index, args.sharded, store_dtype=store_dtype,
+                              scale_granularity=scale_granularity)
         print(f"sharded store: {sharded.store.nbytes() / 2**20:.1f} MB over {args.sharded} shards")
         # jit the wrapper: sharded_knn rebuilds its shard_map closure per
         # call, so without this every batch would re-trace and the warmup
@@ -184,16 +203,19 @@ def main():
             metric=args.metric, max_radius=args.radius, beam_width=beam,
             node_eval=node_eval, use_kernel=args.use_kernel,
             temperatures=temperatures, planes=sharded_planes, shard_ok=ok,
+            compute_dtype=compute_dtype,
         ))
         fn = lambda q: sharded_fn(q, jnp.asarray(health.mask()))
     else:
-        store = store_lib.from_lmi(index, store_dtype)
+        store = store_lib.from_lmi(index, store_dtype,
+                                   scale_granularity=scale_granularity)
         print(f"candidate store: {store.nbytes() / 2**20:.1f} MB")
         fn = lambda q: filtering.knn_query(
             index, q, k=args.k, stop_condition=args.stop, metric=args.metric,
             max_radius=args.radius, store=store, beam_width=beam,
             node_eval=node_eval, use_kernel=args.use_kernel,
             temperatures=temperatures, planes=planes,
+            compute_dtype=compute_dtype,
         )
 
     # Every batch runs at the fixed (--batch, d) shape: partial and tail

@@ -105,10 +105,39 @@ def test_serving_defaults_legacy_meta():
     keys at all) resolves to the uncalibrated defaults."""
     defaults = serving_defaults({"arities": [32, 64], "model_type": "kmeans"})
     assert defaults == dict(store_dtype="float32", beam=None,
-                            node_eval="gather", temperatures=None)
+                            node_eval="gather", temperatures=None,
+                            scale_granularity="row", compute_dtype="float32")
     # pre-PR-5 builds recorded `--beam 0` verbatim; it still means exact
     assert serving_defaults({"beam_width": 0})["beam"] is None
     assert serving_defaults({"beam_width": 8})["beam"] == 8
+
+
+def test_quantization_meta_keys_round_trip(tmp_path, key, protein_embeddings):
+    """ISSUE 8: `scale_granularity`/`compute_dtype` are optional format-2
+    keys — written only when non-default, resolved by serving_defaults,
+    and stripping them recovers the legacy per-row/f32 behavior."""
+    d = str(tmp_path / "quant")
+    idx = lmi.build(key, protein_embeddings[:400], arities=(4, 3), max_iter=6)
+    save_index(d, idx, n_sections=10, cutoff=50.0, store_dtype="int8",
+               scale_granularity="bucket", compute_dtype="int8")
+    meta = json.load(open(os.path.join(d, "meta.json")))
+    assert meta["scale_granularity"] == "bucket"
+    assert meta["compute_dtype"] == "int8"
+    defaults = serving_defaults(meta)
+    assert defaults["scale_granularity"] == "bucket"
+    assert defaults["compute_dtype"] == "int8"
+    # defaults are NOT written (older metas keep their exact schema):
+    # a row/f32 build has no quantization keys at all
+    d2 = str(tmp_path / "plain")
+    save_index(d2, idx, n_sections=10, cutoff=50.0, store_dtype="int8")
+    meta2 = json.load(open(os.path.join(d2, "meta.json")))
+    assert "scale_granularity" not in meta2 and "compute_dtype" not in meta2
+    # stripping the keys (a pre-ISSUE-8 checkpoint) resolves to legacy
+    _strip_meta_keys(d, ["scale_granularity", "compute_dtype"])
+    meta = json.load(open(os.path.join(d, "meta.json")))
+    defaults = serving_defaults(meta)
+    assert defaults["scale_granularity"] == "row"
+    assert defaults["compute_dtype"] == "float32"
 
 
 def test_parse_beam_and_temperatures():

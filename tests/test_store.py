@@ -3,12 +3,22 @@ oracle parity on bf16/int8 stores, run-length gather metadata, recall
 bounds vs the f32 store, bucket_topk on the single-device path, and the
 zero-host-sync property of quantized query plans.
 
+ISSUE 8 adds: fp8-e4m3 round trips, per-bucket scale granularity
+(equivalence with per-row on constant-scale buckets), the integer-domain
+contraction (`compute_dtype="int8"`) — parity vs the int oracle and the
+f32-compute path, the silent f32 fallback rules, and the zero-sync
+property of on-device query quantization.
+
 Kernel runs in interpret mode on CPU like every kernel in the suite.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as hst
 
 from repro.core import filtering, lmi
 from repro.core import store as store_lib
@@ -72,12 +82,95 @@ def test_store_round_trip_int8():
     # symmetric absmax: per-element error <= scale / 2 = absmax / 254
     bound = np.abs(emb).max(axis=1, keepdims=True) / 254.0 + 1e-6
     assert (np.abs(back - emb) <= bound).all()
+    # data + per-row scales + prebuilt int32 row norms (integer-domain
+    # epilogue input, resident alongside the codes)
+    assert st.nbytes(include_metadata=False) == emb.size * 1 + 300 * 4 + 300 * 4
+
+
+def test_store_round_trip_fp8():
+    emb = RNG.normal(size=(300, 45)).astype(np.float32)
+    st = _store(emb, "float8_e4m3fn")
+    assert st.data.dtype == jnp.float8_e4m3fn and st.scales.shape == (300,)
+    assert st.norms is None  # integer norms are an int8-only artifact
+    back = np.asarray(store_lib.dequantize(st))
+    # e4m3: 3 mantissa bits -> rel err <= 2^-4 for normals, plus the
+    # subnormal floor (min subnormal 2^-9) at the row scale
+    sc = np.asarray(st.scales)[:, None]
+    bound = np.maximum(np.abs(emb) * 2.0**-4, sc * 2.0**-9) + 1e-7
+    assert (np.abs(back - emb) <= bound).all()
     assert st.nbytes(include_metadata=False) == emb.size * 1 + 300 * 4
 
 
 def test_store_unknown_dtype_raises():
     with pytest.raises(ValueError):
         _store(np.zeros((8, 4), np.float32), "float16")
+
+
+def test_validate_dtype_and_granularity_errors():
+    with pytest.raises(ValueError, match="float8_e4m3fn"):
+        store_lib.validate_dtype("float16")
+    with pytest.raises(ValueError, match="--store-dtype"):
+        store_lib.validate_dtype("f8", flag="--store-dtype")
+    with pytest.raises(ValueError, match="bucket"):
+        store_lib.validate_granularity("per_tile")
+    assert store_lib.validate_dtype("int8") == "int8"
+    assert store_lib.validate_granularity("bucket") == "bucket"
+
+
+@settings(max_examples=12, deadline=None)
+@given(dtype=hst.sampled_from(["int8", "float8_e4m3fn"]),
+       seed=hst.integers(0, 2**16), rows=hst.integers(1, 64),
+       scale=hst.floats(min_value=1e-3, max_value=1e3))
+def test_quantize_round_trip_property(dtype, seed, rows, scale):
+    """Property (ISSUE 8): for any input, symmetric absmax quantization
+    keeps every element within the dtype's worst-case step of the
+    original — int8: scale/2 = absmax/254; e4m3: max(|x|/16, s*2^-9)."""
+    emb = (np.random.default_rng(seed).normal(size=(rows, 12)) * scale).astype(np.float32)
+    data, scales, norms = store_lib.quantize(emb, dtype)
+    back = np.asarray(data).astype(np.float32) * np.asarray(scales)[:, None]
+    absmax = np.abs(emb).max(axis=1, keepdims=True)
+    if dtype == "int8":
+        bound = absmax / 254.0
+        # norms are the exact integer |c|^2 the kernel epilogue consumes
+        np.testing.assert_array_equal(
+            np.asarray(norms),
+            (np.asarray(data).astype(np.int64) ** 2).sum(axis=1).astype(np.int32))
+    else:
+        sc = np.asarray(scales)[:, None]
+        bound = np.maximum(np.abs(emb) * 2.0**-4, sc * 2.0**-9)
+        assert norms is None
+    assert (np.abs(back - emb) <= bound + 1e-7 * absmax + 1e-12).all()
+
+
+@pytest.mark.parametrize("dtype", ["int8", "float8_e4m3fn"])
+def test_bucket_scales_match_row_on_constant_scale_buckets(dtype):
+    """Per-bucket scales lose nothing when every row of a bucket shares
+    one absmax: the quantized codes and the per-row scale view are
+    identical to per-row granularity."""
+    offsets = np.array([0, 40, 90, 200], np.int32)
+    emb = RNG.normal(size=(200, 16)).astype(np.float32)
+    emb /= np.abs(emb).max(axis=1, keepdims=True)  # unit absmax per row
+    for b, (s, e) in enumerate(zip(offsets[:-1], offsets[1:])):
+        emb[s:e] *= 0.5 + b  # one absmax per bucket
+    row = store_lib.make_store(emb, np.arange(200, dtype=np.int32), offsets, dtype)
+    bkt = store_lib.make_store(emb, np.arange(200, dtype=np.int32), offsets, dtype,
+                               scale_granularity="bucket")
+    assert bkt.scale_granularity == "bucket" and bkt.scales.shape == (3,)
+    np.testing.assert_array_equal(np.asarray(bkt.data), np.asarray(row.data))
+    np.testing.assert_allclose(np.asarray(store_lib.row_scales(bkt)),
+                               np.asarray(row.scales), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(store_lib.dequantize(bkt)),
+                               np.asarray(store_lib.dequantize(row)), rtol=1e-6)
+
+
+def test_row_scales_expands_bucket_granularity():
+    offsets = np.array([0, 3, 3, 10], np.int32)  # empty bucket included
+    emb = RNG.normal(size=(10, 8)).astype(np.float32)
+    st = store_lib.make_store(emb, np.arange(10, dtype=np.int32), offsets,
+                              "int8", scale_granularity="bucket")
+    got = np.asarray(store_lib.row_scales(st))
+    want = np.repeat(np.asarray(st.scales), np.diff(offsets))
+    np.testing.assert_array_equal(got, want)
 
 
 def test_dequantize_rows_matches_full_dequant():
@@ -117,6 +210,132 @@ def test_topk_parity_on_run_structured_rows(dtype):
     np.testing.assert_array_equal(np.asarray(gd) >= 1e37, ~fin)
     np.testing.assert_allclose(np.asarray(gd)[fin], np.asarray(wd)[fin], rtol=1e-4, atol=1e-4)
     np.testing.assert_array_equal(np.asarray(gi)[fin], np.asarray(wi)[fin])
+
+
+# ------------------------------------------ integer-domain contraction
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "sq_euclidean", "cosine"])
+def test_int_domain_parity_vs_oracles(metric):
+    """ISSUE 8 tentpole: the int8 x int8 contraction with the scalar
+    epilogue matches the integer oracle to float rounding (both compute
+    the same exact integer dot — <2^24, so bit-exact in f32), and the
+    f32-compute path on the same store to quantization tolerance."""
+    q, rows, valid, emb = _case(6, 256, 500, 45)
+    st = _store(emb, "int8")
+    got = lf_ops.lmi_filter_range(q, rows, valid, st.data, metric=metric,
+                                  scales=st.scales, compute_dtype="int8",
+                                  norms=st.norms)
+    want = lf_ref.lmi_filter_int_ref(q, rows, valid, st.data, st.scales,
+                                     st.norms, metric=metric)
+    g, w = np.asarray(got), np.asarray(want)
+    np.testing.assert_array_equal(g >= 1e37, w >= 1e37)
+    fin = w < 1e37
+    np.testing.assert_allclose(g[fin], w[fin], rtol=2e-5, atol=2e-5)
+    # vs the f32-compute path: same int8 codes, so the only gap is the
+    # query-side quantization (<= 1/254 relative per coordinate)
+    f32 = np.asarray(lf_ops.lmi_filter_range(q, rows, valid, st.data,
+                                             metric=metric, scales=st.scales))
+    np.testing.assert_allclose(g[fin], f32[fin], rtol=0.05, atol=0.05)
+
+
+def test_int_domain_topk_desc_bucket_scales():
+    """Top-k on the descriptor gather path with per-bucket scales
+    delivered as per-run scalars — vs the per-row int oracle. Runs are
+    built the way search emits them: each run inside one bucket."""
+    import collections
+
+    Runs = collections.namedtuple("Runs", "starts lengths")
+    offsets = np.array([0, 200, 450, 700], np.int32)
+    M, d, Q, C = 700, 24, 5, 96
+    emb = RNG.normal(size=(M, d)).astype(np.float32)
+    starts = np.zeros((Q, 3), np.int32)
+    lengths = np.zeros((Q, 3), np.int32)
+    rows = np.zeros((Q, C), np.int32)
+    valid = np.zeros((Q, C), np.int32)
+    for i in range(Q):
+        for j, b in enumerate(RNG.choice(3, size=3, replace=False)):
+            lo, hi = int(offsets[b]), int(offsets[b + 1])
+            ln = int(RNG.integers(8, 33))  # 3 runs x <=32 rows <= C
+            starts[i, j] = int(RNG.integers(lo, hi - ln + 1))
+            lengths[i, j] = ln
+        rr = np.concatenate([np.arange(s, s + n)
+                             for s, n in zip(starts[i], lengths[i])])
+        rows[i, : len(rr)] = rr
+        valid[i, : len(rr)] = 1
+    runs = Runs(jnp.asarray(starts), jnp.asarray(lengths))
+    q = jnp.asarray(RNG.normal(size=(Q, d)).astype(np.float32))
+    rows, valid = jnp.asarray(rows), jnp.asarray(valid)
+    st = store_lib.make_store(emb, np.arange(M, dtype=np.int32), offsets,
+                              "int8", scale_granularity="bucket")
+    gd, gi = lf_ops.lmi_filter_topk(q, rows, valid, st.data, 9, runs=runs,
+                                    bucket_scales=st.scales, offsets=st.offsets,
+                                    compute_dtype="int8", norms=st.norms)
+    iref = lf_ref.lmi_filter_int_ref(q, rows, valid, st.data,
+                                     store_lib.row_scales(st), st.norms)
+    want = np.sort(np.asarray(iref), axis=1)[:, :9]
+    fin = want < 1e37
+    np.testing.assert_array_equal(np.asarray(gd) >= 1e37, ~fin)
+    np.testing.assert_allclose(np.asarray(gd)[fin], want[fin],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_int_compute_fallback_rules(small_lmi, protein_embeddings):
+    """`compute_dtype="int8"` silently falls back to f32 unless the store
+    is int8 WITH prebuilt norms — answers must match f32-compute
+    exactly on non-int8 stores and on a norm-less int8 store."""
+    q = protein_embeddings[:6]
+    for st in (store_lib.from_lmi(small_lmi, "bfloat16"),
+               dataclasses.replace(store_lib.from_lmi(small_lmi, "int8"),
+                                   norms=None)):
+        assert filtering._effective_compute(st, "int8") == "float32"
+        ids_f, d_f = filtering.knn_query(small_lmi, q, k=5, stop_condition=0.1,
+                                         store=st)
+        ids_i, d_i = filtering.knn_query(small_lmi, q, k=5, stop_condition=0.1,
+                                         store=st, compute_dtype="int8")
+        np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_i))
+    st8 = store_lib.from_lmi(small_lmi, "int8")
+    assert filtering._effective_compute(st8, "int8") == "int8"
+
+
+def test_int_compute_requires_norms_at_ops_level():
+    q, rows, valid, emb = _case(2, 64, 100, 8)
+    st = _store(emb, "int8")
+    with pytest.raises(ValueError, match="norms"):
+        lf_ops.lmi_filter_range(q, rows, valid, st.data, scales=st.scales,
+                                compute_dtype="int8")
+    with pytest.raises(ValueError, match="int8 store"):
+        lf_ops.lmi_filter_range(q, rows, valid, jnp.asarray(emb),
+                                compute_dtype="int8")
+    with pytest.raises(ValueError, match="compute_dtype"):
+        lf_ops.lmi_filter_range(q, rows, valid, st.data, scales=st.scales,
+                                compute_dtype="int4")
+
+
+def test_int_domain_knn_recall(small_lmi, protein_embeddings):
+    """End-to-end integer-domain kNN holds the quantized-store recall
+    bound (the 20k-scale 0.95 assert lives in benchmarks)."""
+    q = protein_embeddings[:16]
+    ids_ref, _ = filtering.knn_query(small_lmi, q, k=30, stop_condition=0.1)
+    st = store_lib.from_lmi(small_lmi, "int8")
+    ids_q, _ = filtering.knn_query(small_lmi, q, k=30, stop_condition=0.1,
+                                   store=st, compute_dtype="int8")
+    ref, got = np.asarray(ids_ref), np.asarray(ids_q)
+    overlap = np.mean([
+        len((set(ref[i]) - {-1}) & (set(got[i]) - {-1})) / max((ref[i] >= 0).sum(), 1)
+        for i in range(ref.shape[0])
+    ])
+    assert overlap >= 0.9, f"int-domain recall@30 {overlap:.3f}"
+
+
+def test_int_domain_query_zero_host_sync(small_lmi, protein_embeddings):
+    """ISSUE 8 satellite: query quantization (absmax, round, clip) stays
+    on device — no device->host sync after warmup."""
+    q = jax.device_put(jnp.asarray(protein_embeddings[:8], jnp.float32))
+    st = store_lib.from_lmi(small_lmi, "int8")
+    filtering.knn_query(small_lmi, q, k=5, store=st, compute_dtype="int8")
+    with jax.transfer_guard_device_to_host("disallow"):
+        filtering.knn_query(small_lmi, q, k=5, store=st, compute_dtype="int8")
 
 
 def test_segment_metadata_marks_runs():
